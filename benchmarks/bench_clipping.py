@@ -1,0 +1,63 @@
+"""Per-example clipping cost (paper §6): two-pass ghost clip vs plain
+grads vs naive per-example clip, on a small instrumented transformer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api, naive, taps
+from repro.core.taps import PexSpec
+from repro.models import registry
+from repro.nn.param import unbox
+from repro.configs.common import ShapeSpec
+
+from benchmarks.common import row, time_fn
+
+
+def run(arch="llama3.2-1b", b=8, s=64):
+    aspec = registry.get(arch)
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    batch = registry.make_train_batch(aspec, cfg, ShapeSpec("t", "train", s, b))
+    pex = PexSpec(enabled=True, method="gram")
+    loss_on = registry.make_loss_fn(aspec, cfg, pex)
+    loss_off = registry.make_loss_fn(aspec, cfg, taps.DISABLED)
+
+    @jax.jit
+    def grads_only(p):
+        def f(p):
+            lv, _, _ = loss_off(p, taps.init_acc(b, taps.DISABLED), batch)
+            return jnp.sum(lv)
+        return jax.grad(f)(p)
+
+    @jax.jit
+    def twopass_clip(p):
+        return api.clipped_value_and_grads(loss_on, p, batch, pex, b, 1.0).grads
+
+    @jax.jit
+    def naive_clip(p):
+        def single(p, ex):
+            b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+            lv, _, _ = loss_off(p, taps.init_acc(1, taps.DISABLED), b1)
+            return lv[0]
+        pg = naive.per_example_grads(single, p, batch)
+        sq = naive.per_example_grad_pytree_norms(pg)
+        c = jnp.minimum(1.0, 1.0 / (jnp.sqrt(sq) + 1e-6))
+        return jax.tree_util.tree_map(
+            lambda g: jnp.einsum("b,b...->...", c, g), pg)
+
+    t_g = time_fn(grads_only, params)
+    t_2 = time_fn(twopass_clip, params)
+    t_n = time_fn(naive_clip, params)
+    tag = f"{arch},b={b},s={s}"
+    row(f"clip.grads_only[{tag}]", t_g, "baseline")
+    row(f"clip.twopass[{tag}]", t_2, f"vs_grads={t_2 / t_g:.2f}x")
+    row(f"clip.naive[{tag}]", t_n, f"slower_than_twopass={t_n / t_2:.1f}x")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

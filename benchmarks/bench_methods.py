@@ -1,0 +1,44 @@
+"""Norm-estimator cost sweep: factorized / gram / direct / pallas-gram
+across sequence lengths — validates the adaptive policy's cost model
+(gram wins when 2s²(pi+po) < 2s·pi·po, i.e. s < pi·po/(pi+po))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import norms as N
+from repro.core.norms import pick_method
+from repro.kernels import ops
+
+from benchmarks.common import row, time_fn
+
+
+def run(b=8, s=128, pi=512, po=512):
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(size=(b, s, pi)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(b, s, po)), jnp.float32)
+
+    fns = {
+        "factorized": jax.jit(N.stat_factorized),
+        "gram": jax.jit(N.stat_gram),
+        "direct": jax.jit(N.stat_direct),
+        "gram_pallas": lambda h, z: ops.gram_norm(h, z),
+    }
+    tag = f"b={b},s={s},p={pi}x{po}"
+    picked = pick_method(s, pi, po)
+    base = None
+    for name, fn in fns.items():
+        t = time_fn(fn, h, z)
+        if name == "gram":
+            base = t
+        note = f"cost_model_pick={picked}" if name == picked else ""
+        row(f"methods.{name}[{tag}]", t, note)
+
+
+def main():
+    run(b=8, s=64, pi=512, po=512)     # gram regime (s << p)
+    run(b=8, s=512, pi=256, po=256)    # crossover region
+    run(b=4, s=1024, pi=256, po=256)   # direct regime (s >> p·p/(p+p))
+
+
+if __name__ == "__main__":
+    main()

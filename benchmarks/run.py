@@ -1,0 +1,23 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  paper5.*     — the paper's §5 cost comparison (its only table)
+  methods.*    — norm-estimator sweep validating the adaptive cost model
+  clip.*       — §6 clipping: two-pass ghost vs naive
+  importance.* — §1 application: importance sampling vs uniform
+"""
+from benchmarks import (bench_clipping, bench_importance, bench_methods,
+                        bench_paper_table)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_paper_table.main()
+    bench_methods.main()
+    bench_clipping.main()
+    bench_importance.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Per-example gradient clipping (paper §6) as DP-SGD: clip every
+example's gradient to C, add Gaussian noise σ·C, train. The clipping
+costs one norms pass + one weighted backward — never materializing a
+single per-example gradient.
+
+    PYTHONPATH=src python examples/dp_sgd_clipping.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+from repro.core.taps import PexSpec
+from repro.data.pipeline import DataConfig
+from repro.models import registry
+from repro.nn.param import unbox
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    aspec = registry.get("llama3.2-1b")
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    pex = PexSpec(enabled=True, method="auto")
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+
+    t = Trainer(loss_fn, params, pex,
+                adamw.AdamWConfig(lr=1e-3),
+                TrainConfig(mode="clip", clip_norm=0.5, noise_std=0.1,
+                            steps=50, log_every=10),
+                DataConfig(vocab=cfg.vocab, seq=64, global_batch=16))
+    ms = t.train()
+    print(f"\nfinal loss {ms[-1]['loss']:.2f}; "
+          f"max per-example norm seen {max(m['norm_max'] for m in ms):.2f} "
+          f"(every example's contribution clipped to 0.5)")
+
+    # show the §6 semantics directly: post-clip per-example influence
+    batch = t.data.batch_at(0)
+    res = api.clipped_value_and_grads(loss_fn, t.params, batch, pex, 16, 0.5)
+    c = api.clip_coefficients(res.sq_norms, 0.5)
+    print("clip coefficients c_j:",
+          np.array2string(np.asarray(c), precision=3))
+
+
+if __name__ == "__main__":
+    main()

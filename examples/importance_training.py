@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-param llama-family model with
+importance-sampled optimization (Zhao & Zhang 2014 — the paper's §1
+motivation) for a few hundred steps, with checkpointing, vs a uniform
+baseline at the same number of optimizer steps.
+
+    PYTHONPATH=src python examples/importance_training.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.taps import PexSpec
+from repro.data.pipeline import DataConfig
+from repro.models import registry
+from repro.models.transformer import LMConfig
+from repro.nn.attention import AttnCfg
+from repro.nn.mlp import MlpCfg
+from repro.nn.param import count_params, unbox
+from repro.optim import adamw
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def model_100m():
+    """~100M params: 8L, d=512, llama-style."""
+    return LMConfig(
+        name="llama-100m", n_layers=8, d_model=512, vocab=32768,
+        attn=AttnCfg(d_model=512, n_heads=8, n_kv=4, head_dim=64,
+                     head_multiple=1),
+        mlp=MlpCfg(d_model=512, d_ff=2048), dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_importance_ckpt")
+    args = ap.parse_args()
+
+    aspec = registry.get("llama3.2-1b")          # family entry points
+    cfg = model_100m()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    print(f"params: {count_params(params) / 1e6:.1f}M")
+
+    pex = PexSpec(enabled=True, method="auto")
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    dcfg = DataConfig(vocab=cfg.vocab, seq=args.seq,
+                      global_batch=args.batch, seed=11)
+    ocfg = adamw.AdamWConfig(
+        lr=1e-3, schedule=linear_warmup_cosine(20, args.steps))
+
+    results = {}
+    for mode in ("importance", "norms"):
+        t = Trainer(loss_fn, params, pex, ocfg,
+                    TrainConfig(mode=mode, steps=args.steps, log_every=25,
+                                candidate_factor=4,
+                                ckpt_dir=f"{args.ckpt}_{mode}",
+                                ckpt_every=100),
+                    dcfg)
+        print(f"\n=== mode={mode} "
+              f"({'pool=4x, sample ∝ ‖∇L_j‖' if mode == 'importance' else 'uniform'}) ===")
+        ms = t.train()
+        # the importance-weighted loss is an unbiased estimator of the
+        # candidate-POOL sum, so both modes normalize by pool tokens
+        tok = args.batch * args.seq
+        final = np.mean([m["loss"] for m in ms[-10:]]) / tok
+        results[mode] = final
+        print(f"final loss/token: {final:.4f}")
+
+    print(f"\nimportance={results['importance']:.4f} "
+          f"uniform={results['norms']:.4f} "
+          f"(importance uses 4x-smaller gradient batches picked by norm)")
+
+
+if __name__ == "__main__":
+    main()

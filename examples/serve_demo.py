@@ -1,0 +1,38 @@
+"""Batched serving demo: prefill + step-locked decode with slot
+recycling, on a reduced qwen2 config (GQA + QKV bias + KV cache).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.common import ShapeSpec
+from repro.models import registry
+from repro.nn.param import unbox
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    arch = "qwen2-7b"
+    aspec = registry.get(arch)
+    cfg = registry.serving_config(aspec, aspec.smoke(),
+                                  ShapeSpec("demo", "decode", 64, 4))
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(7), cfg))
+    eng = Engine(arch, cfg, params, batch_slots=4, temperature=0.8)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=list(rng.integers(0, cfg.vocab, size=n)),
+                    max_new=8) for n in (3, 7, 5, 4, 6, 2)]
+    done = eng.generate(reqs)
+    for i, r in enumerate(done):
+        print(f"req{i}: prompt={r.prompt} → out={r.out}")
+    assert all(len(r.out) == r.max_new for r in done)
+    print(f"\nserved {len(done)} requests in batches of 4 "
+          f"(prefill + incremental decode, shared KV cache buffers)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — Efficient Per-Example Gradient Computations (Goodfellow 2015)
+as a production-grade multi-pod JAX framework.
+
+The paper's contribution lives in ``repro.core`` (cotangent-accumulator
+taps + the estimator family); ``repro.kernels`` holds the Pallas TPU
+kernels; everything else is the substrate that makes it deployable:
+models (10 architectures), distribution, data, optimizers, training,
+serving, checkpointing, fault tolerance, and the multi-pod dry-run /
+roofline tooling under ``repro.launch`` / ``repro.roofline``.
+"""

@@ -1,0 +1,105 @@
+"""Shared config machinery: assigned input shapes, arch registry entry,
+sharding-rule builders, analytic MODEL_FLOPS."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    """Registry entry binding a config family to model entry points."""
+    arch_id: str
+    family: str                      # transformer | zamba2 | rwkv6 | seamless
+    full: Callable[[], object]       # exact assigned config
+    smoke: Callable[[], object]      # reduced config for CPU smoke tests
+    probes: Callable[[], List[object]]   # unrolled variants for roofline
+    combine: Callable[[List[dict]], dict]  # probe metrics → full-model metrics
+    skip_shapes: Sequence[str] = ()      # e.g. long_500k for full-attention
+    skip_reason: str = ""
+    train_microbatches: int = 1          # gradient accumulation at train_4k
+    n_params: Optional[int] = None       # analytic total params
+    n_active: Optional[int] = None       # analytic active params (MoE)
+
+
+def lin2(full_n: int, small_n: int = 1, big_n: int = 2):
+    """metric(L) = a + b·L from two probes → extrapolate to full_n.
+    Clamped to ≥ max(probe values): extrapolation noise (near-equal
+    probes dominated by constant terms) must not go negative."""
+    def combine(ms: List[dict]) -> dict:
+        out = {}
+        for k in ms[0]:
+            b = (ms[1][k] - ms[0][k]) / (big_n - small_n)
+            a = ms[0][k] - b * small_n
+            out[k] = max(a + b * full_n, ms[0][k], ms[1][k], 0.0)
+        return out
+    return combine
+
+
+def dense_lm_params(n_layers, d_model, n_heads, n_kv, head_dim, d_ff,
+                    vocab, gated=True, qkv_bias=False):
+    """Analytic parameter count for the GQA-transformer family."""
+    attn = d_model * (n_heads + 2 * n_kv) * head_dim \
+        + n_heads * head_dim * d_model
+    if qkv_bias:
+        attn += (n_heads + 2 * n_kv) * head_dim
+    mlp = d_model * d_ff * (3 if gated else 2)
+    norms = 2 * d_model
+    per_layer = attn + mlp + norms
+    return n_layers * per_layer + 2 * vocab * d_model + d_model
+
+
+def train_model_flops(n_params_active: int, shape: ShapeSpec) -> float:
+    """6·N·D with D = tokens per step."""
+    return 6.0 * n_params_active * shape.seq * shape.batch
+
+
+def serve_model_flops(n_params_active: int, shape: ShapeSpec) -> float:
+    """2·N per generated token (decode: one token per example)."""
+    tokens = shape.batch * (shape.seq if shape.kind == "prefill" else 1)
+    return 2.0 * n_params_active * tokens
+
+
+def base_rules(multi_pod: bool, *, kv_shardable: bool, batch_shard: bool = True,
+               seq_to_data: bool = False) -> dict:
+    """Logical→mesh axis rules shared by the arch configs."""
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": dp if batch_shard else None,
+        "embed": dp,                 # FSDP: params' d_model dim over data
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model" if kv_shardable else None,
+        "vocab": "model",
+        "experts": "model",
+        "capacity": None,
+        "moe_groups": dp,
+        "expert_ff": None,
+        "qlora": None,
+        "kvlora": None,
+        "embed2": None,
+        "heads_act": "model",
+        "kv_heads_act": "model" if kv_shardable else None,
+        "mlp_act": "model",
+        "vocab_act": "model",
+        "embed_act": None,
+        "seq_kv": ("data",) if seq_to_data else None,
+    }

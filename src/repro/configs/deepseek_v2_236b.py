@@ -1,0 +1,57 @@
+"""deepseek-v2-236b [moe]: 60L d_model=5120 128H MLA (kv_lora=512,
+q_lora=1536, nope=128, rope=64, v=128) vocab=102400; MoE: 2 shared +
+160 routed experts, top-6, d_ff(expert)=1536; first layer dense
+(d_ff=12288). [arXiv:2405.04434]
+
+Decode uses the absorbed latent form: 576 floats/token of cache."""
+import dataclasses
+
+from repro.configs.common import ArchSpec, lin2
+from repro.models.transformer import LMConfig
+from repro.nn.mla import MlaCfg
+from repro.nn.mlp import MlpCfg
+from repro.nn.moe import MoeCfg
+
+
+def full(dtype="bfloat16") -> LMConfig:
+    return LMConfig(
+        name="deepseek-v2-236b", n_layers=60, d_model=5120, vocab=102400,
+        mla=MlaCfg(d_model=5120, n_heads=128, q_lora=1536, kv_lora=512,
+                   qk_nope=128, qk_rope=64, v_dim=128),
+        moe=MoeCfg(d_model=5120, d_ff=1536, n_experts=160, top_k=6,
+                   n_shared=2, routed_scale=16.0,
+                   dispatch_groups=16),  # gather-based group-local dispatch
+                                         # (36x coll-bytes win, EXPERIMENTS §Perf)
+        n_dense_prefix=1,
+        dense_prefix_mlp=MlpCfg(d_model=5120, d_ff=12288, act="silu"),
+        dtype=dtype)
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="deepseek-v2-236b-smoke", n_layers=3, d_model=64, vocab=128,
+        mla=MlaCfg(d_model=64, n_heads=4, q_lora=32, kv_lora=16,
+                   qk_nope=16, qk_rope=8, v_dim=16),
+        moe=MoeCfg(d_model=64, d_ff=32, n_experts=8, top_k=2, n_shared=1,
+                   routed_scale=1.0),
+        n_dense_prefix=1,
+        dense_prefix_mlp=MlpCfg(d_model=64, d_ff=128, act="silu"),
+        dtype="float32")
+
+
+def probes():
+    # L=2: prefix + 1 MoE layer; L=3: prefix + 2 → slope = one MoE layer
+    return [dataclasses.replace(full(), n_layers=n, stack_mode="unroll")
+            for n in (2, 3)]
+
+
+SPEC = ArchSpec(
+    arch_id="deepseek-v2-236b", family="transformer",
+    full=full, smoke=smoke, probes=probes,
+    combine=lin2(60, small_n=2, big_n=3),
+    train_microbatches=2,   # 236B needs activation halving to fit 16 GB
+
+    skip_shapes=("long_500k",),
+    skip_reason="pure full-attention (MLA is still quadratic prefill; "
+                "524k decode KV fits but attention scan cost dominates)",
+)

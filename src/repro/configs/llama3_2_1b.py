@@ -1,0 +1,43 @@
+"""llama3.2-1b [dense]: 16L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=128256. [hf:meta-llama/Llama-3.2-1B]
+
+Note: HF ties embed/lm_head; we keep them untied (tied weights couple
+per-example Gram terms across the two uses — DESIGN.md §5)."""
+import dataclasses
+
+from repro.configs.common import ArchSpec, lin2
+from repro.models.transformer import LMConfig
+from repro.nn.attention import AttnCfg
+from repro.nn.mlp import MlpCfg
+
+
+def full(dtype="bfloat16") -> LMConfig:
+    return LMConfig(
+        name="llama3.2-1b", n_layers=16, d_model=2048, vocab=128256,
+        attn=AttnCfg(d_model=2048, n_heads=32, n_kv=8, head_dim=64,
+                     rope_theta=500000.0),
+        mlp=MlpCfg(d_model=2048, d_ff=8192, act="silu"),
+        dtype=dtype)
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="llama3.2-1b-smoke", n_layers=2, d_model=64, vocab=128,
+        attn=AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                     head_multiple=1),
+        mlp=MlpCfg(d_model=64, d_ff=128, act="silu"),
+        dtype="float32")
+
+
+def probes():
+    return [dataclasses.replace(full(), n_layers=n, stack_mode="unroll")
+            for n in (1, 2)]
+
+
+SPEC = ArchSpec(
+    arch_id="llama3.2-1b", family="transformer",
+    full=full, smoke=smoke, probes=probes, combine=lin2(16),
+    skip_shapes=("long_500k",),
+    skip_reason="pure full-attention: quadratic attention / O(s) KV cache "
+                "per layer at 524k exceeds the sane-HBM envelope",
+)

@@ -1,0 +1,40 @@
+"""minitron-4b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=9216
+vocab=256000 — pruned nemotron: squared-ReLU MLP, no gate.
+[arXiv:2407.14679]  24 Q heads pad → 32 for TP-16."""
+import dataclasses
+
+from repro.configs.common import ArchSpec, lin2
+from repro.models.transformer import LMConfig
+from repro.nn.attention import AttnCfg
+from repro.nn.mlp import MlpCfg
+
+
+def full(dtype="bfloat16") -> LMConfig:
+    return LMConfig(
+        name="minitron-4b", n_layers=32, d_model=3072, vocab=256000,
+        attn=AttnCfg(d_model=3072, n_heads=24, n_kv=8, head_dim=128,
+                     rope_theta=10000.0),
+        mlp=MlpCfg(d_model=3072, d_ff=9216, act="relu2", gated=False),
+        dtype=dtype)
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="minitron-4b-smoke", n_layers=2, d_model=64, vocab=128,
+        attn=AttnCfg(d_model=64, n_heads=3, n_kv=1, head_dim=16,
+                     head_multiple=2),  # exercises head padding (3→4)
+        mlp=MlpCfg(d_model=64, d_ff=128, act="relu2", gated=False),
+        dtype="float32")
+
+
+def probes():
+    return [dataclasses.replace(full(), n_layers=n, stack_mode="unroll")
+            for n in (1, 2)]
+
+
+SPEC = ArchSpec(
+    arch_id="minitron-4b", family="transformer",
+    full=full, smoke=smoke, probes=probes, combine=lin2(32),
+    skip_shapes=("long_500k",),
+    skip_reason="pure full-attention (see llama3.2-1b)",
+)

@@ -1,0 +1,42 @@
+"""qwen2-7b [dense]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 — GQA, QKV bias. [arXiv:2407.10671]
+
+28 Q heads don't divide the model axis (16): padded to 32 (zero-init
+pad rows ⇒ exact); kv=4 replicated across TP."""
+import dataclasses
+
+from repro.configs.common import ArchSpec, lin2
+from repro.models.transformer import LMConfig
+from repro.nn.attention import AttnCfg
+from repro.nn.mlp import MlpCfg
+
+
+def full(dtype="bfloat16") -> LMConfig:
+    return LMConfig(
+        name="qwen2-7b", n_layers=28, d_model=3584, vocab=152064,
+        attn=AttnCfg(d_model=3584, n_heads=28, n_kv=4, head_dim=128,
+                     bias=True, rope_theta=1000000.0),
+        mlp=MlpCfg(d_model=3584, d_ff=18944, act="silu"),
+        dtype=dtype)
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="qwen2-7b-smoke", n_layers=2, d_model=64, vocab=128,
+        attn=AttnCfg(d_model=64, n_heads=7, n_kv=1, head_dim=8, bias=True,
+                     head_multiple=4),  # exercises head padding (7→8)
+        mlp=MlpCfg(d_model=64, d_ff=160, act="silu"),
+        dtype="float32")
+
+
+def probes():
+    return [dataclasses.replace(full(), n_layers=n, stack_mode="unroll")
+            for n in (1, 2)]
+
+
+SPEC = ArchSpec(
+    arch_id="qwen2-7b", family="transformer",
+    full=full, smoke=smoke, probes=probes, combine=lin2(28),
+    skip_shapes=("long_500k",),
+    skip_reason="pure full-attention (see llama3.2-1b)",
+)

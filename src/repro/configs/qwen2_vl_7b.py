@@ -1,0 +1,44 @@
+"""qwen2-vl-7b [vlm]: 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 — M-RoPE, dynamic resolution. [arXiv:2409.12191]
+
+Backbone only per the assignment: the vision frontend is a stub —
+``input_specs`` supplies pre-merged visual embeddings, a visual-token
+mask, and (3, B, S) M-RoPE position streams."""
+import dataclasses
+
+from repro.configs.common import ArchSpec, lin2
+from repro.models.transformer import LMConfig
+from repro.nn.attention import AttnCfg
+from repro.nn.mlp import MlpCfg
+
+
+def full(dtype="bfloat16") -> LMConfig:
+    return LMConfig(
+        name="qwen2-vl-7b", n_layers=28, d_model=3584, vocab=152064,
+        attn=AttnCfg(d_model=3584, n_heads=28, n_kv=4, head_dim=128,
+                     bias=True, rope_theta=1000000.0,
+                     mrope_sections=(16, 24, 24)),
+        mlp=MlpCfg(d_model=3584, d_ff=18944, act="silu"),
+        vl_inputs=True, dtype=dtype)
+
+
+def smoke() -> LMConfig:
+    return LMConfig(
+        name="qwen2-vl-7b-smoke", n_layers=2, d_model=64, vocab=128,
+        attn=AttnCfg(d_model=64, n_heads=4, n_kv=2, head_dim=16, bias=True,
+                     head_multiple=1, mrope_sections=(2, 3, 3)),
+        mlp=MlpCfg(d_model=64, d_ff=128, act="silu"),
+        vl_inputs=True, dtype="float32")
+
+
+def probes():
+    return [dataclasses.replace(full(), n_layers=n, stack_mode="unroll")
+            for n in (1, 2)]
+
+
+SPEC = ArchSpec(
+    arch_id="qwen2-vl-7b", family="transformer",
+    full=full, smoke=smoke, probes=probes, combine=lin2(28),
+    skip_shapes=("long_500k",),
+    skip_reason="pure full-attention (see llama3.2-1b)",
+)

@@ -1,0 +1,30 @@
+"""rwkv6-3b [ssm]: 32L d_model=2560 (attention-free) d_ff=8960
+vocab=65536 — Finch, data-dependent decay. [arXiv:2404.05892]
+
+Runs long_500k: O(1) recurrent state, decode cost is context-length
+independent."""
+import dataclasses
+
+from repro.configs.common import ArchSpec, lin2
+from repro.models.rwkv6 import Rwkv6Config
+
+
+def full(dtype="bfloat16") -> Rwkv6Config:
+    return Rwkv6Config(name="rwkv6-3b", n_layers=32, d_model=2560,
+                       vocab=65536, d_ff=8960, dtype=dtype)
+
+
+def smoke() -> Rwkv6Config:
+    return Rwkv6Config(name="rwkv6-3b-smoke", n_layers=2, d_model=64,
+                       vocab=128, d_ff=128, dtype="float32")
+
+
+def probes():
+    return [dataclasses.replace(full(), n_layers=n, stack_mode="unroll")
+            for n in (1, 2)]
+
+
+SPEC = ArchSpec(
+    arch_id="rwkv6-3b", family="rwkv6",
+    full=full, smoke=smoke, probes=probes, combine=lin2(32),
+)

@@ -1,0 +1,46 @@
+"""seamless-m4t-medium [audio]: 12L(enc)+12L(dec) d_model=1024 16H
+d_ff=4096 vocab=256206 — enc-dec; audio frontend stubbed (precomputed
+frame embeddings per the assignment). [arXiv:2308.11596]
+
+vocab 256206 pads → 256208 (÷16) for TP."""
+import dataclasses
+
+from repro.configs.common import ArchSpec
+from repro.models.seamless import SeamlessConfig
+
+
+def full(dtype="bfloat16") -> SeamlessConfig:
+    return SeamlessConfig(name="seamless-m4t-medium", n_enc=12, n_dec=12,
+                          d_model=1024, n_heads=16, kv_heads=16,
+                          d_ff=4096, vocab=256206, dtype=dtype)
+
+
+def smoke() -> SeamlessConfig:
+    return SeamlessConfig(name="seamless-m4t-medium-smoke", n_enc=2, n_dec=2,
+                          d_model=64, n_heads=4, kv_heads=4, d_ff=128,
+                          vocab=131, dtype="float32")
+
+
+def probes():
+    reps = [(1, 1), (2, 1), (1, 2)]
+    return [dataclasses.replace(full(), n_enc=e, n_dec=d, stack_mode="unroll")
+            for e, d in reps]
+
+
+def combine(ms):
+    out = {}
+    for k in ms[0]:
+        a, b, c = ms[0][k], ms[1][k], ms[2][k]
+        enc, dec = b - a, c - a
+        c0 = a - enc - dec
+        out[k] = max(*(m[k] for m in ms), 0.0, c0 + 12.0 * enc + 12.0 * dec)
+    return out
+
+
+SPEC = ArchSpec(
+    arch_id="seamless-m4t-medium", family="seamless",
+    full=full, smoke=smoke, probes=probes, combine=combine,
+    skip_shapes=("long_500k",),
+    skip_reason="full-attention enc-dec; 524k target decode is out of "
+                "family scope (speech segments are short)",
+)

@@ -1,0 +1,49 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 Mamba2 (ssm_state=64) + one
+shared attention block (32H, d_ff=14336) applied every 6 layers on
+concat(h, h⁰), vocab=32000. [arXiv:2411.15242]
+
+Runs long_500k: Mamba state is O(1); only the 13 shared-block KV caches
+grow with context. Shared-block params are outside the pex norm scope
+(weight reuse breaks the per-use rank factorization — DESIGN.md §5)."""
+import dataclasses
+
+from repro.configs.common import ArchSpec
+from repro.models.zamba2 import Zamba2Config
+from repro.nn.ssm import SsmCfg
+
+
+def full(dtype="bfloat16") -> Zamba2Config:
+    return Zamba2Config(name="zamba2-7b", n_layers=81, d_model=3584,
+                        vocab=32000, d_ff=14336, n_heads=32, kv_heads=32,
+                        ssm=SsmCfg(d_model=3584, d_state=64),
+                        share_every=6, dtype=dtype)
+
+
+def smoke() -> Zamba2Config:
+    return Zamba2Config(name="zamba2-7b-smoke", n_layers=5, d_model=64,
+                        vocab=128, d_ff=128, n_heads=4, kv_heads=4,
+                        ssm=SsmCfg(d_model=64, d_state=8, head_dim=16),
+                        share_every=2, dtype="float32")
+
+
+def probes():
+    # A: 1 group (6 mamba + 1 shared); B: 2 groups; C: 1 group + 3 tail
+    return [dataclasses.replace(full(), n_layers=n, stack_mode="unroll")
+            for n in (6, 12, 9)]
+
+
+def combine(ms):
+    out = {}
+    for k in ms[0]:
+        a, b, c = ms[0][k], ms[1][k], ms[2][k]
+        mamba = (c - a) / 3.0
+        shared = (b - a) - 6.0 * mamba
+        c0 = a - 6.0 * mamba - shared
+        out[k] = max(*(m[k] for m in ms), 0.0, c0 + 13.0 * (6.0 * mamba + shared) + 3.0 * mamba)
+    return out
+
+
+SPEC = ArchSpec(
+    arch_id="zamba2-7b", family="zamba2",
+    full=full, smoke=smoke, probes=probes, combine=combine,
+)

@@ -1,0 +1,101 @@
+"""Public transforms for per-example gradient work.
+
+Canonical instrumented-loss signature used across the framework:
+
+    loss_fn(params, acc, batch) -> (loss_vec, acc_out, aux)
+
+where ``loss_vec`` is the (B,) vector of per-example losses L^(j)
+(paper §2: C = Σ_j L^(j)), ``acc_out`` is the threaded accumulator
+(must be returned so the tap chain stays live), and ``aux`` is any
+extra pytree (metrics).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import PexSpec, init_acc
+
+
+class PexResult(NamedTuple):
+    loss: jax.Array            # scalar total C
+    loss_vec: jax.Array        # (B,) per-example losses
+    aux: object
+    sq_norms: jax.Array        # (B, G) per-example, per-group ||grad||²
+    grads: object = None       # param pytree (when requested)
+
+
+def _total(loss_vec):
+    return jnp.sum(loss_vec)
+
+
+def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
+                    batch_size: int) -> PexResult:
+    """Norms-only pass: forward + activation backprop + O(mnp).
+
+    The ``dW`` chains are never built (grad is taken w.r.t. the
+    accumulator only), matching the cheap pass of paper §5.
+    """
+    acc0 = init_acc(batch_size, spec)
+
+    def f(acc):
+        loss_vec, acc_out, aux = loss_fn(params, acc, batch)
+        return _total(loss_vec), (loss_vec, acc_out, aux)
+
+    (loss, (loss_vec, _, aux)), sq = jax.value_and_grad(f, has_aux=True)(acc0)
+    return PexResult(loss, loss_vec, aux, sq)
+
+
+def value_grads_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
+                          batch_size: int) -> PexResult:
+    """The paper's headline: gradients AND all per-example norms in one
+    backward pass, for O(mnp) extra work."""
+    acc0 = init_acc(batch_size, spec)
+
+    def f(p, acc):
+        loss_vec, acc_out, aux = loss_fn(p, acc, batch)
+        return _total(loss_vec), (loss_vec, acc_out, aux)
+
+    (loss, (loss_vec, _, aux)), (grads, sq) = jax.value_and_grad(
+        f, argnums=(0, 1), has_aux=True)(params, acc0)
+    return PexResult(loss, loss_vec, aux, sq, grads)
+
+
+def clip_coefficients(sq_norms: jax.Array, clip_norm: float,
+                      eps: float = 1e-6) -> jax.Array:
+    """c_j = min(1, C / ||g_j||). sq_norms: (B,) or (B,G) (summed)."""
+    if sq_norms.ndim == 2:
+        sq_norms = jnp.sum(sq_norms, axis=-1)
+    return jnp.minimum(1.0, clip_norm / (jnp.sqrt(sq_norms) + eps))
+
+
+def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
+                            batch_size: int, clip_norm: float,
+                            noise_std: float = 0.0,
+                            noise_rng: jax.Array = None) -> PexResult:
+    """Per-example gradient clipping (paper §6, two-pass ghost form).
+
+    Pass 1 computes the norms via the accumulator; pass 2 backprops the
+    reweighted loss Σ_j c_j L^(j), whose parameter gradient equals the
+    sum of clipped per-example gradients (c_j are constants). Optional
+    Gaussian noise makes this a DP-SGD step.
+    """
+    res = value_and_norms(loss_fn, params, batch, spec, batch_size)
+    c = clip_coefficients(res.sq_norms, clip_norm)
+    acc0 = init_acc(batch_size, spec)
+
+    def g(p):
+        loss_vec, _, _ = loss_fn(p, acc0, batch)
+        return jnp.sum(jax.lax.stop_gradient(c) * loss_vec)
+
+    grads = jax.grad(g)(params)
+    if noise_std > 0.0:
+        flat, tree = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(noise_rng, len(flat))
+        flat = [g_ + noise_std * clip_norm *
+                jax.random.normal(k, g_.shape, jnp.float32).astype(g_.dtype)
+                for g_, k in zip(flat, keys)]
+        grads = jax.tree_util.tree_unflatten(tree, flat)
+    return PexResult(res.loss, res.loss_vec, res.aux, res.sq_norms, grads)

@@ -1,0 +1,57 @@
+"""Importance-sampled optimization (Zhao & Zhang 2014) — the paper's §1
+motivating application, built on the cheap per-example norms.
+
+The optimal (variance-minimizing) sampling distribution for SGD is
+p_j ∝ ||∇L^(j)||. With the accumulator taps, those norms cost a
+forward + activation-backprop over the candidate pool — no per-example
+gradient materialization — after which we sample a minibatch and apply
+unbiased importance weights 1/(N·p_j).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ImportanceSample(NamedTuple):
+    indices: jax.Array     # (k,) selected candidate rows
+    weights: jax.Array     # (k,) unbiased importance weights
+    probs: jax.Array       # (N,) the sampling distribution used
+
+
+def sampling_distribution(sq_norms: jax.Array, smoothing: float = 0.0,
+                          eps: float = 1e-12) -> jax.Array:
+    """p_j ∝ ||g_j|| with optional uniform smoothing (stability knob:
+    p ← (1-λ)p + λ/N, keeps weights bounded)."""
+    if sq_norms.ndim == 2:
+        sq_norms = jnp.sum(sq_norms, axis=-1)
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    p = norms / (jnp.sum(norms) + eps)
+    if smoothing > 0.0:
+        n = sq_norms.shape[0]
+        p = (1.0 - smoothing) * p + smoothing / n
+    return p
+
+
+def sample(rng: jax.Array, sq_norms: jax.Array, k: int,
+           smoothing: float = 0.1, replace: bool = True) -> ImportanceSample:
+    """Draw k examples ∝ gradient norm; weights make the estimator unbiased."""
+    p = sampling_distribution(sq_norms, smoothing)
+    n = p.shape[0]
+    idx = jax.random.choice(rng, n, shape=(k,), replace=replace, p=p)
+    # unbiased for the batch SUM (paper §2's C = Σ_j L^(j)):
+    # E[Σ_k v/(k·p)] = Σ v
+    w = 1.0 / (k * p[idx] + 1e-12)
+    return ImportanceSample(idx, w, p)
+
+
+def gather_batch(batch, indices):
+    """Select rows `indices` from every leaf of a batch pytree."""
+    return jax.tree_util.tree_map(lambda x: jnp.take(x, indices, axis=0), batch)
+
+
+def effective_sample_size(weights: jax.Array) -> jax.Array:
+    """ESS = (Σw)²/Σw² — diagnostic for weight degeneracy."""
+    return jnp.square(jnp.sum(weights)) / (jnp.sum(jnp.square(weights)) + 1e-12)

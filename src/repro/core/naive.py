@@ -1,0 +1,47 @@
+"""The paper's §3 naive method — kept as the numerical oracle.
+
+Runs backprop once per example (vectorized here with ``jax.vmap`` so it
+is at least not *pathologically* slow, though it still materializes the
+full per-example gradient pytree — the O(m·n·p²) memory/compute the
+paper's method avoids).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def per_example_grads(loss_fn: Callable, params, batch):
+    """Materialize per-example parameter gradients.
+
+    loss_fn(params, batch_of_one) -> scalar loss for that example.
+    batch: pytree whose leaves have a leading batch axis.
+    Returns a pytree matching params with a leading batch axis.
+    """
+    def one(ex):
+        return jax.grad(loss_fn)(params, ex)
+    return jax.vmap(one)(batch)
+
+
+def per_example_sq_norms(loss_fn: Callable, params, batch,
+                         param_filter: Callable = None) -> jax.Array:
+    """(B,) vector of ||∂L^(j)/∂θ||² via the naive method (paper §3)."""
+    grads = per_example_grads(loss_fn, params, batch)
+    leaves = jax.tree_util.tree_leaves_with_path(grads)
+    total = None
+    for path, g in leaves:
+        if param_filter is not None and not param_filter(path):
+            continue
+        s = jnp.sum(jnp.square(g.astype(jnp.float32)),
+                    axis=tuple(range(1, g.ndim)))
+        total = s if total is None else total + s
+    return total
+
+
+def per_example_grad_pytree_norms(grads) -> jax.Array:
+    """Squared norms from an already-materialized per-example grad pytree."""
+    sq = [jnp.sum(jnp.square(g.astype(jnp.float32)), axis=tuple(range(1, g.ndim)))
+          for g in jax.tree_util.tree_leaves(grads)]
+    return sum(sq)

@@ -1,0 +1,224 @@
+"""Per-example squared-gradient-norm estimators.
+
+All estimators consume the pair the paper identifies — the layer input
+``H`` and the pre-activation cotangent ``Z̄`` — and return the *exact*
+per-example squared Frobenius norm of that layer's parameter gradient,
+``s_j = ||∂L^(j)/∂W||_F²``, as a ``(batch,)`` float32 vector.
+
+Shapes
+------
+Inputs are either unshared (``(B, p)`` — the paper's MLP setting) or
+sequence-shared (``(B, S, p)`` — one weight application per position).
+
+Methods
+-------
+``factorized``  paper §4 verbatim: ``||h_j||² · ||z̄_j||²``. Exact only
+                for the unshared case (rank-1 per-example gradient).
+``gram``        ``Σ_{t,t'} (H_jH_jᵀ)_{tt'} (Z̄_jZ̄_jᵀ)_{tt'}`` — exact for
+                sequence sharing; reduces to ``factorized`` at S=1.
+``direct``      ``||H_jᵀ Z̄_j||_F²`` chunked over p_in — exact, preferred
+                when ``s·p_in·p_out < s²(p_in+p_out)``.
+``auto``        cost-model pick between ``gram`` and ``direct``.
+
+Cost model (flops per example per layer):
+    gram:   2·S²·(p_in + p_out) + S²
+    direct: 2·S·p_in·p_out        (+ chunk accumulate)
+"""
+from __future__ import annotations
+
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Method = Literal["factorized", "gram", "direct", "auto"]
+
+_ACC_DTYPE = jnp.float32
+
+
+def rowsumsq(x: jax.Array) -> jax.Array:
+    """Σ x² over all but the leading (batch) axis. Returns (B,) f32."""
+    x = x.astype(_ACC_DTYPE)
+    return jnp.sum(jnp.square(x), axis=tuple(range(1, x.ndim)))
+
+
+def stat_factorized(h: jax.Array, zbar: jax.Array) -> jax.Array:
+    """Paper §4: s_j = ||z̄_j||² ||h_j||².
+
+    Exact when each example contributes a rank-1 outer product, i.e.
+    inputs are (B, p). For (B, S, p) inputs this computes the factorized
+    value over the flattened (S·p) vectors — the mechanical application
+    of the paper's formula — which is an *upper bound*, not exact; use
+    ``gram``/``direct`` for exactness under weight sharing.
+    """
+    return rowsumsq(zbar) * rowsumsq(h)
+
+
+def stat_gram(h: jax.Array, zbar: jax.Array) -> jax.Array:
+    """Gram-pair estimator. h: (B,S,pi), zbar: (B,S,po) → (B,) f32.
+
+    s_j = Σ_{t,t'} <h_t, h_t'> <z̄_t, z̄_t'>  ==  ||H_jᵀZ̄_j||_F²
+
+    Materializes the (B,S,S) Grams — fine for small S (tests, smoke);
+    the Pallas kernel (kernels/gram_norm.py) is the tiled production
+    path and never materializes S×S.
+    """
+    if h.ndim == 2:  # unshared: Gram is 1×1 → factorized, exactly the paper
+        return stat_factorized(h, zbar)
+    hh = jnp.einsum("bsi,bti->bst", h, h, preferred_element_type=_ACC_DTYPE)
+    zz = jnp.einsum("bsi,bti->bst", zbar, zbar, preferred_element_type=_ACC_DTYPE)
+    return jnp.sum(hh * zz, axis=(1, 2))
+
+
+def stat_direct(h: jax.Array, zbar: jax.Array, chunk: int = 1024) -> jax.Array:
+    """||H_jᵀ Z̄_j||_F² without materializing (B, p_in, p_out) at once.
+
+    Chunks over p_in; each chunk forms (B, c, p_out), squares, reduces.
+    """
+    if h.ndim == 2:
+        return stat_factorized(h, zbar)
+    b, s, p_in = h.shape
+    p_out = zbar.shape[-1]
+    n_chunks = max(1, math.ceil(p_in / chunk))
+    pad = n_chunks * chunk - p_in
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, 0), (0, pad)))
+    hc = h.reshape(b, s, n_chunks, chunk)
+
+    def body(carry, hc_k):
+        # hc_k: (B, S, chunk) — scan moves the chunk axis to front
+        g = jnp.einsum("bsc,bso->bco", hc_k, zbar,
+                       preferred_element_type=_ACC_DTYPE)
+        return carry + jnp.sum(jnp.square(g), axis=(1, 2)), None
+
+    init = jnp.zeros((b,), _ACC_DTYPE)
+    out, _ = jax.lax.scan(body, init, jnp.moveaxis(hc, 2, 0))
+    return out
+
+
+def gram_flops(s: int, p_in: int, p_out: int) -> float:
+    return 2.0 * s * s * (p_in + p_out) + s * s
+
+
+def direct_flops(s: int, p_in: int, p_out: int) -> float:
+    return 2.0 * s * p_in * p_out
+
+
+def pick_method(s: int, p_in: int, p_out: int) -> str:
+    """Cost-model choice between gram and direct (both exact)."""
+    return "gram" if gram_flops(s, p_in, p_out) <= direct_flops(s, p_in, p_out) else "direct"
+
+
+def stat_dense(h: jax.Array, zbar: jax.Array, method: Method = "auto",
+               use_pallas: bool = False) -> jax.Array:
+    """Dispatch a dense-layer stat. h (B,[S,]p_in), zbar (B,[S,]p_out)."""
+    if h.ndim == 2:
+        return stat_factorized(h, zbar)
+    if method == "auto":
+        _, s, p_in = h.shape
+        method = pick_method(s, p_in, zbar.shape[-1])
+    if method == "factorized":
+        return stat_factorized(h, zbar)
+    if method == "gram":
+        if use_pallas:
+            from repro.kernels import ops as kops
+            return kops.gram_norm(h, zbar)
+        return stat_gram(h, zbar)
+    if method == "direct":
+        return stat_direct(h, zbar)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def stat_bias(zbar: jax.Array) -> jax.Array:
+    """Per-example ||∂L/∂b||²: b's gradient is Σ_t z̄_t (row of ones input)."""
+    if zbar.ndim == 2:
+        return rowsumsq(zbar)
+    v = jnp.sum(zbar.astype(_ACC_DTYPE), axis=tuple(range(1, zbar.ndim - 1)))
+    return jnp.sum(jnp.square(v), axis=-1)
+
+
+def stat_elementwise(h: jax.Array, zbar: jax.Array) -> jax.Array:
+    """Per-example norm for an elementwise parameter z = g ⊙ h.
+
+    grad_g L^(j) = Σ_t z̄_{jt} ⊙ h_{jt}; exact, O(S·p).
+    h/zbar: (B,[S,]p) with g broadcast over B[,S].
+    """
+    prod = (zbar.astype(_ACC_DTYPE) * h.astype(_ACC_DTYPE))
+    if prod.ndim > 2:
+        prod = jnp.sum(prod, axis=tuple(range(1, prod.ndim - 1)))
+    return jnp.sum(jnp.square(prod), axis=-1)
+
+
+def stat_direct_segmented(h: jax.Array, zbar: jax.Array, seg_ids: jax.Array,
+                          n_examples: int, chunk_in: int = 128,
+                          token_block: int = 1024) -> jax.Array:
+    """Exact per-example norms for token-major layers (MoE expert buffers).
+
+    h: (T, p_in), zbar: (T, p_out), seg_ids: (T,) example id per row
+    (rows with seg_id >= n_examples — padding / dropped tokens — are
+    discarded). Computes s_j = ||Σ_{t: seg=j} h_t z̄_tᵀ||²; the per-chunk
+    per-example partial gradient (B, chunk_in, p_out) persists across
+    token blocks (cross-block terms must complete before squaring) while
+    the (tokens × chunk_in × p_out) outer product is built one token
+    block at a time. FLOPs ≈ T·p_in·p_out — the cost of one dW einsum.
+    """
+    t, p_in = h.shape
+    p_out = zbar.shape[-1]
+    h = h.astype(_ACC_DTYPE)
+    zbar = zbar.astype(_ACC_DTYPE)
+
+    k_in = max(1, math.ceil(p_in / chunk_in))
+    if k_in * chunk_in != p_in:
+        h = jnp.pad(h, ((0, 0), (0, k_in * chunk_in - p_in)))
+    n_tb = max(1, math.ceil(t / token_block))
+    if n_tb * token_block != t:
+        pad_t = n_tb * token_block - t
+        h = jnp.pad(h, ((0, pad_t), (0, 0)))
+        zbar = jnp.pad(zbar, ((0, pad_t), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, pad_t),
+                          constant_values=n_examples)  # → dropped
+    hc = jnp.moveaxis(h.reshape(n_tb, token_block, k_in, chunk_in), 2, 0)
+    zc = zbar.reshape(n_tb, token_block, p_out)
+    sc = seg_ids.reshape(n_tb, token_block)
+
+    def per_chunk(carry_out, h_k):  # h_k: (n_tb, token_block, chunk_in)
+        def per_block(g_acc, xs):
+            h_b, z_b, s_b = xs
+            outer = h_b[:, :, None] * z_b[:, None, :]
+            # one extra segment catches padding/dropped rows
+            g = jax.ops.segment_sum(outer, s_b, num_segments=n_examples + 1)
+            return g_acc + g[:n_examples], None
+
+        g0 = jnp.zeros((n_examples, h_k.shape[-1], p_out), _ACC_DTYPE)
+        g, _ = jax.lax.scan(per_block, g0, (h_k, zc, sc))
+        return carry_out + jnp.sum(jnp.square(g), axis=(1, 2)), None
+
+    init = jnp.zeros((n_examples,), _ACC_DTYPE)
+    out, _ = jax.lax.scan(per_chunk, init, hc)
+    return out
+
+
+def stat_embedding(token_ids: jax.Array, zbar: jax.Array) -> jax.Array:
+    """Per-example norm for an embedding table E, z_t = E[x_t].
+
+    grad_E L^(j) = scatter-add of z̄ rows by token id. Exact norm via
+    sort + segment-sum: s_j = Σ_v ||Σ_{t: x_t=v} z̄_t||². O(S·d + S log S)
+    — the one-hot Gram (equality matrix) computed without S².
+
+    token_ids: (B, S) int, zbar: (B, S, d).
+    """
+    zbar = zbar.astype(_ACC_DTYPE)
+
+    def one(ids, z):
+        order = jnp.argsort(ids)
+        ids_s = ids[order]
+        z_s = z[order]
+        # segment id = rank of each distinct token value
+        new_seg = jnp.concatenate([jnp.ones((1,), jnp.int32),
+                                   (ids_s[1:] != ids_s[:-1]).astype(jnp.int32)])
+        seg = jnp.cumsum(new_seg) - 1
+        summed = jax.ops.segment_sum(z_s, seg, num_segments=ids.shape[0])
+        return jnp.sum(jnp.square(summed))
+
+    return jax.vmap(one)(token_ids, zbar)

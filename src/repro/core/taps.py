@@ -1,0 +1,325 @@
+"""Cotangent-accumulator taps — the paper's mechanism, JAX-native.
+
+The paper observes that backprop already computes, for every dense
+layer, the pair ``(H, Z̄)`` from which per-example gradient norms follow
+for free. JAX (like the frameworks the paper complains about) does not
+expose ``Z̄``, so each instrumented op here is a ``jax.custom_vjp``
+whose backward pass computes the standard cotangents *and* adds the
+layer's per-example stat to the cotangent of a ``(batch, n_groups)``
+accumulator threaded through the forward pass:
+
+    z, acc = pex.dense(h, w, acc, spec=spec, group="mlp")
+
+``jax.grad`` w.r.t. the initial accumulator then recovers
+``Σ_i s⁽ⁱ⁾`` in the same single backward pass that produces the
+parameter gradients (paper §4–§5). The accumulator is ``(B, G)`` and
+lives on the data axis, so the technique adds no collective traffic.
+
+Key properties:
+  * works under ``jit``, ``lax.scan`` (acc in the carry), ``jax.checkpoint``
+    (remat), ``vmap`` and ``pjit`` — it is just a custom_vjp op;
+  * when gradients w.r.t. the accumulator are *not* requested, the stat
+    computation is dead code and is removed by jaxpr/XLA DCE — the
+    instrumented model costs the same as the plain one;
+  * when only norms are requested (importance sampling), the ``dW``
+    chains are dead code instead — the pass costs forward +
+    activation-backprop + O(mnp), as in paper §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import norms as N
+
+_ACC_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class PexSpec:
+    """Static instrumentation policy (hashable; safe to close over in jit).
+
+    enabled:     master switch. Off ⇒ every op is its plain counterpart.
+    method:      'auto' | 'gram' | 'direct' | 'factorized' for dense taps.
+                 'factorized' applies the paper's formula mechanically to
+                 flattened (S·p) rows — exact only when S==1 (kept as the
+                 paper-faithful baseline mode; see DESIGN.md §2).
+    use_pallas:  route gram stats through the Pallas tile-pair kernel.
+    groups:      acc column names; per-group norms (e.g. attn/mlp/embed).
+    tap_embeddings / tap_head: include embedding / lm-head params in the
+                 norm (exact but vocab-sized work; cf. DESIGN.md §5).
+    """
+    enabled: bool = True
+    method: str = "auto"
+    use_pallas: bool = False
+    groups: Tuple[str, ...] = ("all",)
+    tap_embeddings: bool = True
+    tap_head: bool = True
+
+    def group_index(self, group: Optional[str]) -> int:
+        if group is None or group not in self.groups:
+            return 0
+        return self.groups.index(group)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+
+DISABLED = PexSpec(enabled=False)
+
+
+def init_acc(batch: int, spec: PexSpec) -> jax.Array:
+    """Fresh accumulator for one instrumented forward pass."""
+    return jnp.zeros((batch, spec.n_groups), _ACC_DTYPE)
+
+
+def _int_zero_cotangent(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# dense: z = h @ w        (the paper's layer; h (B,[S,]p_in), w (p_in,p_out))
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _pex_dense(method: str, use_pallas: bool, group: int,
+               h: jax.Array, w: jax.Array, acc: jax.Array):
+    return jnp.einsum("...i,io->...o", h, w), acc
+
+
+def _pex_dense_fwd(method, use_pallas, group, h, w, acc):
+    z = jnp.einsum("...i,io->...o", h, w)
+    return (z, acc), (h, w)
+
+
+def _pex_dense_bwd(method, use_pallas, group, res, cts):
+    h, w = res
+    zbar, acc_bar = cts
+    dh = jnp.einsum("...o,io->...i", zbar, w).astype(h.dtype)
+    dw = jnp.einsum("...i,...o->io", h, zbar).astype(w.dtype)
+    stat = N.stat_dense(h, zbar, method=method, use_pallas=use_pallas)
+    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    return dh, dw, dacc
+
+
+_pex_dense.defvjp(_pex_dense_fwd, _pex_dense_bwd)
+
+
+def dense(h: jax.Array, w: jax.Array, acc: jax.Array, *,
+          spec: PexSpec, group: str = "all",
+          method: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """Instrumented matmul. Plain einsum when spec.enabled is False."""
+    if not spec.enabled:
+        return jnp.einsum("...i,io->...o", h, w), acc
+    m = method or spec.method
+    return _pex_dense(m, spec.use_pallas, spec.group_index(group), h, w, acc)
+
+
+# ---------------------------------------------------------------------------
+# dense_expert: z = einsum('ecd,edf->ecf')  (MoE expert matmuls; rows of the
+#   (E, C) capacity buffer belong to arbitrary examples, so stats use the
+#   segmented-direct estimator with per-row example ids)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _pex_dense_expert(group: int, n_examples: int,
+                      x: jax.Array, w: jax.Array, seg: jax.Array,
+                      acc: jax.Array):
+    return jnp.einsum("ecd,edf->ecf", x, w), acc
+
+
+def _pex_dense_expert_fwd(group, n_examples, x, w, seg, acc):
+    return (jnp.einsum("ecd,edf->ecf", x, w), acc), (x, w, seg)
+
+
+def _pex_dense_expert_bwd(group, n_examples, res, cts):
+    x, w, seg = res
+    zbar, acc_bar = cts
+    dx = jnp.einsum("ecf,edf->ecd", zbar, w).astype(x.dtype)
+    dw = jnp.einsum("ecd,ecf->edf", x, zbar).astype(w.dtype)
+    e, c, d = x.shape
+    # per-(expert, example) segments: example j's gradient for expert e is
+    # a separate d×f block of the stacked weight — cross-expert outer
+    # products must NOT merge before squaring
+    composite = (jnp.arange(e, dtype=seg.dtype)[:, None] * (n_examples + 1)
+                 + jnp.minimum(seg, n_examples))
+    stat_ec = N.stat_direct_segmented(
+        x.reshape(e * c, d), zbar.reshape(e * c, -1),
+        composite.reshape(e * c), e * (n_examples + 1))
+    stat = stat_ec.reshape(e, n_examples + 1)[:, :n_examples].sum(axis=0)
+    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    return dx, dw, _int_zero_cotangent(seg), dacc
+
+
+_pex_dense_expert.defvjp(_pex_dense_expert_fwd, _pex_dense_expert_bwd)
+
+
+def dense_expert(x: jax.Array, w: jax.Array, seg: jax.Array, acc: jax.Array,
+                 *, spec: PexSpec, group: str = "moe"):
+    """Instrumented per-expert matmul. x (E,C,d), w (E,d,f), seg (E,C) int
+    example ids (>= batch ⇒ padding row, excluded from stats)."""
+    if not spec.enabled:
+        return jnp.einsum("ecd,edf->ecf", x, w), acc
+    return _pex_dense_expert(spec.group_index(group), acc.shape[0],
+                             x, w, seg, acc)
+
+
+# ---------------------------------------------------------------------------
+# dense_expert_grouped: z = einsum('gecd,edf->gecf') — grouped local MoE
+#   dispatch (groups aligned with data shards). seg holds GROUP-LOCAL
+#   example ids, so the stat segment-sums stay device-local; group g's
+#   stats land at acc rows [g·bg, (g+1)·bg).
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _pex_dense_expert_grouped(group: int, bg: int,
+                              x: jax.Array, w: jax.Array, seg: jax.Array,
+                              acc: jax.Array):
+    return jnp.einsum("gecd,edf->gecf", x, w), acc
+
+
+def _pex_dense_expert_grouped_fwd(group, bg, x, w, seg, acc):
+    return (jnp.einsum("gecd,edf->gecf", x, w), acc), (x, w, seg)
+
+
+def _pex_dense_expert_grouped_bwd(group, bg, res, cts):
+    x, w, seg = res
+    zbar, acc_bar = cts
+    dx = jnp.einsum("gecf,edf->gecd", zbar, w).astype(x.dtype)
+    dw = jnp.einsum("gecd,gecf->edf", x, zbar).astype(w.dtype)
+    ng, e, c, d = x.shape
+    f = zbar.shape[-1]
+
+    def one_group(xg, zg, sg):
+        composite = (jnp.arange(e, dtype=sg.dtype)[:, None] * (bg + 1)
+                     + jnp.minimum(sg, bg))
+        stat_ec = N.stat_direct_segmented(
+            xg.reshape(e * c, d), zg.reshape(e * c, f),
+            composite.reshape(e * c), e * (bg + 1))
+        return stat_ec.reshape(e, bg + 1)[:, :bg].sum(axis=0)  # (bg,)
+
+    stat = jax.vmap(one_group)(x, zbar, seg).reshape(ng * bg)
+    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    return dx, dw, _int_zero_cotangent(seg), dacc
+
+
+_pex_dense_expert_grouped.defvjp(_pex_dense_expert_grouped_fwd,
+                                 _pex_dense_expert_grouped_bwd)
+
+
+def dense_expert_grouped(x: jax.Array, w: jax.Array, seg: jax.Array,
+                         acc: jax.Array, bg: int, *, spec: PexSpec,
+                         group: str = "moe"):
+    """Grouped instrumented expert matmul. x (G,E,C,d), w (E,d,f),
+    seg (G,E,C) group-local example ids (>= bg ⇒ padding row)."""
+    if not spec.enabled:
+        return jnp.einsum("gecd,edf->gecf", x, w), acc
+    return _pex_dense_expert_grouped(spec.group_index(group), bg,
+                                     x, w, seg, acc)
+
+
+# ---------------------------------------------------------------------------
+# bias_add: z = x + b      (paper folds b into W as a ones-column; same math)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pex_bias(group: int, x: jax.Array, b: jax.Array, acc: jax.Array):
+    return x + b, acc
+
+
+def _pex_bias_fwd(group, x, b, acc):
+    return (x + b, acc), None
+
+
+def _pex_bias_bwd(group, _, cts):
+    zbar, acc_bar = cts
+    reduce_axes = tuple(range(zbar.ndim - 1))
+    db = jnp.sum(zbar, axis=reduce_axes).astype(zbar.dtype)
+    stat = N.stat_bias(zbar)
+    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    return zbar, db, dacc
+
+
+_pex_bias.defvjp(_pex_bias_fwd, _pex_bias_bwd)
+
+
+def bias_add(x, b, acc, *, spec: PexSpec, group: str = "all"):
+    if not spec.enabled:
+        return x + b, acc
+    return _pex_bias(spec.group_index(group), x, b, acc)
+
+
+# ---------------------------------------------------------------------------
+# scale: z = g ⊙ h         (elementwise params: RMSNorm gains, decays, ...)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pex_scale(group: int, h: jax.Array, g: jax.Array, acc: jax.Array):
+    return h * g, acc
+
+
+def _pex_scale_fwd(group, h, g, acc):
+    return (h * g, acc), (h, g)
+
+
+def _pex_scale_bwd(group, res, cts):
+    h, g = res
+    zbar, acc_bar = cts
+    dh = (zbar * g).astype(h.dtype)
+    reduce_axes = tuple(range(zbar.ndim - 1))
+    dg = jnp.sum(zbar * h, axis=reduce_axes).astype(g.dtype)
+    stat = N.stat_elementwise(h, zbar)
+    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    return dh, dg, dacc
+
+
+_pex_scale.defvjp(_pex_scale_fwd, _pex_scale_bwd)
+
+
+def scale(h, g, acc, *, spec: PexSpec, group: str = "all"):
+    if not spec.enabled:
+        return h * g, acc
+    return _pex_scale(spec.group_index(group), h, g, acc)
+
+
+# ---------------------------------------------------------------------------
+# embedding: z = table[ids]   (one-hot H ⇒ Gram is an equality matrix;
+#                              exact via sort + segment-sum, O(S·d))
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pex_embed(group: int, table: jax.Array, ids: jax.Array, acc: jax.Array):
+    return jnp.take(table, ids, axis=0), acc
+
+
+def _pex_embed_fwd(group, table, ids, acc):
+    # `table` rides along only as a shape/dtype reference for the scatter;
+    # it is a live parameter anyway, so this costs no extra memory.
+    return (jnp.take(table, ids, axis=0), acc), (ids, table)
+
+
+def _pex_embed_bwd(group, res, cts):
+    ids, table = res
+    zbar, acc_bar = cts
+    flat_ids = ids.reshape(-1)
+    flat_z = zbar.reshape(-1, zbar.shape[-1])
+    dtable = jnp.zeros_like(table).at[flat_ids].add(flat_z.astype(table.dtype))
+    stat = N.stat_embedding(ids.reshape(ids.shape[0], -1),
+                            zbar.reshape(zbar.shape[0], -1, zbar.shape[-1]))
+    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    return dtable, _int_zero_cotangent(ids), dacc
+
+
+_pex_embed.defvjp(_pex_embed_fwd, _pex_embed_bwd)
+
+
+def embedding(table, ids, acc, *, spec: PexSpec, group: str = "embed"):
+    if not (spec.enabled and spec.tap_embeddings):
+        return jnp.take(table, ids, axis=0), acc
+    return _pex_embed(spec.group_index(group), table, ids, acc)

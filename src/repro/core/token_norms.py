@@ -1,0 +1,68 @@
+"""Per-TOKEN gradient norms — the paper's trick at token granularity.
+
+The paper's §4 factorization is exact whenever a weight sees a unit of
+data exactly once. Per *example* that's only true for MLPs; per *token*
+it is true for every dense layer in every sequence model: token t's
+contribution to ∂L/∂W is the rank-1 outer product h_t z̄_tᵀ, so
+
+    s_{j,t} = ‖h_{j,t}‖² · ‖z̄_{j,t}‖²          (exactly paper §4)
+
+with a (B, S) accumulator instead of (B,). Uses: token-level data
+filtering/curriculum, influence diagnostics, per-token clipping.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def init_token_acc(batch: int, seq: int) -> jax.Array:
+    return jnp.zeros((batch, seq), _F32)
+
+
+@jax.custom_vjp
+def token_dense(h: jax.Array, w: jax.Array, acc: jax.Array):
+    """z = h @ w with per-token norm accumulation. h: (B, S, p_in),
+    acc: (B, S)."""
+    return jnp.einsum("bsi,io->bso", h, w), acc
+
+
+def _fwd(h, w, acc):
+    return token_dense(h, w, acc), (h, w)
+
+
+def _bwd(res, cts):
+    h, w = res
+    zbar, acc_bar = cts
+    dh = jnp.einsum("bso,io->bsi", zbar, w).astype(h.dtype)
+    dw = jnp.einsum("bsi,bso->io", h, zbar).astype(w.dtype)
+    stat = (jnp.sum(jnp.square(h.astype(_F32)), -1) *
+            jnp.sum(jnp.square(zbar.astype(_F32)), -1))
+    return dh, dw, acc_bar + stat
+
+
+token_dense.defvjp(_fwd, _bwd)
+
+
+class TokenNormResult(NamedTuple):
+    loss: jax.Array
+    sq_norms: jax.Array    # (B, S): Σ_layers ‖h_t‖²‖z̄_t‖²
+
+
+def value_and_token_norms(loss_fn: Callable, params, batch,
+                          batch_size: int, seq: int) -> TokenNormResult:
+    """loss_fn(params, acc, batch) -> (loss_vec, acc_out, aux) where the
+    model threads a (B, S) accumulator through `token_dense` taps."""
+    acc0 = init_token_acc(batch_size, seq)
+
+    def f(acc):
+        loss_vec, acc_out, aux = loss_fn(params, acc, batch)
+        return jnp.sum(loss_vec), (loss_vec, acc_out, aux)
+
+    (loss, _), sq = jax.value_and_grad(f, has_aux=True)(acc0)
+    return TokenNormResult(loss, sq)

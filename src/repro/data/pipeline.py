@@ -1,0 +1,78 @@
+"""Deterministic, resumable synthetic-token data pipeline.
+
+Every batch is a pure function of (seed, step), so restart-from-
+checkpoint reproduces the exact token stream with no persisted cursor
+beyond the step counter — the property the fault-tolerance layer relies
+on. Sharding: each data-parallel host materializes only its slice
+(host_id, num_hosts), as a real loader would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq: int
+    global_batch: int
+    seed: int = 0
+    # synthetic-LM structure: repeated motifs make the loss learnable,
+    # with per-example difficulty variation (exercises importance sampling)
+    n_motifs: int = 64
+    motif_len: int = 8
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+
+    def to_dict(self) -> Dict:
+        return {"step": self.step}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PipelineState":
+        return cls(step=int(d["step"]))
+
+
+class SyntheticLM:
+    """Motif-mixture LM stream. Deterministic in (seed, step, host)."""
+
+    def __init__(self, cfg: DataConfig, host_id: int = 0, num_hosts: int = 1):
+        assert cfg.global_batch % num_hosts == 0
+        self.cfg = cfg
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.local_batch = cfg.global_batch // num_hosts
+        base = np.random.default_rng(cfg.seed)
+        self.motifs = base.integers(
+            0, cfg.vocab, size=(cfg.n_motifs, cfg.motif_len))
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed, step, self.host_id, 0xDA7A))
+        b, s = self.local_batch, cfg.seq
+        # per-example noise level → heterogeneous gradient norms
+        noise_p = rng.uniform(0.0, 0.9, size=(b, 1))
+        n_slots = s // cfg.motif_len + 1
+        motif_ids = rng.integers(0, cfg.n_motifs, size=(b, n_slots))
+        seqs = self.motifs[motif_ids].reshape(b, -1)[:, :s]
+        noise = rng.integers(0, cfg.vocab, size=(b, s))
+        take_noise = rng.uniform(size=(b, s)) < noise_p
+        ids = np.where(take_noise, noise, seqs)
+        labels = np.roll(ids, -1, axis=1)
+        labels[:, -1] = ids[:, 0]
+        return {"ids": jnp.asarray(ids, jnp.int32),
+                "labels": jnp.asarray(labels, jnp.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

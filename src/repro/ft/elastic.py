@@ -1,0 +1,55 @@
+"""Elastic scaling: recompute the mesh + data assignment after a host
+set change, and reshard a checkpoint onto the new topology.
+
+Strategy (contraction after failure):
+  1. Drop dead hosts; keep the largest power-of-two data-axis size that
+     the survivors support (model axis is fixed by the arch's TP plan).
+  2. Rebuild data-pipeline host assignments (the pipeline is a pure
+     function of (seed, step, host), so reassignment is just renumber).
+  3. Restore the last checkpoint re-sharded to the new mesh —
+     CheckpointManager.restore(shardings=new) handles placement.
+
+Expansion (hosts return) is the same computation in reverse.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    n_hosts: int
+    devices_per_host: int
+    model_parallel: int           # fixed by the arch sharding plan
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_hosts * self.devices_per_host
+
+
+def plan_contraction(topo: Topology, dead_hosts: List[int]) -> Topology:
+    """Largest runnable topology after removing dead hosts."""
+    survivors = topo.n_hosts - len(dead_hosts)
+    if survivors * topo.devices_per_host < topo.model_parallel:
+        raise RuntimeError("not enough devices for the model-parallel plan")
+    # keep data axis a power of two for collective efficiency
+    usable = 1
+    while usable * 2 <= survivors:
+        usable *= 2
+    return dataclasses.replace(topo, n_hosts=usable)
+
+
+def mesh_shape(topo: Topology, multi_pod: bool = False) -> Tuple[int, ...]:
+    data = topo.n_devices // topo.model_parallel
+    if multi_pod:
+        assert data % 2 == 0
+        return (2, data // 2, topo.model_parallel)
+    return (data, topo.model_parallel)
+
+
+def reassign_data_hosts(old_hosts: List[int], dead: List[int],
+                        new_count: int) -> List[int]:
+    """Surviving hosts, renumbered into the contracted data layout."""
+    alive = [h for h in old_hosts if h not in dead]
+    return alive[:new_count]

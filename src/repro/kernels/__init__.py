@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (BlockSpec VMEM tiling), jit wrappers (ops.py),
+and pure-jnp oracles (ref.py) — validated in interpret mode on CPU.
+
+  gram_norm        tile-pair Gram product: per-example ||HᵀZ̄||²_F
+  rowsumsq         fused row-wise Σx² (paper §4's O(mnp) extra work)
+  clip_scale       §6's Z̄ row rescaling
+  flash_attention  online-softmax attention, fwd + bwd kernels
+"""

@@ -1,0 +1,40 @@
+"""Row-rescale kernel: z'_j = c_j · z_j  (paper §6's Z̄ modification).
+
+One fused HBM pass: each grid step loads a (tile_s × tile_p) block of
+one example's Z̄ and multiplies by that example's scalar coefficient,
+read from SMEM via scalar prefetch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(c_ref, z_ref, out_ref):
+    b = pl.program_id(0)
+    out_ref[...] = (z_ref[...].astype(jnp.float32) * c_ref[b]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_s", "tile_p", "interpret"))
+def clip_scale(z: jax.Array, c: jax.Array, *, tile_s: int = 256,
+               tile_p: int = 512, interpret: bool = False) -> jax.Array:
+    """z: (B, S, p), c: (B,) f32 → (B, S, p) same dtype as z."""
+    b, s, p = z.shape
+    assert s % tile_s == 0 and p % tile_p == 0, (s, p, tile_s, tile_p)
+    grid = (b, s // tile_s, p // tile_p)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tile_s, tile_p), lambda bi, i, j, c_ref: (bi, i, j))],
+        out_specs=pl.BlockSpec((1, tile_s, tile_p), lambda bi, i, j, c_ref: (bi, i, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(z.shape, z.dtype),
+        interpret=interpret,
+    )(c, z)

@@ -1,0 +1,117 @@
+"""Tile-pair Gram kernel: per-example ||H_jᵀZ̄_j||_F² without the S×S Gram.
+
+TPU adaptation of the paper's §4 quantity for weight-shared (sequence)
+layers. The identity
+
+    s_j = Σ_{t,t'} <h_t, h_t'> <z̄_t, z̄_t'>
+
+is evaluated tile-by-tile: for each example b and each pair of sequence
+tiles (i, j), two Ts×Ts MXU dots build the H-gram and Z̄-gram partials,
+chunked over the (possibly different) feature dims; their elementwise
+product is reduced into a per-example scalar. Nothing of size S×S ever
+exists — the working set is four (Ts × C) row panels + two Ts×Ts f32
+scratch accumulators in VMEM.
+
+Grid: (B, S/Ts, S/Ts, K) with K = max(p_in, p_out)/C feature chunks.
+The k axis is the innermost (fastest) so the scratch accumulators for a
+given (i, j) complete before the product is folded into the output.
+Feature chunks beyond a tensor's own extent are masked with ``pl.when``
+(their index map clamps, so the loads stay in bounds).
+
+VMEM budget at Ts=128, C=512, bf16 inputs:
+    4 panels · 128·512·2 B = 512 KiB   + 2 scratch · 128·128·4 B = 128 KiB
+well under the ~16 MiB/core budget; MXU dims (128, 512) are aligned to
+the 128×128 systolic array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(k_in: int, k_out: int, n_k: int,
+            h_i_ref, h_j_ref, z_i_ref, z_j_ref, out_ref, a_acc, b_acc):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init_scratch():
+        a_acc[...] = jnp.zeros_like(a_acc)
+        b_acc[...] = jnp.zeros_like(b_acc)
+
+    @pl.when(k < k_in)
+    def _acc_h_gram():
+        a_acc[...] += jax.lax.dot_general(
+            h_i_ref[0], h_j_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k < k_out)
+    def _acc_z_gram():
+        b_acc[...] += jax.lax.dot_general(
+            z_i_ref[0], z_j_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _fold():
+        partial = jnp.sum(a_acc[...] * b_acc[...])
+
+        @pl.when(jnp.logical_and(i == 0, j == 0))
+        def _set():
+            out_ref[0, 0] = partial
+
+        @pl.when(jnp.logical_or(i != 0, j != 0))
+        def _add():
+            out_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile_s", "chunk", "interpret"))
+def gram_norm(h: jax.Array, zbar: jax.Array, *, tile_s: int = 128,
+              chunk: int = 512, interpret: bool = False) -> jax.Array:
+    """h: (B, S, p_in), zbar: (B, S, p_out) → (B,) f32.
+
+    Caller guarantees S % tile_s == 0 and both feature dims % chunk == 0
+    (the ops.py wrapper pads with zeros, which contribute nothing).
+    """
+    b, s, p_in = h.shape
+    _, _, p_out = zbar.shape
+    assert s % tile_s == 0, (s, tile_s)
+    assert p_in % chunk == 0 and p_out % chunk == 0, (p_in, p_out, chunk)
+    k_in, k_out = p_in // chunk, p_out // chunk
+    n_k = max(k_in, k_out)
+    n_s = s // tile_s
+
+    def h_map(bi, i, j, k):
+        return (bi, i, jnp.minimum(k, k_in - 1))
+
+    def h_map_j(bi, i, j, k):
+        return (bi, j, jnp.minimum(k, k_in - 1))
+
+    def z_map(bi, i, j, k):
+        return (bi, i, jnp.minimum(k, k_out - 1))
+
+    def z_map_j(bi, i, j, k):
+        return (bi, j, jnp.minimum(k, k_out - 1))
+
+    grid = (b, n_s, n_s, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_in, k_out, n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_s, chunk), h_map),
+            pl.BlockSpec((1, tile_s, chunk), h_map_j),
+            pl.BlockSpec((1, tile_s, chunk), z_map),
+            pl.BlockSpec((1, tile_s, chunk), z_map_j),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda bi, i, j, k: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tile_s, tile_s), jnp.float32),
+            pltpu.VMEM((tile_s, tile_s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, h, zbar, zbar)[:, 0]

@@ -1,0 +1,103 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile boundaries (zero padding is exact for all three
+ops), backend selection (interpret mode on CPU — the container target;
+compiled Mosaic on real TPU), and adaptive tile sizing for small
+inputs. These are what ``core.norms``/``core.taps`` call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import clip_scale as _cs
+from repro.kernels import gram_norm as _gn
+from repro.kernels import rowsumsq as _rs
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def gram_norm(h: jax.Array, zbar: jax.Array) -> jax.Array:
+    """(B,S,p_in),(B,S,p_out) → (B,) f32; pads S and feature dims."""
+    b, s, p_in = h.shape
+    p_out = zbar.shape[-1]
+    tile_s = min(128, _round_up(s, 8))
+    chunk = 512 if max(p_in, p_out) >= 512 else _round_up(max(p_in, p_out), 128)
+    s_pad = _round_up(s, tile_s)
+    pi_pad = _round_up(p_in, chunk)
+    po_pad = _round_up(p_out, chunk)
+    if (s_pad, pi_pad) != (s, p_in):
+        h = jnp.pad(h, ((0, 0), (0, s_pad - s), (0, pi_pad - p_in)))
+    if (s_pad, po_pad) != (s, p_out):
+        zbar = jnp.pad(zbar, ((0, 0), (0, s_pad - s), (0, po_pad - p_out)))
+    return _gn.gram_norm(h, zbar, tile_s=tile_s, chunk=chunk,
+                         interpret=_interpret())
+
+
+def rowsumsq(x: jax.Array) -> jax.Array:
+    """(B, ...) → (B,) Σx² f32; flattens and pads the trailing dims."""
+    b = x.shape[0]
+    x = x.reshape(b, -1)
+    n = x.shape[1]
+    tile_b = 8 if b % 8 == 0 else 1
+    tile_n = min(2048, _round_up(n, 128))
+    n_pad = _round_up(n, tile_n)
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+    return _rs.rowsumsq(x, tile_b=tile_b, tile_n=tile_n,
+                        interpret=_interpret())
+
+
+import functools as _functools
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_vjp(q, k, v, scale, window=None):
+    """Differentiable flash attention: Pallas forward (online softmax,
+    lse residual) + Pallas backward (dq / dk / dv kernels). The S²
+    score tensor never reaches HBM in either direction."""
+    bq = min(256, q.shape[2])
+    return _fa.flash_attention(q, k, v, scale=scale, window=window,
+                               block_q=bq, block_k=bq,
+                               interpret=_interpret())
+
+
+def _fa_fwd(q, k, v, scale, window):
+    bq = min(256, q.shape[2])
+    o, lse = _fa.flash_attention(q, k, v, scale=scale, window=window,
+                                 block_q=bq, block_k=bq,
+                                 interpret=_interpret(), return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(scale, window, res, g):
+    q, k, v, o, lse = res
+    bq = min(256, q.shape[2])
+    return _fa.flash_attention_bwd(q, k, v, o, lse, g, scale=scale,
+                                   window=window, block_q=bq, block_k=bq,
+                                   interpret=_interpret())
+
+
+flash_attention_vjp.defvjp(_fa_fwd, _fa_bwd)
+
+
+def clip_scale(z: jax.Array, c: jax.Array) -> jax.Array:
+    """(B,S,p) ⊙ c(B,) → (B,S,p); pads S and p, then slices back."""
+    b, s, p = z.shape
+    tile_s = min(256, _round_up(s, 8))
+    tile_p = min(512, _round_up(p, 128))
+    s_pad, p_pad = _round_up(s, tile_s), _round_up(p, tile_p)
+    zp = jnp.pad(z, ((0, 0), (0, s_pad - s), (0, p_pad - p))) \
+        if (s_pad, p_pad) != (s, p) else z
+    out = _cs.clip_scale(zp, c.astype(jnp.float32), tile_s=tile_s,
+                         tile_p=tile_p, interpret=_interpret())
+    return out[:, :s, :p]

@@ -1,0 +1,43 @@
+"""Fused row-wise Σx² — the O(mnp) extra work of paper §5 as one kernel.
+
+Feeds the ``factorized`` (paper §4) and ``elementwise`` stat paths: one
+HBM pass per tensor instead of separate square + reduce HLOs. Inputs
+are viewed as (B, N); the grid tiles N, accumulating per-row partials
+in the revisited output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(n_k: int, x_ref, out_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(x * x, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_n", "interpret"))
+def rowsumsq(x: jax.Array, *, tile_b: int = 8, tile_n: int = 2048,
+             interpret: bool = False) -> jax.Array:
+    """x: (B, N) → (B,) f32. Caller pads B % tile_b == 0, N % tile_n == 0."""
+    b, n = x.shape
+    assert b % tile_b == 0 and n % tile_n == 0, (b, n, tile_b, tile_n)
+    grid = (b // tile_b, n // tile_n)
+    out = pl.pallas_call(
+        functools.partial(_kernel, grid[1]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_b, tile_n), lambda i, k: (i, k))],
+        out_specs=pl.BlockSpec((tile_b, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:, 0]

@@ -1,0 +1,397 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-touching import (device count locks at first init).
+
+_DOC = """Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(**ShapeDtypeStruct specs).compile()
+must succeed on the 16×16 single-pod mesh and the 2×16×16 multi-pod
+mesh. No arrays are allocated — params/caches/batches are eval_shape
+stand-ins carrying shardings. The compiled artifact yields
+memory_analysis (fits-per-device proof) and cost_analysis + HLO text
+(roofline inputs, §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --multi-pod
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.common import SHAPES, ShapeSpec
+from repro.core import api
+from repro.core.taps import PexSpec
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.nn.param import axes_of, unbox
+from repro.optim import adamw
+from repro.roofline import hlo as hlo_parse
+from repro.roofline.constants import CHIPS_PER_POD
+
+
+# reduced shapes for the in-suite dry-run regression test (--smoke)
+_EXTRA_SHAPES = {
+    "smoke_train": ShapeSpec("smoke_train", "train", 64, 32),
+    "smoke_prefill": ShapeSpec("smoke_prefill", "prefill", 64, 32),
+    "smoke_decode": ShapeSpec("smoke_decode", "decode", 64, 32),
+}
+
+
+def _shape(name: str) -> ShapeSpec:
+    return SHAPES.get(name) or _EXTRA_SHAPES[name]
+
+
+def _dp(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _batch_shardings(batch_specs, mesh, shape: ShapeSpec, multi_pod: bool):
+    dp = _dp(multi_pod)
+    shard_batch = shape.batch % shd.axis_size(dp, mesh) == 0
+
+    def one(sds):
+        if not shard_batch:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (len(sds.shape) - 1))))
+
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def _cache_shardings(aspec, cfg, cache_specs, mesh, shape, multi_pod):
+    """Per-family sharding for decode/prefill caches (see DESIGN.md §6)."""
+    dp = _dp(multi_pod)
+    b_ok = shape.batch % shd.axis_size(dp, mesh) == 0
+    dpa = dp if b_ok else None
+    msz = mesh.shape["model"]
+    kv_ok = False
+    if aspec.family == "transformer" and cfg.attn is not None:
+        kv_ok = cfg.attn.n_kv % msz == 0
+    if aspec.family in ("seamless",):
+        kv_ok = cfg.kv_heads % msz == 0
+    if aspec.family == "zamba2":
+        kv_ok = cfg.kv_heads % msz == 0
+    kv_ax = "model" if kv_ok else None
+    # cache time axis: `data` for long-context (batch=1); additionally
+    # `model` when KV heads can't shard (flash-decoding-style split —
+    # softmax over the sharded axis costs only tiny max/sum reductions)
+    if shape.name == "long_500k":
+        seq_ax = ("data",) if kv_ok else ("data", "model")
+    else:
+        seq_ax = None if kv_ok else ("model",)
+
+    def spec_for(path, sds):
+        ks = jax.tree_util.keystr(path)
+        nd = len(sds.shape)
+        if aspec.family == "transformer":
+            if "ckv" in ks or "krope" in ks:   # MLA latent: (L?,B,T,C)
+                base = (dpa, seq_ax, None)
+            else:                               # GQA: (L?,B,T,H,D)
+                base = (dpa, seq_ax, kv_ax, None)
+            lead = nd - len(base)
+            return P(*([None] * lead), *base)
+        if aspec.family == "rwkv6":             # (L,B,...) O(1) state
+            return P(None, dpa, *([None] * (nd - 2)))
+        if aspec.family == "zamba2":
+            if "shared" in ks:                  # (G,B,T,H,D)
+                return P(None, dpa, seq_ax, kv_ax, None)
+            # ssm states: (G,K,B,...) or (T,B,...)
+            lead = nd - (nd - 2)
+            if "blocks" in ks:
+                return P(None, None, dpa, *([None] * (nd - 3)))
+            return P(None, dpa, *([None] * (nd - 2)))
+        if aspec.family == "seamless":
+            if "memory" in ks:                  # (B,S,d)
+                return P(dpa, None, None)
+            return P(None, dpa, seq_ax, kv_ax, None)   # (L,B,T,H,D)
+        raise ValueError(aspec.family)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    out = [NamedSharding(mesh, spec_for(path, sds)) for path, sds in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _tree_bytes_per_dev(sds_tree, sh_tree, mesh) -> float:
+    """Analytic per-device bytes of a (ShapeDtypeStruct, NamedSharding)
+    tree — donation-aliasing in memory_analysis hides these."""
+    total = 0.0
+    flat_s = jax.tree_util.tree_leaves(sds_tree)
+    flat_h = jax.tree_util.tree_leaves(
+        sh_tree, is_leaf=lambda x: isinstance(x, NamedSharding))
+    for sds, sh in zip(flat_s, flat_h):
+        n_bytes = math.prod(sds.shape) * sds.dtype.itemsize
+        shards = 1
+        for ax in jax.tree_util.tree_leaves(tuple(sh.spec)):
+            if ax is not None:
+                shards *= mesh.shape[ax]
+        total += n_bytes / shards
+    return total
+
+
+def _opt_shardings(param_sh, mesh):
+    mu = jax.tree_util.tree_map(lambda s: s, param_sh)
+    return adamw.AdamWState(NamedSharding(mesh, P()), mu,
+                            jax.tree_util.tree_map(lambda s: s, param_sh))
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    skipped: bool = False
+    reason: str = ""
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    arg_bytes_per_dev: float = 0.0
+    out_bytes_per_dev: float = 0.0
+    temp_bytes_per_dev: float = 0.0
+    peak_bytes_per_dev: float = 0.0
+    param_bytes_per_dev: float = 0.0   # analytic (donation-proof)
+    state_bytes_per_dev: float = 0.0   # opt state / caches, analytic
+    n_params: float = 0.0
+    error: str = ""
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
+               cfg_override=None, pex_method: str = "direct",
+               pex_on: bool = True, keep_hlo: bool = False,
+               donate: bool = True, extra_rules: Optional[dict] = None,
+               optimizer: str = "adamw"):
+    """Lower + compile one cell; returns (CellResult, compiled|None)."""
+    aspec = registry.get(arch_id)
+    shape = _shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    res = CellResult(arch_id, shape_name, mesh_name, ok=False)
+    if cfg_override is None and shape_name in aspec.skip_shapes:
+        res.skipped, res.reason, res.ok = True, aspec.skip_reason, True
+        return res, None
+
+    cfg = cfg_override if cfg_override is not None else aspec.full()
+    if shape.kind != "train":
+        cfg = registry.serving_config(aspec, cfg, shape)
+    rules = registry.rules_for(aspec, cfg, shape, multi_pod,
+                               model_size=mesh.shape["model"],
+                               data_size=mesh.shape["data"])
+    if extra_rules:
+        rules.update(extra_rules)
+    mod = registry.family_module(aspec)
+
+    with shd.use_rules(mesh, rules):
+        boxed = jax.eval_shape(lambda k: mod.init(k, cfg), jax.random.key(0))
+        param_sds = unbox(boxed)
+        param_sh = shd.sharding_tree(axes_of(boxed))
+        res.n_params = float(sum(
+            math.prod(x.shape)
+            for x in jax.tree_util.tree_leaves(param_sds)))
+
+        t0 = time.time()
+        if shape.kind == "train":
+            pex = PexSpec(enabled=pex_on, method=pex_method)
+            loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+            if optimizer == "adafactor":
+                from repro.optim import adafactor as opt_mod
+                opt_cfg = opt_mod.AdafactorConfig()
+            else:
+                opt_mod, opt_cfg = adamw, adamw.AdamWConfig()
+            b = shape.batch
+            # probes (cfg_override) run un-accumulated: grad accumulation
+            # repeats fwd/bwd verbatim, so probe FLOPs already equal the
+            # accumulated program's total
+            n_micro = aspec.train_microbatches if cfg_override is None else 1
+
+            def train_step(params, opt_state, batch):
+                if n_micro == 1:
+                    r = api.value_grads_and_norms(loss_fn, params, batch,
+                                                  pex, b)
+                    grads, loss, sq = r.grads, r.loss, r.sq_norms
+                else:
+                    mb = b // n_micro
+                    batch_r = jax.tree_util.tree_map(
+                        lambda x: x.reshape((n_micro, mb) + x.shape[1:]),
+                        batch)
+                    g0 = jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                    def micro(gsum, mbatch):
+                        r = api.value_grads_and_norms(loss_fn, params,
+                                                      mbatch, pex, mb)
+                        gsum = jax.tree_util.tree_map(
+                            lambda a, g: a + g.astype(jnp.float32),
+                            gsum, r.grads)
+                        return gsum, (r.loss, r.sq_norms)
+
+                    grads, (losses, sqs) = jax.lax.scan(micro, g0, batch_r)
+                    loss = jnp.sum(losses)
+                    sq = sqs.reshape((b,) + sqs.shape[2:])
+                params, opt_state = opt_mod.update(opt_cfg, opt_state,
+                                                   params, grads)
+                return params, opt_state, loss, sq
+
+            batch_sds = registry.train_batch_specs(aspec, cfg, shape)
+            batch_sh = _batch_shardings(batch_sds, mesh, shape, multi_pod)
+            opt_sds = jax.eval_shape(opt_mod.init, param_sds)
+            if optimizer == "adafactor":
+                # factored vectors: replicate (tiny); full-v leaves follow params
+                opt_sh = jax.tree_util.tree_map(
+                    lambda _: NamedSharding(mesh, P()), opt_sds)
+            else:
+                opt_sh = _opt_shardings(param_sh, mesh)
+            res.param_bytes_per_dev = _tree_bytes_per_dev(param_sds, param_sh, mesh)
+            res.state_bytes_per_dev = _tree_bytes_per_dev(opt_sds, opt_sh, mesh)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(param_sds, opt_sds, batch_sds)
+        else:
+            prefill = shape.kind == "prefill"
+            fwd = registry.make_forward_tokens(aspec, cfg)
+            batch_sds = registry.serve_batch_specs(aspec, cfg, shape,
+                                                   prefill=prefill)
+            batch_sh = _batch_shardings(batch_sds, mesh, shape, multi_pod)
+            cache_sds = registry.cache_specs(aspec, cfg, shape)
+            cache_sh = _cache_shardings(aspec, cfg, cache_sds, mesh, shape,
+                                        multi_pod)
+            idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def serve_step(params, batch, caches, idx):
+                return fwd(params, batch, caches, idx)
+
+            res.param_bytes_per_dev = _tree_bytes_per_dev(param_sds, param_sh, mesh)
+            res.state_bytes_per_dev = _tree_bytes_per_dev(cache_sds, cache_sh, mesh)
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, batch_sh, cache_sh,
+                              NamedSharding(mesh, P())),
+                donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(param_sds, batch_sds, cache_sds, idx_sds)
+        res.lower_s = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        res.compile_s = time.time() - t0
+
+        # cost_analysis on the SPMD-partitioned module reports PER-DEVICE
+        # numbers (verified in-container: sharded == unsharded/256);
+        # scale to global so the spec's /(chips × ...) formulas apply.
+        n_dev_total = mesh.devices.size
+        ca = compiled.cost_analysis() or {}
+        res.flops = float(ca.get("flops", 0.0)) * n_dev_total
+        res.bytes_accessed = float(ca.get("bytes accessed", 0.0)) * n_dev_total
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            n_dev = mesh.devices.size
+            res.arg_bytes_per_dev = ma.argument_size_in_bytes / n_dev
+            res.out_bytes_per_dev = ma.output_size_in_bytes / n_dev
+            res.temp_bytes_per_dev = ma.temp_size_in_bytes / n_dev
+            # donated buffers alias outputs and vanish from the arg/out
+            # counts — add the analytic param/state residency instead
+            res.peak_bytes_per_dev = (
+                res.param_bytes_per_dev + res.state_bytes_per_dev +
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+                 ma.temp_size_in_bytes) / n_dev)
+        txt = compiled.as_text()
+        res.coll_bytes = {k: v * n_dev_total for k, v in
+                          hlo_parse.collective_bytes(txt).items()}
+        res.coll_counts = hlo_parse.collective_counts(txt)
+        res.ok = True
+        if keep_hlo:
+            res.error = ""   # hlo returned separately
+            return res, (compiled, txt)
+        return res, compiled
+
+
+def run_cell(arch_id, shape_name, multi_pod, out_dir=None, **kw):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        res, _ = lower_cell(arch_id, shape_name, mesh, multi_pod, **kw)
+    except Exception:
+        res = CellResult(arch_id, shape_name,
+                         "2x16x16" if multi_pod else "16x16", ok=False,
+                         error=traceback.format_exc()[-2000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch_id}__{shape_name}__{res.mesh}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(dataclasses.asdict(res), f, indent=1)
+    status = "SKIP" if res.skipped else ("OK" if res.ok else "FAIL")
+    print(f"[{status}] {arch_id} × {shape_name} × {res.mesh} "
+          f"compile={res.compile_s:.1f}s flops={res.flops:.3g} "
+          f"coll={res.coll_bytes.get('total', 0):.3g}B "
+          f"peak={res.peak_bytes_per_dev / 1e9:.2f}GB/dev")
+    if res.error:
+        print(res.error)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--pex-method", default="direct")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs + smoke shapes (CI regression)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        shp_m = (2, 4, 4) if args.multi_pod else (4, 4)
+        axes = ("pod", "data", "model") if args.multi_pod else ("data", "model")
+        mesh = jax.make_mesh(shp_m, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        archs = sorted(registry.ARCHS) if not args.arch else [args.arch]
+        fails = 0
+        for arch in archs:
+            cfg = registry.get(arch).smoke()
+            for shp in ("smoke_train", "smoke_prefill", "smoke_decode"):
+                try:
+                    res, _ = lower_cell(arch, shp, mesh, args.multi_pod,
+                                        cfg_override=cfg)
+                    print(f"[{'OK' if res.ok else 'FAIL'}] {arch} × {shp}")
+                    fails += 0 if res.ok else 1
+                except Exception as e:
+                    print(f"[FAIL] {arch} × {shp}: {e}")
+                    fails += 1
+        raise SystemExit(1 if fails else 0)
+
+    archs = sorted(registry.ARCHS) if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shp in shapes:
+                results.append(run_cell(arch, shp, mp, out_dir=args.out,
+                                        pex_method=args.pex_method))
+    n_ok = sum(r.ok for r in results)
+    n_skip = sum(r.skipped for r in results)
+    print(f"\n{n_ok}/{len(results)} cells OK ({n_skip} documented skips)")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: compile tagged probe variants of a cell and
+report the roofline-term deltas vs the recorded baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch deepseek-v2-236b \
+        --shape train_4k --variant moe_local_dispatch
+
+Variants (composable with +):
+  baseline            — paper-faithful: pex=direct, full remat, global MoE scatter
+  pex_off             — instrumentation disabled (reference floor)
+  pex_gram            — adaptive/gram stat estimator
+  pex_factorized      — paper §4 formula applied mechanically (upper bound!)
+  moe_local_dispatch  — GShard-style grouped dispatch (G=16, data-aligned)
+  remat_dots          — checkpoint policy: save dot outputs
+  no_remat            — no activation checkpointing
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs.common import SHAPES
+from repro.launch.probes import run_probes
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+
+
+def apply_variant(cfg, name: str):
+    if name in ("baseline", "pex_off", "pex_gram", "pex_factorized"):
+        return cfg
+    if name == "moe_local_dispatch":
+        assert getattr(cfg, "moe", None) is not None
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=16))
+    if name == "remat_dots":
+        return dataclasses.replace(cfg, remat_policy="dots")
+    if name == "no_remat":
+        return dataclasses.replace(cfg, remat=False)
+    if name == "moe_cf1":
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True,
+                    help="'+'-joined list, e.g. moe_local_dispatch+pex_gram")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    names = args.variant.split("+")
+    pex_on = "pex_off" not in names
+    pex_method = "direct"
+    if "pex_gram" in names:
+        pex_method = "auto"
+    if "pex_factorized" in names:
+        pex_method = "factorized"
+
+    aspec = registry.get(args.arch)
+    base_probes = aspec.probes()
+    cfgs = []
+    for p in base_probes:
+        for n in names:
+            p = apply_variant(p, n)
+        cfgs.append(p)
+
+    # monkey-patch the probe list for this run
+    patched = dataclasses.replace(aspec, probes=lambda: cfgs)
+    registry.ARCHS[args.arch] = patched
+    mesh = make_production_mesh(multi_pod=False)
+    tag = args.variant.replace("+", "_")
+    d = run_probes(args.arch, args.shape, mesh, pex_method=pex_method,
+                   pex_on=pex_on, out_dir=args.out, tag=tag)
+    base_path = f"experiments/roofline/{args.arch}__{args.shape}.json"
+    if os.path.exists(base_path) and d is not None:
+        b = json.load(open(base_path))
+        print("\nΔ vs baseline:")
+        for k in ("t_compute", "t_memory", "t_collective"):
+            print(f"  {k:13s} {b[k] * 1e3:12.1f} → {d[k] * 1e3:12.1f} ms  "
+                  f"({d[k] / max(b[k], 1e-12):.3f}x)")
+        print(f"  useful_ratio  {b['useful_ratio']:.3f} → {d['useful_ratio']:.3f}")
+        print(f"  mfu_bound     {b['mfu_bound']:.4f} → {d['mfu_bound']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

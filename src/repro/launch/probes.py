@@ -1,0 +1,115 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline probe runner (§Roofline inputs).
+
+Compiles each arch's 1–3-layer *unrolled* probe variants at full width ×
+full shape × single-pod mesh, extrapolates FLOPs/bytes/collective-bytes
+to the full depth (exact for homogeneous stacks), joins with the
+full-program dry-run memory analysis, and writes
+experiments/roofline/<arch>__<shape>.json.
+
+    PYTHONPATH=src python -m repro.launch.probes --all
+    PYTHONPATH=src python -m repro.launch.probes --arch qwen2-7b --shape train_4k --pex-method gram
+"""
+
+import argparse
+import dataclasses
+import json
+import traceback
+
+from repro.configs.common import SHAPES
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.roofline.analysis import (build_roofline, mfu, model_flops,
+                                     n_active_for, probe_metrics)
+
+
+def run_probes(arch_id: str, shape_name: str, mesh, *,
+               pex_method: str = "direct", pex_on: bool = True,
+               out_dir: str = "experiments/roofline",
+               dryrun_dir: str = "experiments/dryrun",
+               tag: str = "", verbose: bool = True):
+    aspec = registry.get(arch_id)
+    if shape_name in aspec.skip_shapes:
+        if verbose:
+            print(f"[SKIP] {arch_id} × {shape_name}: {aspec.skip_reason}")
+        return None
+    shape = SHAPES[shape_name]
+    metrics = []
+    for i, pcfg in enumerate(aspec.probes()):
+        res, _ = lower_cell(arch_id, shape_name, mesh, False,
+                            cfg_override=pcfg, pex_method=pex_method,
+                            pex_on=pex_on, donate=False)
+        assert res.ok, res.error
+        metrics.append(probe_metrics(res))
+        if verbose:
+            print(f"  probe{i} ({pcfg.name if hasattr(pcfg, 'name') else i}):"
+                  f" flops={res.flops:.3g} coll={res.coll_bytes.get('total', 0):.3g}")
+    full = aspec.combine(metrics)
+
+    # memory + n_params from the full-program dry-run cell
+    cell_path = os.path.join(dryrun_dir,
+                             f"{arch_id}__{shape_name}__16x16.json")
+    peak = 0.0
+    n_total = 0.0
+    if os.path.exists(cell_path):
+        cell = json.load(open(cell_path))
+        peak = cell["peak_bytes_per_dev"]
+        n_total = cell["n_params"]
+    cfg = aspec.full()
+    n_act = n_active_for(arch_id, n_total, cfg)
+    r = build_roofline(arch_id, shape_name, "16x16", full,
+                       model_flops(shape, n_act), peak)
+    d = dataclasses.asdict(r)
+    d["mfu_bound"] = mfu(r)
+    d["n_active"] = n_act
+    d["coll_breakdown"] = {k: full[k] for k in
+                           ("coll_ar", "coll_ag", "coll_rs", "coll_a2a",
+                            "coll_cp")}
+    d["pex_method"] = pex_method
+    d["pex_on"] = pex_on
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    with open(os.path.join(out_dir,
+                           f"{arch_id}__{shape_name}{suffix}.json"), "w") as f:
+        json.dump(d, f, indent=1)
+    if verbose:
+        print(f"[ROOF] {arch_id} × {shape_name}: "
+              f"compute={r.t_compute * 1e3:.2f}ms memory={r.t_memory * 1e3:.2f}ms "
+              f"coll={r.t_collective * 1e3:.2f}ms → {r.bottleneck}-bound; "
+              f"useful={r.useful_ratio:.2f} mfu_bound={d['mfu_bound']:.2f}")
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--pex-method", default="direct")
+    ap.add_argument("--no-pex", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    archs = sorted(registry.ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    failures = 0
+    for arch in archs:
+        for shp in shapes:
+            try:
+                run_probes(arch, shp, mesh, pex_method=args.pex_method,
+                           pex_on=not args.no_pex, tag=args.tag,
+                           out_dir=args.out)
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {arch} × {shp}\n{traceback.format_exc()[-1500:]}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Training launcher: --arch <id> [--smoke] with pex step modes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --smoke --mode clip --steps 50 --ckpt-dir /tmp/ck
+
+Full-size configs target the production mesh (run under a real TPU
+runtime with the same flags); --smoke runs the reduced config on
+whatever devices exist.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.core.taps import PexSpec
+from repro.data.pipeline import DataConfig
+from repro.models import registry
+from repro.nn.param import count_params, unbox
+from repro.optim import adamw
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", default="norms",
+                    choices=["plain", "norms", "clip", "importance"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--clip-norm", type=float, default=1.0)
+    ap.add_argument("--pex-method", default="auto")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    aspec = registry.get(args.arch)
+    cfg = aspec.smoke() if args.smoke else aspec.full()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(args.seed), cfg))
+    print(f"{args.arch}: {count_params(params) / 1e6:.1f}M params, "
+          f"mode={args.mode}")
+
+    pex = PexSpec(enabled=args.mode != "plain", method=args.pex_method)
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    trainer = Trainer(
+        loss_fn, params, pex,
+        adamw.AdamWConfig(lr=args.lr,
+                          schedule=linear_warmup_cosine(10, args.steps)),
+        TrainConfig(mode=args.mode, clip_norm=args.clip_norm,
+                    steps=args.steps, ckpt_dir=args.ckpt_dir, seed=args.seed),
+        DataConfig(vocab=cfg.vocab, seq=args.seq, global_batch=args.batch,
+                   seed=args.seed))
+    trainer.train(resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

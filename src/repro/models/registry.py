@@ -1,0 +1,153 @@
+"""Arch registry: --arch <id> resolves here.
+
+Binds each ArchSpec to its model family's entry points and builds
+ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import SHAPES, ArchSpec, ShapeSpec, base_rules
+from repro.core.taps import PexSpec
+from repro.models import rwkv6, seamless, transformer, zamba2
+
+from repro.configs import (deepseek_v2_236b, gemma2_9b, llama3_2_1b,
+                           minitron_4b, phi35_moe, qwen2_7b, qwen2_vl_7b,
+                           rwkv6_3b, seamless_m4t_medium, zamba2_7b)
+
+ARCHS: Dict[str, ArchSpec] = {
+    s.arch_id: s for s in [
+        qwen2_vl_7b.SPEC, zamba2_7b.SPEC, llama3_2_1b.SPEC, qwen2_7b.SPEC,
+        minitron_4b.SPEC, gemma2_9b.SPEC, rwkv6_3b.SPEC,
+        seamless_m4t_medium.SPEC, deepseek_v2_236b.SPEC, phi35_moe.SPEC,
+    ]
+}
+
+_FAMILIES = {
+    "transformer": transformer,
+    "zamba2": zamba2,
+    "rwkv6": rwkv6,
+    "seamless": seamless,
+}
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def family_module(spec: ArchSpec):
+    return _FAMILIES[spec.family]
+
+
+def runnable(arch_id: str, shape_name: str) -> bool:
+    return shape_name not in get(arch_id).skip_shapes
+
+
+def make_loss_fn(spec: ArchSpec, cfg, pex: PexSpec):
+    mod = family_module(spec)
+
+    def loss_fn(params, acc, batch):
+        return mod.loss_fn(params, acc, batch, cfg=cfg, spec=pex)
+    return loss_fn
+
+
+def make_forward_tokens(spec: ArchSpec, cfg):
+    mod = family_module(spec)
+
+    def fwd(params, batch, caches, cache_index):
+        return mod.forward_tokens(params, batch, caches, cache_index, cfg=cfg)
+    return fwd
+
+
+def serving_config(spec: ArchSpec, cfg, shape: ShapeSpec):
+    """Configure cache lengths for a serve shape."""
+    kw = {"max_cache_len": shape.seq, "remat": False}
+    if spec.family == "seamless":
+        kw["max_src_len"] = shape.seq
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — no allocation; the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def train_batch_specs(spec: ArchSpec, cfg, shape: ShapeSpec):
+    b, s = shape.batch, shape.seq
+    batch = {"ids": _i32(b, s), "labels": _i32(b, s)}
+    dt = cfg.jdtype
+    if spec.family == "seamless":
+        batch["src_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    if getattr(cfg, "vl_inputs", False):
+        batch["vis_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+        batch["vis_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        batch["positions"] = _i32(b, 3, s)
+    return batch
+
+
+def serve_batch_specs(spec: ArchSpec, cfg, shape: ShapeSpec, *,
+                      prefill: bool):
+    b = shape.batch
+    s = shape.seq if prefill else 1
+    batch = {"ids": _i32(b, s)}
+    dt = cfg.jdtype
+    if spec.family == "seamless" and prefill:
+        batch["src_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    if getattr(cfg, "vl_inputs", False) and prefill:
+        batch["vis_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+        batch["vis_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        batch["positions"] = _i32(b, 3, s)
+    return batch
+
+
+def cache_specs(spec: ArchSpec, cfg, shape: ShapeSpec):
+    mod = family_module(spec)
+    return jax.eval_shape(lambda: mod.init_caches(shape.batch, cfg))
+
+
+def make_train_batch(spec: ArchSpec, cfg, shape: ShapeSpec, rng_seed=0):
+    """Concrete synthetic batch matching train_batch_specs (smoke/bench)."""
+    import numpy as np
+    rng = np.random.default_rng(rng_seed)
+    b, s = shape.batch, shape.seq
+    batch = {
+        "ids": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    dt = cfg.jdtype
+    if spec.family == "seamless":
+        batch["src_frames"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)) * 0.1, dt)
+    if getattr(cfg, "vl_inputs", False):
+        batch["vis_embeds"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)) * 0.1, dt)
+        vm = np.zeros((b, s), bool)
+        vm[:, : s // 2] = True  # first half of the stream is visual
+        batch["vis_mask"] = jnp.asarray(vm)
+        pos = np.broadcast_to(np.arange(s), (b, 3, s)).copy()
+        batch["positions"] = jnp.asarray(pos, jnp.int32)
+    return batch
+
+
+def rules_for(spec: ArchSpec, cfg, shape: ShapeSpec, multi_pod: bool,
+              model_size: int = 16, data_size: int = 16) -> dict:
+    """Logical→mesh rules for one dry-run cell."""
+    kv_shardable = True
+    if spec.family == "transformer" and cfg.attn is not None:
+        kv_shardable = cfg.attn.n_kv % model_size == 0
+    if spec.family == "zamba2":
+        kv_shardable = cfg.kv_heads % model_size == 0
+    dp = data_size * (2 if multi_pod else 1)
+    batch_shard = shape.batch % dp == 0
+    return base_rules(multi_pod, kv_shardable=kv_shardable,
+                      batch_shard=batch_shard,
+                      seq_to_data=(shape.name == "long_500k"))

@@ -1,0 +1,140 @@
+"""RWKV6-3B ("Finch"): attention-free LM; 32 blocks of tmix + cmix.
+
+Decode carries O(1) state (wkv matrix + token-shift rows) — the
+`long_500k` cell costs the same per token as `decode_32k`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.nn import param as pm
+from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
+                                lm_head, per_example_xent)
+from repro.nn.norms import init_layernorm, layernorm
+from repro.nn.rwkv import (RwkvCfg, init_rwkv_cmix, init_rwkv_state,
+                           init_rwkv_tmix, rwkv_cmix, rwkv_tmix)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rwkv6Config:
+    name: str
+    n_layers: int = 32
+    d_model: int = 2560
+    vocab: int = 65536
+    d_ff: int = 8960
+    rms_eps: float = 1e-5
+    dtype: str = "float32"
+    remat: bool = True
+    stack_mode: str = "scan"
+    max_cache_len: int = 0   # unused: O(1) state
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def rwkv_cfg(self) -> RwkvCfg:
+        return RwkvCfg(self.d_model, self.d_ff)
+
+    @property
+    def vocab_cfg(self) -> VocabCfg:
+        return VocabCfg(self.vocab, self.d_model)
+
+
+def _init_block(key, cfg: Rwkv6Config):
+    ks = jax.random.split(key, 2)
+    dt = cfg.jdtype
+    return {
+        "ln1": init_layernorm(cfg.d_model, dtype=dt),
+        "tmix": init_rwkv_tmix(ks[0], cfg.rwkv_cfg, dtype=dt),
+        "ln2": init_layernorm(cfg.d_model, dtype=dt),
+        "cmix": init_rwkv_cmix(ks[1], cfg.rwkv_cfg, dtype=dt),
+    }
+
+
+def init(key, cfg: Rwkv6Config):
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    dt = cfg.jdtype
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab_cfg, dtype=dt),
+        "ln_in": init_layernorm(cfg.d_model, dtype=dt),
+        "head": init_lm_head(ks[1], cfg.vocab_cfg, dtype=dt),
+        "ln_f": init_layernorm(cfg.d_model, dtype=dt),
+    }
+    blocks = [_init_block(ks[4 + i], cfg) for i in range(cfg.n_layers)]
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda *xs: pm.Boxed(jnp.stack([x.value for x in xs]),
+                             (None,) + xs[0].axes),
+        *blocks, is_leaf=pm.is_boxed)
+    return params
+
+
+def _block(p, x, acc, cfg: Rwkv6Config, spec: PexSpec, state=None):
+    h, acc = layernorm(p["ln1"], x, acc, spec=spec)
+    y, acc, state = rwkv_tmix(p["tmix"], h, acc, cfg=cfg.rwkv_cfg, spec=spec,
+                              state=state)
+    x = x + y
+    h, acc = layernorm(p["ln2"], x, acc, spec=spec)
+    y, acc, state = rwkv_cmix(p["cmix"], h, acc, cfg=cfg.rwkv_cfg, spec=spec,
+                              state=state)
+    return x + y, acc, state
+
+
+def _run(params, x, acc, cfg: Rwkv6Config, spec: PexSpec, states=None):
+    def body(carry, xs):
+        x, acc = carry
+        p_i, st_i = xs
+        x, acc, st_i = _block(p_i, x, acc, cfg, spec, state=st_i)
+        return (x, acc), st_i
+
+    body_fn = jax.checkpoint(body) if (cfg.remat and states is None) else body
+    if cfg.stack_mode == "scan":
+        (x, acc), states = jax.lax.scan(body_fn, (x, acc),
+                                        (params["blocks"], states))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree_util.tree_map(lambda v: v[i], params["blocks"])
+            st_i = None if states is None else \
+                jax.tree_util.tree_map(lambda v: v[i], states)
+            (x, acc), st_i = body_fn((x, acc), (p_i, st_i))
+            outs.append(st_i)
+        states = None if outs[0] is None else \
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    return x, acc, states
+
+
+def loss_fn(params, acc, batch, *, cfg: Rwkv6Config, spec: PexSpec):
+    x, acc = embed(params["embed"], batch["ids"], acc,
+                   cfg=cfg.vocab_cfg, spec=spec)
+    x, acc = layernorm(params["ln_in"], x, acc, spec=spec)
+    x, acc, _ = _run(params, x, acc, cfg, spec)
+    x, acc = layernorm(params["ln_f"], x, acc, spec=spec)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    loss_vec = per_example_xent(logits, batch["labels"],
+                                batch.get("label_mask"))
+    return loss_vec, acc, {}
+
+
+def init_caches(batch: int, cfg: Rwkv6Config):
+    one = init_rwkv_state(batch, cfg.rwkv_cfg, dtype=cfg.jdtype)
+    return jax.tree_util.tree_map(
+        lambda v: jnp.zeros((cfg.n_layers,) + v.shape, v.dtype), one)
+
+
+def forward_tokens(params, batch, caches, cache_index, *, cfg: Rwkv6Config):
+    spec = taps.DISABLED
+    b = batch["ids"].shape[0]
+    acc = taps.init_acc(b, spec)
+    x, acc = embed(params["embed"], batch["ids"], acc,
+                   cfg=cfg.vocab_cfg, spec=spec)
+    x, acc = layernorm(params["ln_in"], x, acc, spec=spec)
+    x, acc, caches = _run(params, x, acc, cfg, spec, states=caches)
+    x, acc = layernorm(params["ln_f"], x, acc, spec=spec)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    return logits, caches

@@ -1,0 +1,218 @@
+"""SeamlessM4T-medium backbone: transformer encoder–decoder.
+
+The audio frontend is a stub per the assignment: ``input_specs``
+provides precomputed frame embeddings (B, S_src, d_model). The decoder
+trains with teacher forcing; decode caches both self-attention KV and
+the precomputed cross-attention KV of the encoder memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.nn import param as pm
+from repro.nn.attention import AttnCfg, attention, init_attention, init_kv_cache
+from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
+                                lm_head, per_example_xent)
+from repro.nn.linear import linear
+from repro.nn.mlp import MlpCfg, init_mlp, mlp
+from repro.nn.norms import init_layernorm, layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class SeamlessConfig:
+    name: str
+    n_enc: int = 12
+    n_dec: int = 12
+    d_model: int = 1024
+    n_heads: int = 16
+    kv_heads: int = 16
+    d_ff: int = 4096
+    vocab: int = 256206
+    dtype: str = "float32"
+    remat: bool = True
+    stack_mode: str = "scan"
+    max_cache_len: int = 0
+    max_src_len: int = 0
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_enc + self.n_dec
+
+    def attn_cfg(self, *, cross: bool = False, causal: bool = True) -> AttnCfg:
+        return AttnCfg(d_model=self.d_model, n_heads=self.n_heads,
+                       n_kv=self.kv_heads,
+                       head_dim=self.d_model // self.n_heads,
+                       cross=cross, causal=causal)
+
+    @property
+    def vocab_cfg(self) -> VocabCfg:
+        return VocabCfg(self.vocab, self.d_model)
+
+
+def _init_enc_block(key, cfg: SeamlessConfig):
+    ks = jax.random.split(key, 2)
+    dt = cfg.jdtype
+    return {"ln1": init_layernorm(cfg.d_model, dtype=dt),
+            "attn": init_attention(ks[0], cfg.attn_cfg(causal=False), dtype=dt),
+            "ln2": init_layernorm(cfg.d_model, dtype=dt),
+            "mlp": init_mlp(ks[1], MlpCfg(cfg.d_model, cfg.d_ff, act="gelu",
+                                          gated=False), dtype=dt)}
+
+
+def _init_dec_block(key, cfg: SeamlessConfig):
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    return {"ln1": init_layernorm(cfg.d_model, dtype=dt),
+            "self": init_attention(ks[0], cfg.attn_cfg(), dtype=dt),
+            "ln_x": init_layernorm(cfg.d_model, dtype=dt),
+            "cross": init_attention(ks[1], cfg.attn_cfg(cross=True), dtype=dt),
+            "ln2": init_layernorm(cfg.d_model, dtype=dt),
+            "mlp": init_mlp(ks[2], MlpCfg(cfg.d_model, cfg.d_ff, act="gelu",
+                                          gated=False), dtype=dt)}
+
+
+def _stack(blocks):
+    return jax.tree_util.tree_map(
+        lambda *xs: pm.Boxed(jnp.stack([x.value for x in xs]),
+                             (None,) + xs[0].axes),
+        *blocks, is_leaf=pm.is_boxed)
+
+
+def init(key, cfg: SeamlessConfig):
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    dt = cfg.jdtype
+    return {
+        "embed": init_embedding(ks[0], cfg.vocab_cfg, dtype=dt),
+        "head": init_lm_head(ks[1], cfg.vocab_cfg, dtype=dt),
+        "ln_enc": init_layernorm(cfg.d_model, dtype=dt),
+        "ln_dec": init_layernorm(cfg.d_model, dtype=dt),
+        "enc": _stack([_init_enc_block(ks[4 + i], cfg)
+                       for i in range(cfg.n_enc)]),
+        "dec": _stack([_init_dec_block(ks[4 + cfg.n_enc + i], cfg)
+                       for i in range(cfg.n_dec)]),
+    }
+
+
+def _encode(params, frames, acc, cfg: SeamlessConfig, spec: PexSpec):
+    def body(carry, p_i):
+        x, acc = carry
+        h, acc = layernorm(p_i["ln1"], x, acc, spec=spec)
+        a, acc, _ = attention(p_i["attn"], h, acc,
+                              cfg=cfg.attn_cfg(causal=False), spec=spec)
+        x = x + a
+        h, acc = layernorm(p_i["ln2"], x, acc, spec=spec)
+        m, acc = mlp(p_i["mlp"], h, acc,
+                     cfg=MlpCfg(cfg.d_model, cfg.d_ff, act="gelu",
+                                gated=False), spec=spec)
+        return (x + m, acc), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat and spec.enabled else body
+    (x, acc), _ = jax.lax.scan(body_fn, (frames, acc), params["enc"])
+    x, acc = layernorm(params["ln_enc"], x, acc, spec=spec)
+    return x, acc
+
+
+def _dec_block(p_i, x, memory, acc, cfg: SeamlessConfig, spec: PexSpec,
+               self_cache=None, cross_cache=None, cache_index=None):
+    h, acc = layernorm(p_i["ln1"], x, acc, spec=spec)
+    a, acc, self_cache = attention(p_i["self"], h, acc, cfg=cfg.attn_cfg(),
+                                   spec=spec, cache=self_cache,
+                                   cache_index=cache_index)
+    x = x + a
+    h, acc = layernorm(p_i["ln_x"], x, acc, spec=spec)
+    a, acc, _ = attention(p_i["cross"], h, acc, cfg=cfg.attn_cfg(cross=True),
+                          spec=spec, memory=memory, cache=cross_cache)
+    x = x + a
+    h, acc = layernorm(p_i["ln2"], x, acc, spec=spec)
+    m, acc = mlp(p_i["mlp"], h, acc, cfg=MlpCfg(cfg.d_model, cfg.d_ff,
+                                                act="gelu", gated=False),
+                 spec=spec)
+    return x + m, acc, self_cache
+
+
+def loss_fn(params, acc, batch, *, cfg: SeamlessConfig, spec: PexSpec):
+    """batch: src_frames (B,S_src,d), ids/labels (B,S_tgt)."""
+    memory, acc = _encode(params, batch["src_frames"], acc, cfg, spec)
+    x, acc = embed(params["embed"], batch["ids"], acc,
+                   cfg=cfg.vocab_cfg, spec=spec)
+
+    def body(carry, p_i):
+        x, acc = carry
+        x, acc, _ = _dec_block(p_i, x, memory, acc, cfg, spec)
+        return (x, acc), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat and spec.enabled else body
+    (x, acc), _ = jax.lax.scan(body_fn, (x, acc), params["dec"])
+    x, acc = layernorm(params["ln_dec"], x, acc, spec=spec)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    loss_vec = per_example_xent(logits, batch["labels"],
+                                batch.get("label_mask"))
+    return loss_vec, acc, {}
+
+
+def init_caches(batch: int, cfg: SeamlessConfig):
+    dt = cfg.jdtype
+    self_one = init_kv_cache(batch, cfg.max_cache_len, cfg.attn_cfg(), dtype=dt)
+    cross_one = init_kv_cache(batch, cfg.max_src_len,
+                              cfg.attn_cfg(cross=True), dtype=dt)
+    stack = lambda one: jax.tree_util.tree_map(
+        lambda v: jnp.zeros((cfg.n_dec,) + v.shape, v.dtype), one)
+    return {"self": stack(self_one), "cross": stack(cross_one),
+            "memory": jnp.zeros((batch, cfg.max_src_len, cfg.d_model), dt)}
+
+
+def precompute_cross(params, memory, *, cfg: SeamlessConfig):
+    """Project encoder memory through every decoder layer's cross K/V."""
+    spec = taps.DISABLED
+    acc = taps.init_acc(memory.shape[0], spec)
+
+    def per_layer(p_i):
+        k, _ = linear(p_i["cross"]["wk"], memory, acc, spec=spec)
+        v, _ = linear(p_i["cross"]["wv"], memory, acc, spec=spec)
+        hkv = cfg.kv_heads
+        hd = cfg.d_model // cfg.n_heads
+        return {"k": k.reshape(k.shape[0], k.shape[1], hkv, hd),
+                "v": v.reshape(v.shape[0], v.shape[1], hkv, hd)}
+
+    return jax.vmap(per_layer)(
+        jax.tree_util.tree_map(lambda x: x, params["dec"]))
+
+
+def forward_tokens(params, batch, caches, cache_index, *, cfg: SeamlessConfig):
+    """Decode step(s): batch["ids"] (B,s). Encoder memory and cross K/V
+    come precomputed in `caches` (set up at prefill)."""
+    spec = taps.DISABLED
+    b = batch["ids"].shape[0]
+    acc = taps.init_acc(b, spec)
+
+    if "src_frames" in batch:  # prefill: encode + fill cross caches
+        memory, _ = _encode(params, batch["src_frames"], acc, cfg, spec)
+        caches = {**caches, "memory": memory,
+                  "cross": precompute_cross(params, memory, cfg=cfg)}
+
+    x, acc = embed(params["embed"], batch["ids"], acc,
+                   cfg=cfg.vocab_cfg, spec=spec)
+
+    def body(carry, xs):
+        x, acc = carry
+        p_i, sc_i, cc_i = xs
+        x, acc, sc_i = _dec_block(p_i, x, caches["memory"], acc, cfg, spec,
+                                  self_cache=sc_i, cross_cache=cc_i,
+                                  cache_index=cache_index)
+        return (x, acc), sc_i
+
+    (x, acc), new_self = jax.lax.scan(
+        body, (x, acc), (params["dec"], caches["self"], caches["cross"]))
+    x, acc = layernorm(params["ln_dec"], x, acc, spec=spec)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    return logits, {**caches, "self": new_self}

@@ -1,0 +1,276 @@
+"""Configurable decoder-only LM covering seven assigned architectures:
+llama3.2-1b, qwen2-7b, qwen2-vl-7b, minitron-4b, gemma2-9b,
+deepseek-v2-236b (MLA + MoE), phi3.5-moe.
+
+Layers with identical parameter shapes are stacked and run under
+``lax.scan`` (small HLO, fast pod-scale compiles); heterogeneous
+prefixes (deepseek's first dense layer) are unstacked. The per-example
+accumulator rides in the scan carry; each block is ``jax.checkpoint``ed
+for training. ``stack_mode='unroll'`` unrolls for the roofline cost
+probes (cost_analysis counts scan bodies once — see roofline/analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.dist.sharding import shard
+from repro.nn import param as pm
+from repro.nn.attention import AttnCfg, attention, init_attention, init_kv_cache
+from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
+                                lm_head, per_example_xent)
+from repro.nn.mla import MlaCfg, init_mla, init_mla_cache, mla_attention
+from repro.nn.mlp import MlpCfg, init_mlp, mlp
+from repro.nn.moe import MoeCfg, init_moe, moe
+from repro.nn.norms import init_rmsnorm, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    vocab: int
+    attn: Optional[AttnCfg] = None        # GQA family
+    mla: Optional[MlaCfg] = None          # deepseek
+    mlp: Optional[MlpCfg] = None          # dense FFN
+    moe: Optional[MoeCfg] = None          # MoE FFN
+    n_dense_prefix: int = 0               # deepseek: first k layers dense
+    dense_prefix_mlp: Optional[MlpCfg] = None
+    rms_eps: float = 1e-6
+    rms_plus_one: bool = False            # gemma (1+g)
+    post_norms: bool = False              # gemma2 sandwich norms
+    alt_local_global: bool = False        # gemma2 even layers local
+    logit_softcap: Optional[float] = None
+    scale_embeds: bool = False            # gemma ×√d
+    vl_inputs: bool = False               # qwen2-vl merged visual embeds
+    dtype: str = "float32"
+    remat: bool = True
+    remat_policy: str = "full"            # full | dots  (dots: save matmul
+                                          # outputs, recompute elementwise)
+    stack_mode: str = "scan"              # scan | unroll
+    max_cache_len: int = 0                # set by serve shapes
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def vocab_cfg(self) -> VocabCfg:
+        return VocabCfg(self.vocab, self.d_model,
+                        logit_softcap=self.logit_softcap,
+                        scale_by_sqrt_dim=self.scale_embeds)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_block(key, cfg: LMConfig, *, dense_mlp: bool):
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    p = {"ln_attn": init_rmsnorm(cfg.d_model, dtype=dt,
+                                 plus_one=cfg.rms_plus_one)}
+    if cfg.mla is not None:
+        p["attn"] = init_mla(ks[0], cfg.mla, dtype=dt)
+    else:
+        p["attn"] = init_attention(ks[0], cfg.attn, dtype=dt)
+    p["ln_mlp"] = init_rmsnorm(cfg.d_model, dtype=dt,
+                               plus_one=cfg.rms_plus_one)
+    if dense_mlp or cfg.moe is None:
+        mcfg = cfg.dense_prefix_mlp if dense_mlp and cfg.dense_prefix_mlp \
+            else cfg.mlp
+        p["mlp"] = init_mlp(ks[1], mcfg, dtype=dt)
+    else:
+        p["moe"] = init_moe(ks[1], cfg.moe, dtype=dt)
+    if cfg.post_norms:
+        p["ln_attn_post"] = init_rmsnorm(cfg.d_model, dtype=dt,
+                                         plus_one=cfg.rms_plus_one)
+        p["ln_mlp_post"] = init_rmsnorm(cfg.d_model, dtype=dt,
+                                        plus_one=cfg.rms_plus_one)
+    return p
+
+
+def init(key, cfg: LMConfig):
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    dt = cfg.jdtype
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab_cfg, dtype=dt),
+        "head": init_lm_head(ks[1], cfg.vocab_cfg, dtype=dt),
+        "ln_f": init_rmsnorm(cfg.d_model, dtype=dt, plus_one=cfg.rms_plus_one),
+    }
+    n_pre = cfg.n_dense_prefix
+    if n_pre:
+        params["prefix"] = [
+            _init_block(ks[4 + i], cfg, dense_mlp=True) for i in range(n_pre)]
+    stacked = [_init_block(ks[4 + n_pre + i], cfg, dense_mlp=False)
+               for i in range(cfg.n_layers - n_pre)]
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda *xs: pm.Boxed(jnp.stack([x.value for x in xs]),
+                             (None,) + xs[0].axes),
+        *stacked, is_leaf=pm.is_boxed)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _block(p, x, acc, cfg: LMConfig, spec: PexSpec, *, positions,
+           cache=None, cache_index=None, local_flag=None, dense_mlp=False):
+    h, acc = rmsnorm(p["ln_attn"], x, acc, spec=spec, eps=cfg.rms_eps,
+                     plus_one=cfg.rms_plus_one)
+    if cfg.mla is not None:
+        a, acc, cache = mla_attention(p["attn"], h, acc, cfg=cfg.mla,
+                                      spec=spec, positions=positions,
+                                      cache=cache, cache_index=cache_index)
+    else:
+        a, acc, cache = attention(p["attn"], h, acc, cfg=cfg.attn, spec=spec,
+                                  positions=positions, cache=cache,
+                                  cache_index=cache_index,
+                                  local_flag=local_flag)
+    if cfg.post_norms:
+        a, acc = rmsnorm(p["ln_attn_post"], a, acc, spec=spec,
+                         eps=cfg.rms_eps, plus_one=cfg.rms_plus_one)
+    x = x + a
+    h, acc = rmsnorm(p["ln_mlp"], x, acc, spec=spec, eps=cfg.rms_eps,
+                     plus_one=cfg.rms_plus_one)
+    if "moe" in p and not dense_mlp:
+        m, acc = moe(p["moe"], h, acc, cfg=cfg.moe, spec=spec)
+    else:
+        mcfg = cfg.dense_prefix_mlp if dense_mlp and cfg.dense_prefix_mlp \
+            else cfg.mlp
+        m, acc = mlp(p["mlp"], h, acc, cfg=mcfg, spec=spec)
+    if cfg.post_norms:
+        m, acc = rmsnorm(p["ln_mlp_post"], m, acc, spec=spec,
+                         eps=cfg.rms_eps, plus_one=cfg.rms_plus_one)
+    return x + m, acc, cache
+
+
+def _run_stack(params, x, acc, cfg: LMConfig, spec: PexSpec, *, positions,
+               caches=None, cache_index=None):
+    """Apply prefix blocks then the scanned/unrolled homogeneous stack.
+    caches: None (train) or dict {"prefix": [..], "blocks": stacked-pytree}."""
+    n_pre = cfg.n_dense_prefix
+    new_caches = {"prefix": [], "blocks": None} if caches is not None else None
+
+    for i in range(n_pre):
+        c = caches["prefix"][i] if caches is not None else None
+        x, acc, c = _block(params["prefix"][i], x, acc, cfg, spec,
+                           positions=positions, cache=c,
+                           cache_index=cache_index, dense_mlp=True)
+        if caches is not None:
+            new_caches["prefix"].append(c)
+
+    n_stack = cfg.n_layers - n_pre
+
+    def body(carry, xs):
+        x, acc = carry
+        p_i, cache_i, idx = xs
+        lf = (idx % 2 == 0) if cfg.alt_local_global else None
+        x, acc, cache_i = _block(p_i, x, acc, cfg, spec, positions=positions,
+                                 cache=cache_i, cache_index=cache_index,
+                                 local_flag=lf)
+        return (x, acc), cache_i
+
+    if cfg.remat and caches is None:
+        policy = None if cfg.remat_policy == "full" else \
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body_fn = jax.checkpoint(body, policy=policy)
+    else:
+        body_fn = body
+    idxs = jnp.arange(n_stack)
+    blk_caches = caches["blocks"] if caches is not None else None
+
+    if cfg.stack_mode == "scan":
+        (x, acc), out_caches = jax.lax.scan(
+            body_fn, (x, acc), (params["blocks"], blk_caches, idxs))
+    else:
+        out_list = []
+        for i in range(n_stack):
+            p_i = jax.tree_util.tree_map(lambda v: v[i], params["blocks"])
+            c_i = None if blk_caches is None else \
+                jax.tree_util.tree_map(lambda v: v[i], blk_caches)
+            (x, acc), c_i = body_fn((x, acc), (p_i, c_i, idxs[i]))
+            out_list.append(c_i)
+        out_caches = None
+        if caches is not None:
+            out_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *out_list)
+    if caches is not None:
+        new_caches["blocks"] = out_caches
+    return x, acc, new_caches
+
+
+def _inputs_to_embeds(params, batch, acc, cfg: LMConfig, spec: PexSpec):
+    x, acc = embed(params["embed"], batch["ids"], acc,
+                   cfg=cfg.vocab_cfg, spec=spec)
+    if cfg.vl_inputs and "vis_embeds" in batch:
+        # merged multimodal stream: frontend (stub) supplies patch embeds
+        x = jnp.where(batch["vis_mask"][..., None], batch["vis_embeds"], x)
+    return x, acc
+
+
+def _positions(batch, cfg: LMConfig, s: int):
+    if cfg.attn is not None and cfg.attn.mrope_sections is not None:
+        pos = batch.get("positions")            # (B,3,S) from the VL stub
+        return None if pos is None else jnp.moveaxis(pos, 1, 0)  # → (3,B,S)
+    return None                                 # default arange
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def loss_fn(params, acc, batch, *, cfg: LMConfig, spec: PexSpec):
+    """Canonical instrumented loss: (loss_vec, acc, aux)."""
+    ids = batch["ids"]
+    b, s = ids.shape
+    x, acc = _inputs_to_embeds(params, batch, acc, cfg, spec)
+    x, acc, _ = _run_stack(params, x, acc, cfg, spec,
+                           positions=_positions(batch, cfg, s))
+    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps,
+                     plus_one=cfg.rms_plus_one)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    loss_vec = per_example_xent(logits, batch["labels"],
+                                batch.get("label_mask"))
+    return loss_vec, acc, {}
+
+
+def init_caches(batch: int, cfg: LMConfig):
+    """Decode caches for every layer (stacked to mirror params)."""
+    dt = cfg.jdtype
+    n_pre = cfg.n_dense_prefix
+    mk = (lambda: init_mla_cache(batch, cfg.max_cache_len, cfg.mla, dtype=dt)) \
+        if cfg.mla is not None else \
+        (lambda: init_kv_cache(batch, cfg.max_cache_len, cfg.attn, dtype=dt))
+    prefix = [mk() for _ in range(n_pre)]
+    one = mk()
+    n_stack = cfg.n_layers - n_pre
+    blocks = jax.tree_util.tree_map(
+        lambda v: jnp.zeros((n_stack,) + v.shape, v.dtype), one)
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def forward_tokens(params, batch, caches, cache_index, *, cfg: LMConfig):
+    """Prefill or decode: embeds tokens, runs the stack with caches,
+    returns (logits, new_caches). Uninstrumented (serving)."""
+    spec = taps.DISABLED
+    ids = batch["ids"]
+    b, s = ids.shape
+    acc = taps.init_acc(b, spec)
+    x, acc = _inputs_to_embeds(params, batch, acc, cfg, spec)
+    pos = _positions(batch, cfg, s)
+    if pos is None and cache_index is not None:
+        pos = (cache_index + jnp.arange(s))[None]
+    x, acc, caches = _run_stack(params, x, acc, cfg, spec, positions=pos,
+                                caches=caches, cache_index=cache_index)
+    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps,
+                     plus_one=cfg.rms_plus_one)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    return logits, caches

@@ -1,0 +1,240 @@
+"""Zamba2-7B: Mamba2 backbone + one *shared* full-attention block applied
+every `share_every` layers on concat(h, h⁰) (the original embeddings).
+
+81 mamba blocks = 13 groups of 6 (shared block between groups) + 3 tail
+blocks. The mamba stack runs as nested scans (groups × 6); the shared
+block's params are closed over (true weight sharing).
+
+Pex scope: mamba blocks are fully tapped. The shared block's params are
+reused 13× per forward — the rank-structure the paper's trick exploits
+does not factor across re-uses (cross-use Gram terms), so the shared
+block is *excluded* from the accumulator (spec→DISABLED inside) and
+from the per-example norm scope. Recorded in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.nn import param as pm
+from repro.nn.attention import AttnCfg, attention, init_attention, init_kv_cache
+from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
+                                lm_head, per_example_xent)
+from repro.nn.mlp import MlpCfg, init_mlp, mlp
+from repro.nn.norms import init_rmsnorm, rmsnorm
+from repro.nn.ssm import SsmCfg, init_ssm, init_ssm_state, ssm
+
+
+@dataclasses.dataclass(frozen=True)
+class Zamba2Config:
+    name: str
+    n_layers: int = 81
+    d_model: int = 3584
+    vocab: int = 32000
+    d_ff: int = 14336
+    n_heads: int = 32
+    kv_heads: int = 32
+    ssm: SsmCfg = dataclasses.field(
+        default_factory=lambda: SsmCfg(d_model=3584, d_state=64))
+    share_every: int = 6
+    rms_eps: float = 1e-5
+    dtype: str = "float32"
+    remat: bool = True
+    stack_mode: str = "scan"
+    max_cache_len: int = 0
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.share_every
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers - self.n_groups * self.share_every
+
+    @property
+    def n_shared_uses(self) -> int:
+        return self.n_groups
+
+    @property
+    def attn_cfg(self) -> AttnCfg:
+        # attention over concat(h, h0): 2·d_model, out back to d_model
+        return AttnCfg(d_model=2 * self.d_model, n_heads=self.n_heads,
+                       n_kv=self.kv_heads, head_dim=2 * self.d_model // self.n_heads,
+                       d_out=self.d_model, rope_theta=10000.0)
+
+    @property
+    def vocab_cfg(self) -> VocabCfg:
+        return VocabCfg(self.vocab, self.d_model)
+
+
+def _init_mamba_block(key, cfg: Zamba2Config):
+    ks = jax.random.split(key, 2)
+    dt = cfg.jdtype
+    return {"ln": init_rmsnorm(cfg.d_model, dtype=dt),
+            "ssm": init_ssm(ks[0], cfg.ssm, dtype=dt)}
+
+
+def init(key, cfg: Zamba2Config):
+    ks = jax.random.split(key, cfg.n_layers + 6)
+    dt = cfg.jdtype
+    params = {
+        "embed": init_embedding(ks[0], cfg.vocab_cfg, dtype=dt),
+        "head": init_lm_head(ks[1], cfg.vocab_cfg, dtype=dt),
+        "ln_f": init_rmsnorm(cfg.d_model, dtype=dt),
+        "shared": {
+            "ln": init_rmsnorm(2 * cfg.d_model, dtype=dt),
+            "attn": init_attention(ks[2], cfg.attn_cfg, dtype=dt),
+            "ln_mlp": init_rmsnorm(cfg.d_model, dtype=dt),
+            "mlp": init_mlp(ks[3], MlpCfg(cfg.d_model, cfg.d_ff), dtype=dt),
+        },
+    }
+    blocks = [_init_mamba_block(ks[6 + i], cfg) for i in range(cfg.n_layers)]
+    n_grouped = cfg.n_groups * cfg.share_every
+    grouped = blocks[:n_grouped]
+    params["blocks"] = jax.tree_util.tree_map(
+        lambda *xs: pm.Boxed(
+            jnp.stack([x.value for x in xs]).reshape(
+                (cfg.n_groups, cfg.share_every) + xs[0].value.shape),
+            (None, None) + xs[0].axes),
+        *grouped, is_leaf=pm.is_boxed)
+    if cfg.n_tail:
+        params["tail"] = jax.tree_util.tree_map(
+            lambda *xs: pm.Boxed(jnp.stack([x.value for x in xs]),
+                                 (None,) + xs[0].axes),
+            *blocks[n_grouped:], is_leaf=pm.is_boxed)
+    return params
+
+
+def _mamba_block(p, x, acc, cfg: Zamba2Config, spec: PexSpec, state=None):
+    h, acc = rmsnorm(p["ln"], x, acc, spec=spec, eps=cfg.rms_eps)
+    y, acc, state = ssm(p["ssm"], h, acc, cfg=cfg.ssm, spec=spec, state=state)
+    return x + y, acc, state
+
+
+def _shared_block(p, x, x0, cfg: Zamba2Config, *, cache=None,
+                  cache_index=None):
+    """Shared attention+MLP on concat(h, h0); pex-excluded (DISABLED)."""
+    spec = taps.DISABLED
+    acc = taps.init_acc(x.shape[0], spec)
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h, acc = rmsnorm(p["ln"], cat, acc, spec=spec, eps=cfg.rms_eps)
+    a, acc, cache = attention(p["attn"], h, acc, cfg=cfg.attn_cfg, spec=spec,
+                              cache=cache, cache_index=cache_index)
+    x = x + a
+    h, acc = rmsnorm(p["ln_mlp"], x, acc, spec=spec, eps=cfg.rms_eps)
+    m, acc = mlp(p["mlp"], h, acc, cfg=MlpCfg(cfg.d_model, cfg.d_ff),
+                 spec=spec)
+    return x + m, cache
+
+
+def _run(params, x, acc, cfg: Zamba2Config, spec: PexSpec, *,
+         states=None, shared_caches=None, cache_index=None):
+    """states: {"blocks": stacked (G,K,...) ssm states, "tail": (T,...)} or
+    None (training — fresh zero states are implicit in nn.ssm)."""
+    x0 = x
+    new_shared = [] if shared_caches is not None else None
+
+    def inner(carry, xs):
+        x, acc = carry
+        p_i, st_i = xs
+        x, acc, st_i = _mamba_block(p_i, x, acc, cfg, spec, state=st_i)
+        return (x, acc), st_i
+
+    inner_fn = jax.checkpoint(inner) if (cfg.remat and states is None) else inner
+
+    def group(carry, xs):
+        x, acc = carry
+        p_g, st_g = xs
+        (x, acc), st_g = jax.lax.scan(inner_fn, (x, acc), (p_g, st_g))
+        return (x, acc), st_g
+
+    new_states = {"blocks": None, "tail": None}
+    if cfg.stack_mode == "scan" and shared_caches is None and states is None:
+        # training: shared block interleaves via python loop over groups,
+        # each group's 6 mamba blocks scanned
+        for g in range(cfg.n_groups):
+            p_g = jax.tree_util.tree_map(lambda v: v[g], params["blocks"])
+            (x, acc), _ = jax.lax.scan(inner_fn, (x, acc), (p_g, None))
+            x, _ = _shared_block(params["shared"], x, x0, cfg)
+        if cfg.n_tail:
+            (x, acc), _ = jax.lax.scan(inner_fn, (x, acc),
+                                       (params["tail"], None))
+    else:
+        # serving (or unroll): python loop, explicit states/caches
+        for g in range(cfg.n_groups):
+            p_g = jax.tree_util.tree_map(lambda v: v[g], params["blocks"])
+            st_g = None if states is None else \
+                jax.tree_util.tree_map(lambda v: v[g], states["blocks"])
+            (x, acc), st_g = jax.lax.scan(inner_fn, (x, acc), (p_g, st_g))
+            if states is not None:
+                new_states.setdefault("blocks_list", []).append(st_g)
+            c = None if shared_caches is None else \
+                jax.tree_util.tree_map(lambda v: v[g], shared_caches)
+            x, c = _shared_block(params["shared"], x, x0, cfg, cache=c,
+                                 cache_index=cache_index)
+            if shared_caches is not None:
+                new_shared.append(c)
+        if cfg.n_tail:
+            st_t = None if states is None else states["tail"]
+            (x, acc), st_t = jax.lax.scan(inner_fn, (x, acc),
+                                          (params["tail"], st_t))
+            new_states["tail"] = st_t
+    if states is not None:
+        new_states["blocks"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_states.pop("blocks_list"))
+    if shared_caches is not None:
+        new_shared = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                            *new_shared)
+    return x, acc, new_states if states is not None else None, new_shared
+
+
+def loss_fn(params, acc, batch, *, cfg: Zamba2Config, spec: PexSpec):
+    x, acc = embed(params["embed"], batch["ids"], acc,
+                   cfg=cfg.vocab_cfg, spec=spec)
+    x, acc, _, _ = _run(params, x, acc, cfg, spec)
+    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    loss_vec = per_example_xent(logits, batch["labels"],
+                                batch.get("label_mask"))
+    return loss_vec, acc, {}
+
+
+def init_caches(batch: int, cfg: Zamba2Config):
+    dt = cfg.jdtype
+    st_one = init_ssm_state(batch, cfg.ssm, dtype=dt)
+    states = {
+        "blocks": jax.tree_util.tree_map(
+            lambda v: jnp.zeros((cfg.n_groups, cfg.share_every) + v.shape,
+                                v.dtype), st_one),
+        "tail": jax.tree_util.tree_map(
+            lambda v: jnp.zeros((cfg.n_tail,) + v.shape, v.dtype), st_one)
+        if cfg.n_tail else None,
+    }
+    kv_one = init_kv_cache(batch, cfg.max_cache_len, cfg.attn_cfg, dtype=dt)
+    shared = jax.tree_util.tree_map(
+        lambda v: jnp.zeros((cfg.n_groups,) + v.shape, v.dtype), kv_one)
+    return {"states": states, "shared": shared}
+
+
+def forward_tokens(params, batch, caches, cache_index, *, cfg: Zamba2Config):
+    spec = taps.DISABLED
+    b = batch["ids"].shape[0]
+    acc = taps.init_acc(b, spec)
+    x, acc = embed(params["embed"], batch["ids"], acc,
+                   cfg=cfg.vocab_cfg, spec=spec)
+    x, acc, states, shared = _run(params, x, acc, cfg, spec,
+                                  states=caches["states"],
+                                  shared_caches=caches["shared"],
+                                  cache_index=cache_index)
+    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps)
+    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    return logits, {"states": states, "shared": shared}

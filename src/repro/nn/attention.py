@@ -1,0 +1,196 @@
+"""Multi-head attention family: GQA (+bias), sliding-window/global,
+logit softcapping, M-RoPE, cross-attention, and a decode KV cache.
+
+Covers llama3.2 / qwen2 / qwen2-vl / minitron / gemma2 / phi3.5-moe /
+zamba2's shared block / seamless enc-dec. (MLA is nn/mla.py.)
+
+Q heads are padded to ``head_multiple`` (the TP degree) when the true
+count doesn't divide it — padded heads have zero in/out projections so
+logits, gradients and per-example stats are exact (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.dist.sharding import pad_to, shard
+from repro.nn import param as pm
+from repro.nn.linear import init_linear, linear
+from repro.nn.rotary import apply_rope, mrope_angles, rope_angles
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    bias: bool = False                 # qwen2-style QKV bias
+    softcap: Optional[float] = None    # gemma2 attn logit softcap
+    window: Optional[int] = None       # sliding-window size (None = global)
+    rope_theta: float = 10000.0
+    rope_dim: Optional[int] = None     # partial rotary (None = full head_dim)
+    mrope_sections: Optional[Tuple[int, ...]] = None
+    attn_scale: Optional[float] = None # None → head_dim ** -0.5
+    head_multiple: int = 16            # pad n_heads up to this multiple
+    cross: bool = False                # cross-attention (kv from memory)
+    causal: bool = True
+    d_out: Optional[int] = None        # output dim if != d_model (zamba2)
+    flash: bool = False                # Pallas flash kernel for the full-seq
+                                       # causal path (TPU; interpret on CPU)
+
+    @property
+    def n_heads_p(self) -> int:
+        return pad_to(self.n_heads, self.head_multiple)
+
+    @property
+    def scale(self) -> float:
+        return self.attn_scale if self.attn_scale is not None \
+            else self.head_dim ** -0.5
+
+
+def init_attention(key, cfg: AttnCfg, *, dtype):
+    ks = jax.random.split(key, 4)
+    hq = cfg.n_heads_p * cfg.head_dim
+    hkv = cfg.n_kv * cfg.head_dim
+    p = {
+        "wq": init_linear(ks[0], cfg.d_model, hq, dtype=dtype,
+                          axes=("embed", "heads"), bias=cfg.bias),
+        "wk": init_linear(ks[1], cfg.d_model, hkv, dtype=dtype,
+                          axes=("embed", "kv_heads"), bias=cfg.bias),
+        "wv": init_linear(ks[2], cfg.d_model, hkv, dtype=dtype,
+                          axes=("embed", "kv_heads"), bias=cfg.bias),
+        "wo": init_linear(ks[3], hq, cfg.d_out or cfg.d_model, dtype=dtype,
+                          axes=("heads", "embed"), bias=False),
+    }
+    if cfg.n_heads_p != cfg.n_heads:  # zero the padded head slices → exact
+        hreal = cfg.n_heads * cfg.head_dim
+        mask = (jnp.arange(hq) < hreal).astype(dtype)
+        p["wq"]["w"] = pm.Boxed(p["wq"]["w"].value * mask[None, :],
+                                p["wq"]["w"].axes)
+        p["wo"]["w"] = pm.Boxed(p["wo"]["w"].value * mask[:, None],
+                                p["wo"]["w"].axes)
+    return p
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnCfg, *, dtype):
+    shape = (batch, max_len, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _split_heads(x, n, d):
+    return x.reshape(x.shape[0], x.shape[1], n, d)
+
+
+def _attend(q, k, v, cfg: AttnCfg, q_offset, kv_len: Optional[jax.Array],
+            local_flag: Optional[jax.Array] = None):
+    """q (B,S,Hp,D), k/v (B,T,Hkv,D). q_offset: absolute position of
+    q[.,0]; kv_len: number of valid cache rows (decode) or None.
+    local_flag: traced bool — apply cfg.window only where True (gemma2's
+    alternating local/global under a single layer scan)."""
+    b, s, hp, d = q.shape
+    t = k.shape[1]
+    rep = hp // k.shape[2]
+    qg = q.reshape(b, s, k.shape[2], rep, d)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, k,
+                        preferred_element_type=jnp.float32) * cfg.scale
+    if cfg.softcap is not None:
+        logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+
+    qpos = q_offset + jnp.arange(s)[:, None]        # (S,1)
+    kpos = jnp.arange(t)[None, :]                   # (1,T)
+    mask = jnp.ones((s, t), bool)
+    if cfg.causal and not cfg.cross:
+        mask &= kpos <= qpos
+    if cfg.window is not None:
+        in_window = (qpos - kpos) < cfg.window
+        if local_flag is None:
+            mask &= in_window
+        else:
+            mask &= in_window | ~local_flag
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    attn = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", attn, v)
+    return out.reshape(b, s, hp * d)
+
+
+def attention(p, x, acc, *, cfg: AttnCfg, spec: PexSpec,
+              positions: Optional[jax.Array] = None,
+              memory: Optional[jax.Array] = None,
+              cache=None, cache_index=None,
+              local_flag: Optional[jax.Array] = None,
+              group: str = "attn"):
+    """Full-sequence (train/prefill) or incremental (decode) attention.
+
+    positions: (S,) / (B,S) int, or (3,B,S) for M-RoPE.
+    memory:    encoder output for cross-attention (cfg.cross).
+    cache:     KV cache dict for decode; cache_index: write offset.
+    Returns (y, acc, new_cache).
+    """
+    b, s, _ = x.shape
+    q, acc = linear(p["wq"], x, acc, spec=spec, group=group)
+    kv_src = memory if cfg.cross else x
+    k, acc = linear(p["wk"], kv_src, acc, spec=spec, group=group)
+    v, acc = linear(p["wv"], kv_src, acc, spec=spec, group=group)
+    q = _split_heads(q, cfg.n_heads_p, cfg.head_dim)
+    k = _split_heads(k, cfg.n_kv, cfg.head_dim)
+    v = _split_heads(v, cfg.n_kv, cfg.head_dim)
+    q = shard(q, "batch", None, "heads_act", None)
+    k = shard(k, "batch", None, "kv_heads_act", None)
+    v = shard(v, "batch", None, "kv_heads_act", None)
+
+    if not cfg.cross:
+        if positions is None:
+            positions = jnp.arange(s)[None].repeat(b, 0) if cache_index is None \
+                else (cache_index + jnp.arange(s))[None].repeat(b, 0)
+        if cfg.mrope_sections is not None:
+            if positions.ndim == 2:   # text-only fallback: t=h=w stream
+                positions = jnp.broadcast_to(positions, (3,) + positions.shape)
+            ang = mrope_angles(positions, cfg.rope_dim or cfg.head_dim,
+                               cfg.rope_theta, cfg.mrope_sections)
+        else:
+            if positions.ndim == 1:
+                positions = positions[None]
+            ang = rope_angles(positions, cfg.rope_dim or cfg.head_dim,
+                              cfg.rope_theta)
+        q = apply_rope(q, ang, cfg.rope_dim)
+        k = apply_rope(k, ang, cfg.rope_dim)
+
+    kv_len = None
+    q_offset = 0
+    if cache is not None and not cfg.cross:
+        # write new k/v rows at cache_index, attend over the full buffer
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, 1),
+        }
+        k, v = cache["k"], cache["v"]
+        kv_len = cache_index + s
+        q_offset = cache_index
+    elif cfg.cross and cache is not None:
+        # cross-attn cache: precomputed k/v of the encoder memory
+        k, v = cache["k"], cache["v"]
+
+    use_flash = (cfg.flash and cache is None and not cfg.cross
+                 and cfg.causal and cfg.softcap is None
+                 and local_flag is None and q.shape[1] % 128 == 0)
+    if use_flash:
+        from repro.kernels.ops import flash_attention_vjp
+        yf = flash_attention_vjp(
+            jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+            jnp.moveaxis(v, 1, 2), scale=cfg.scale, window=cfg.window)
+        y = jnp.moveaxis(yf, 1, 2).reshape(q.shape[0], q.shape[1], -1)
+    else:
+        y = _attend(q, k, v, cfg, q_offset, kv_len, local_flag)
+    y, acc = linear(p["wo"], y, acc, spec=spec, group=group)
+    y = shard(y, "batch", None, "embed_act")
+    return y, acc, cache

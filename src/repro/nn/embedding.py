@@ -1,0 +1,76 @@
+"""Token embedding + LM head, with vocab padding for TP divisibility.
+
+Padded vocab rows are zero-init and their logits are masked to -inf, so
+losses, gradients and per-example stats are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.dist.sharding import pad_to, shard
+from repro.nn import param as pm
+
+NEG_INF = -1.0e30
+
+
+@dataclasses.dataclass(frozen=True)
+class VocabCfg:
+    vocab: int
+    d_model: int
+    vocab_multiple: int = 16
+    logit_softcap: Optional[float] = None   # gemma2 final softcap
+    scale_by_sqrt_dim: bool = False         # gemma multiplies embeds by √d
+
+    @property
+    def vocab_p(self) -> int:
+        return pad_to(self.vocab, self.vocab_multiple)
+
+
+def init_embedding(key, cfg: VocabCfg, *, dtype):
+    table = pm.normal(key, (cfg.vocab_p, cfg.d_model), dtype,
+                      ("vocab", "embed"), std=0.02)
+    if cfg.vocab_p != cfg.vocab:
+        mask = (jnp.arange(cfg.vocab_p) < cfg.vocab).astype(dtype)
+        table = pm.Boxed(table.value * mask[:, None], table.axes)
+    return {"table": table}
+
+
+def embed(p, ids, acc, *, cfg: VocabCfg, spec: PexSpec, group: str = "embed"):
+    x, acc = taps.embedding(p["table"], ids, acc, spec=spec, group=group)
+    if cfg.scale_by_sqrt_dim:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", None, "embed_act"), acc
+
+
+def init_lm_head(key, cfg: VocabCfg, *, dtype):
+    w = pm.normal(key, (cfg.d_model, cfg.vocab_p), dtype,
+                  ("embed", "vocab"), std=0.02)
+    return {"w": w}
+
+
+def lm_head(p, x, acc, *, cfg: VocabCfg, spec: PexSpec, group: str = "head"):
+    sp = spec if spec.tap_head else taps.DISABLED
+    logits, acc = taps.dense(x, p["w"], acc, spec=sp, group=group,
+                             method="direct" if sp.enabled else None)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.vocab_p != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_p) < cfg.vocab
+        logits = jnp.where(mask, logits, NEG_INF)
+    return shard(logits, "batch", None, "vocab_act"), acc
+
+
+def per_example_xent(logits: jax.Array, labels: jax.Array,
+                     label_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Σ_t CE per example (paper §2: L^(j) over example j's targets)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if label_mask is not None:
+        ll = ll * label_mask
+    return -jnp.sum(ll, axis=tuple(range(1, ll.ndim)))

@@ -1,0 +1,29 @@
+"""Dense layers — every matmul in the framework routes through the
+paper's tap so per-example norms are first-class everywhere."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.nn import param as pm
+
+
+def init_linear(key, d_in: int, d_out: int, *, dtype, axes, bias: bool = False,
+                std: Optional[float] = None):
+    ks = jax.random.split(key, 2)
+    p = {"w": pm.normal(ks[0], (d_in, d_out), dtype, axes, std)}
+    if bias:
+        p["b"] = pm.zeros((d_out,), dtype, (axes[-1],))
+    return p
+
+
+def linear(p, x, acc, *, spec: PexSpec, group: str = "all",
+           method: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    z, acc = taps.dense(x, p["w"], acc, spec=spec, group=group, method=method)
+    if "b" in p:
+        z, acc = taps.bias_add(z, p["b"], acc, spec=spec, group=group)
+    return z, acc

@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2), TPU-adapted.
+
+Prefill expands the latent KV for all positions (matmul-friendly).
+Decode runs in *absorbed* form: scores are taken directly against the
+cached 512-d latent + 64-d shared rope key, so the KV cache holds
+(kv_lora + rope) = 576 floats/token instead of 2·H·D = 32768 — the
+paper's (DeepSeek's) memory win, and the reason long decode cells fit.
+
+Every projection is a tapped dense — the per-example norm machinery
+sees MLA as five ordinary matmuls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import PexSpec
+from repro.dist.sharding import shard
+from repro.nn.attention import NEG_INF
+from repro.nn.linear import init_linear, linear
+from repro.nn.norms import init_rmsnorm, rmsnorm
+from repro.nn.rotary import apply_rope, rope_angles
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaCfg:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def scale(self) -> float:
+        return (self.qk_nope + self.qk_rope) ** -0.5
+
+
+def init_mla(key, cfg: MlaCfg, *, dtype):
+    ks = jax.random.split(key, 7)
+    h = cfg.n_heads
+    return {
+        "q_down": init_linear(ks[0], cfg.d_model, cfg.q_lora, dtype=dtype,
+                              axes=("embed", "qlora")),
+        "q_norm": init_rmsnorm(cfg.q_lora, dtype=dtype),
+        "q_up": init_linear(ks[1], cfg.q_lora,
+                            h * (cfg.qk_nope + cfg.qk_rope), dtype=dtype,
+                            axes=("qlora", "heads")),
+        "kv_down": init_linear(ks[2], cfg.d_model,
+                               cfg.kv_lora + cfg.qk_rope, dtype=dtype,
+                               axes=("embed", "kvlora")),
+        "kv_norm": init_rmsnorm(cfg.kv_lora, dtype=dtype),
+        "kv_up": init_linear(ks[3], cfg.kv_lora,
+                             h * (cfg.qk_nope + cfg.v_dim), dtype=dtype,
+                             axes=("kvlora", "heads")),
+        "wo": init_linear(ks[4], h * cfg.v_dim, cfg.d_model, dtype=dtype,
+                          axes=("heads", "embed")),
+    }
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: MlaCfg, *, dtype):
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+            "krope": jnp.zeros((batch, max_len, cfg.qk_rope), dtype)}
+
+
+def _project_q(p, x, acc, cfg, spec, group):
+    b, s, _ = x.shape
+    q, acc = linear(p["q_down"], x, acc, spec=spec, group=group)
+    q, acc = rmsnorm(p["q_norm"], q, acc, spec=spec)
+    q, acc = linear(p["q_up"], q, acc, spec=spec, group=group)
+    q = q.reshape(b, s, cfg.n_heads, cfg.qk_nope + cfg.qk_rope)
+    return q[..., :cfg.qk_nope], q[..., cfg.qk_nope:], acc
+
+
+def _latent_kv(p, x, acc, cfg, spec, group):
+    ckv, acc = linear(p["kv_down"], x, acc, spec=spec, group=group)
+    c, krope = ckv[..., :cfg.kv_lora], ckv[..., cfg.kv_lora:]
+    c, acc = rmsnorm(p["kv_norm"], c, acc, spec=spec)
+    return c, krope, acc
+
+
+def mla_attention(p, x, acc, *, cfg: MlaCfg, spec: PexSpec,
+                  positions: Optional[jax.Array] = None,
+                  cache=None, cache_index=None, group: str = "attn"):
+    """Returns (y, acc, new_cache). cache=None → full-seq (train/prefill);
+    cache given → decode with the absorbed latent form."""
+    b, s, _ = x.shape
+    q_nope, q_rope, acc = _project_q(p, x, acc, cfg, spec, group)
+    c, krope, acc = _latent_kv(p, x, acc, cfg, spec, group)
+
+    if positions is None:
+        start = 0 if cache_index is None else cache_index
+        positions = (start + jnp.arange(s))[None]
+    ang = rope_angles(positions, cfg.qk_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, ang)
+    krope = apply_rope(krope[:, :, None, :], ang)[:, :, 0, :]
+
+    if cache is not None:
+        cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], c.astype(cache["ckv"].dtype), cache_index, 1),
+            "krope": jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], krope.astype(cache["krope"].dtype), cache_index, 1),
+        }
+        c_all, krope_all = cache["ckv"], cache["krope"]
+        kv_len = cache_index + s
+        # absorbed: fold kv_up's nope-key block into q → score in latent space
+        wkv = p["kv_up"]["w"].reshape(cfg.kv_lora, cfg.n_heads,
+                                      cfg.qk_nope + cfg.v_dim)
+        wk = wkv[..., :cfg.qk_nope]            # (kv_lora, H, nope)
+        wv = wkv[..., cfg.qk_nope:]            # (kv_lora, H, v)
+        q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, wk)
+        scores = (jnp.einsum("bshl,btl->bhst", q_lat, c_all,
+                             preferred_element_type=jnp.float32) +
+                  jnp.einsum("bshd,btd->bhst", q_rope, krope_all,
+                             preferred_element_type=jnp.float32)) * cfg.scale
+        t = c_all.shape[1]
+        qpos = cache_index + jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        mask = (kpos <= qpos) & (kpos < kv_len)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btl->bshl", attn, c_all)
+        o = jnp.einsum("bshl,lhd->bshd", o_lat, wv)
+    else:
+        # expanded form for train/prefill
+        kv, acc = linear(p["kv_up"], c, acc, spec=spec, group=group)
+        kv = kv.reshape(b, s, cfg.n_heads, cfg.qk_nope + cfg.v_dim)
+        k_nope, v = kv[..., :cfg.qk_nope], kv[..., cfg.qk_nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      k_nope.shape[:3] + (cfg.qk_rope,))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        q = shard(q, "batch", None, "heads_act", None)
+        k = shard(k, "batch", None, "heads_act", None)
+        scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                            preferred_element_type=jnp.float32) * cfg.scale
+        qpos = jnp.arange(s)[:, None]
+        mask = jnp.arange(s)[None, :] <= qpos
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhst,bthd->bshd", attn, v)
+
+    y, acc = linear(p["wo"], o.reshape(b, s, -1), acc, spec=spec, group=group)
+    return shard(y, "batch", None, "embed_act"), acc, cache

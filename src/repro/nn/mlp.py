@@ -1,0 +1,55 @@
+"""Gated / plain MLPs: SwiGLU (llama/qwen), GeGLU (gemma), ReLU² (minitron)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import PexSpec
+from repro.dist.sharding import shard
+from repro.nn.linear import init_linear, linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpCfg:
+    d_model: int
+    d_ff: int
+    act: str = "silu"        # silu | gelu | relu2
+    gated: bool = True
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg: MlpCfg, *, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"up": init_linear(ks[0], cfg.d_model, cfg.d_ff, dtype=dtype,
+                           axes=("embed", "mlp"))}
+    if cfg.gated:
+        p["gate"] = init_linear(ks[1], cfg.d_model, cfg.d_ff, dtype=dtype,
+                                axes=("embed", "mlp"))
+    p["down"] = init_linear(ks[2], cfg.d_ff, cfg.d_model, dtype=dtype,
+                            axes=("mlp", "embed"))
+    return p
+
+
+def mlp(p, x, acc, *, cfg: MlpCfg, spec: PexSpec, group: str = "mlp"):
+    up, acc = linear(p["up"], x, acc, spec=spec, group=group)
+    if cfg.gated:
+        g, acc = linear(p["gate"], x, acc, spec=spec, group=group)
+        h = _act(cfg.act)(g) * up
+    else:
+        h = _act(cfg.act)(up)
+    h = shard(h, "batch", None, "mlp_act")
+    y, acc = linear(p["down"], h, acc, spec=spec, group=group)
+    y = shard(y, "batch", None, "embed_act")
+    return y, acc

@@ -1,0 +1,77 @@
+"""Boxed parameters: value + logical sharding axes, as one pytree.
+
+``Boxed`` registers axes as static aux-data, so ``jax.eval_shape`` over
+an init function yields a Boxed tree of ShapeDtypeStructs that still
+carries the sharding annotation — exactly what the multi-pod dry-run
+needs (no device allocation, full sharding info).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class Boxed:
+    """A parameter leaf with logical axis names, e.g. ("embed", "mlp")."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Boxed({shape}, axes={self.axes})"
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Boxed tree → plain value tree (idempotent on plain trees)."""
+    return jax.tree_util.tree_map(
+        lambda b: b.value if is_boxed(b) else b, tree, is_leaf=is_boxed)
+
+
+def axes_of(tree):
+    """Boxed tree → logical-axes tree (tuples as leaves)."""
+    return jax.tree_util.tree_map(lambda b: b.axes, tree, is_leaf=is_boxed)
+
+
+# --- initializers ----------------------------------------------------------
+
+def normal(key, shape, dtype, axes, std: Optional[float] = None) -> Boxed:
+    if std is None:  # fan-in scaling
+        fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+        std = 1.0 / math.sqrt(max(1, fan_in))
+    return Boxed((std * jax.random.normal(key, shape, jnp.float32)).astype(dtype), axes)
+
+
+def zeros(shape, dtype, axes) -> Boxed:
+    return Boxed(jnp.zeros(shape, dtype), axes)
+
+
+def ones(shape, dtype, axes) -> Boxed:
+    return Boxed(jnp.ones(shape, dtype), axes)
+
+
+def constant(val, shape, dtype, axes) -> Boxed:
+    return Boxed(jnp.full(shape, val, dtype), axes)
+
+
+def count_params(tree) -> int:
+    return sum(int(jnp.size(v)) if not hasattr(v, "shape") else int(math.prod(v.shape))
+               for v in jax.tree_util.tree_leaves(unbox(tree)))

@@ -1,0 +1,52 @@
+"""Rotary position embeddings: standard RoPE, partial RoPE (MLA's rope
+sub-dim), and Qwen2-VL's multimodal M-RoPE (per-section t/h/w streams)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _inv_freq(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (..., S) int → angles (..., S, dim/2) f32."""
+    inv = _inv_freq(dim, theta)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def mrope_angles(positions: jax.Array, dim: int, theta: float,
+                 sections: Sequence[int]) -> jax.Array:
+    """M-RoPE: positions (3, B, S) — temporal/height/width streams.
+
+    sections are in half-dim units and sum to dim/2 (qwen2-vl: 16/24/24
+    at head_dim 128). Each frequency band takes its angle from its
+    section's position stream.
+    """
+    assert positions.shape[0] == 3 and sum(sections) == dim // 2
+    full = rope_angles(positions, dim, theta)        # (3, B, S, dim/2)
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts.append(full[i, ..., off:off + sec])
+        off += sec
+    return jnp.concatenate(parts, axis=-1)           # (B, S, dim/2)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array,
+               rot_dim: Optional[int] = None) -> jax.Array:
+    """x (B, S, H, D); angles (B, S, rot/2) or (S, rot/2). Rotates the
+    first `rot_dim` features (default: all), half-split convention."""
+    d = x.shape[-1]
+    rot = rot_dim or d
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., :rot // 2], xr[..., rot // 2:]
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)   # (B,S,1,rot/2)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot < d else out

@@ -1,0 +1,167 @@
+"""RWKV6 ("Finch") — attention-free time-mix with data-dependent decay.
+
+Per head (dim N): state S ∈ ℝ^{N×N};
+    o_t = r_t · (S_{t-1} + diag(u)·k_t v_tᵀ)
+    S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ
+with w_t = exp(-exp(w0 + tanh(x w1) w2)) — the data-dependent decay
+LoRA — and ddlerp token-shift mixing for the r/k/v/g/w streams.
+
+Decode is one step of the same recurrence: O(1) state, which is why
+rwkv6 runs the `long_500k` cell. All matrix params (r/k/v/g/o, LoRA
+A/B, channel-mix, decay LoRA) are tapped; the small per-channel vectors
+(μ's, w0, u) are outside the pex scope (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.dist.sharding import shard
+from repro.nn import param as pm
+from repro.nn.linear import init_linear, linear
+from repro.nn.norms import init_layernorm, layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class RwkvCfg:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    mix_lora: int = 32
+    decay_lora: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+_STREAMS = 5  # r, k, v, g, w
+
+
+def init_rwkv_tmix(key, cfg: RwkvCfg, *, dtype):
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    return {
+        "mu": pm.zeros((_STREAMS + 1, d), dtype, (None, "embed")),
+        "mix_a": init_linear(ks[0], d, _STREAMS * cfg.mix_lora, dtype=dtype,
+                             axes=("embed", None), std=0.02),
+        "mix_b": pm.normal(ks[1], (_STREAMS, cfg.mix_lora, d), dtype,
+                           (None, None, "embed"), std=0.02),
+        "wr": init_linear(ks[2], d, d, dtype=dtype, axes=("embed", "heads")),
+        "wk": init_linear(ks[3], d, d, dtype=dtype, axes=("embed", "heads")),
+        "wv": init_linear(ks[4], d, d, dtype=dtype, axes=("embed", "heads")),
+        "wg": init_linear(ks[5], d, d, dtype=dtype, axes=("embed", "heads")),
+        "wo": init_linear(ks[6], d, d, dtype=dtype, axes=("heads", "embed")),
+        "w0": pm.constant(-6.0, (d,), jnp.float32, (None,)),
+        "decay_a": init_linear(ks[7], d, cfg.decay_lora, dtype=dtype,
+                               axes=("embed", None), std=0.02),
+        "decay_b": init_linear(ks[8], cfg.decay_lora, d, dtype=dtype,
+                               axes=(None, "embed"), std=0.02),
+        "u": pm.zeros((d,), jnp.float32, (None,)),
+        "ln_x": init_layernorm(d, dtype=dtype),
+    }
+
+
+def init_rwkv_cmix(key, cfg: RwkvCfg, *, dtype):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "mu": pm.zeros((2, d), dtype, (None, "embed")),
+        "wk": init_linear(ks[0], d, cfg.d_ff, dtype=dtype, axes=("embed", "mlp")),
+        "wr": init_linear(ks[1], d, d, dtype=dtype, axes=("embed", "embed2")),
+        "wv": init_linear(ks[2], cfg.d_ff, d, dtype=dtype, axes=("mlp", "embed")),
+    }
+
+
+def init_rwkv_state(batch: int, cfg: RwkvCfg, *, dtype):
+    d = cfg.d_model
+    return {"tm_shift": jnp.zeros((batch, d), dtype),
+            "cm_shift": jnp.zeros((batch, d), dtype),
+            "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                             jnp.float32)}
+
+
+def _token_shift(x, prev: Optional[jax.Array]):
+    """xx_t = x_{t-1}; prev = last token of the previous segment."""
+    b, s, d = x.shape
+    first = jnp.zeros((b, 1, d), x.dtype) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def rwkv_tmix(p, x, acc, *, cfg: RwkvCfg, spec: PexSpec, state=None,
+              group: str = "rwkv"):
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    xx = _token_shift(x, state["tm_shift"] if state is not None else None)
+    dx = xx - x
+
+    # ddlerp: base mix, then per-stream LoRA refinement
+    xbase = x + dx * p["mu"][_STREAMS]
+    la, acc = linear(p["mix_a"], xbase, acc, spec=spec, group=group)
+    la = jnp.tanh(la).reshape(b, s, _STREAMS, cfg.mix_lora)
+    mixed = []
+    for i in range(_STREAMS):  # per-stream LoRA-B, tapped
+        lb_i, acc = taps.dense(la[:, :, i], p["mix_b"][i], acc,
+                               spec=spec, group=group)
+        mixed.append(x + dx * (p["mu"][i] + lb_i))
+    xr, xk, xv, xg, xw = mixed
+
+    r, acc = linear(p["wr"], xr, acc, spec=spec, group=group)
+    k, acc = linear(p["wk"], xk, acc, spec=spec, group=group)
+    v, acc = linear(p["wv"], xv, acc, spec=spec, group=group)
+    g, acc = linear(p["wg"], xg, acc, spec=spec, group=group)
+
+    dw, acc = linear(p["decay_a"], xw, acc, spec=spec, group=group)
+    dw, acc = linear(p["decay_b"], jnp.tanh(dw), acc, spec=spec, group=group)
+    w = jnp.exp(-jnp.exp(p["w0"] + dw.astype(jnp.float32)))      # (B,S,d)
+
+    r_ = r.reshape(b, s, nh, hd).astype(jnp.float32)
+    k_ = k.reshape(b, s, nh, hd).astype(jnp.float32)
+    v_ = v.reshape(b, s, nh, hd).astype(jnp.float32)
+    w_ = w.reshape(b, s, nh, hd)
+    u_ = p["u"].reshape(nh, hd)
+
+    s0 = state["wkv"] if state is not None else \
+        jnp.zeros((b, nh, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,nh,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B,nh,hd,hd)
+        o_t = jnp.einsum("bhk,bhkv->bhv", r_t, S + u_[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, o_t
+
+    s_final, o = jax.lax.scan(
+        step, s0, tuple(jnp.moveaxis(a, 1, 0) for a in (r_, k_, v_, w_)))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, s, d).astype(x.dtype)
+
+    o, acc = layernorm(p["ln_x"], o, acc, spec=spec)  # group-norm surrogate
+    o = o * jax.nn.silu(g)
+    y, acc = linear(p["wo"], o, acc, spec=spec, group=group)
+    y = shard(y, "batch", None, "embed_act")
+    new_state = None
+    if state is not None:
+        new_state = {**state, "tm_shift": x[:, -1], "wkv": s_final}
+    return y, acc, new_state
+
+
+def rwkv_cmix(p, x, acc, *, cfg: RwkvCfg, spec: PexSpec, state=None,
+              group: str = "rwkv"):
+    xx = _token_shift(x, state["cm_shift"] if state is not None else None)
+    dx = xx - x
+    xk = x + dx * p["mu"][0]
+    xr = x + dx * p["mu"][1]
+    k, acc = linear(p["wk"], xk, acc, spec=spec, group=group)
+    k = jnp.square(jax.nn.relu(k))
+    kv, acc = linear(p["wv"], k, acc, spec=spec, group=group)
+    r, acc = linear(p["wr"], xr, acc, spec=spec, group=group)
+    y = jax.nn.sigmoid(r) * kv
+    new_state = None
+    if state is not None:
+        new_state = {**state, "cm_shift": x[:, -1]}
+    return shard(y, "batch", None, "embed_act"), acc, new_state

@@ -1,0 +1,147 @@
+"""Mamba2 (SSD) block for zamba2 — selective state-space with
+multi-head state (headdim × d_state), scalar-per-head decay.
+
+    h_t = exp(Δ_t·A) h_{t-1} + Δ_t·B_t ⊗ x_t          (per head)
+    y_t = C_t·h_t + D ⊙ x_t
+
+The recurrence runs as a `lax.scan` over time with an O(1) carry —
+which is also exactly the decode path (one step of the same scan), so
+`long_500k` decode needs no cache beyond the (B, H, hd, ds) state.
+
+Dense projections are tapped; A_log/D/dt_bias go through the
+elementwise/bias taps, so per-example norms cover the whole block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.dist.sharding import shard
+from repro.nn import param as pm
+from repro.nn.linear import init_linear, linear
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmCfg:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def init_ssm(key, cfg: SsmCfg, *, dtype):
+    ks = jax.random.split(key, 5)
+    di, ds, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj → [z(di), x(di), B(ds), C(ds), dt(nh)]
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, 2 * di + 2 * ds + nh,
+                               dtype=dtype, axes=("embed", "mlp")),
+        "conv_w": pm.normal(ks[1], (cfg.conv_width, cfg.conv_dim), dtype,
+                            (None, "mlp"), std=cfg.conv_width ** -0.5),
+        "conv_b": pm.zeros((cfg.conv_dim,), dtype, ("mlp",)),
+        "a_log": pm.constant(jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+                             (nh,), jnp.float32, (None,)),
+        "d": pm.ones((nh,), jnp.float32, (None,)),
+        "dt_bias": pm.zeros((nh,), jnp.float32, (None,)),
+        "norm_g": pm.ones((di,), dtype, ("mlp",)),
+        "out_proj": init_linear(ks[2], di, cfg.d_model, dtype=dtype,
+                                axes=("mlp", "embed")),
+    }
+
+
+def init_ssm_state(batch: int, cfg: SsmCfg, *, dtype):
+    return {"h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.conv_dim), dtype)}
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array]):
+    """x (B,S,C) depthwise causal conv, width K. state: (B,K-1,C) tail of
+    the previous segment (decode) or None (train, zero history)."""
+    kw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(kw)) + b
+    new_state = xp[:, -(kw - 1):] if kw > 1 else None
+    return out, new_state
+
+
+def ssm(p, x, acc, *, cfg: SsmCfg, spec: PexSpec,
+        state=None, group: str = "ssm"):
+    """x (B,S,d_model) → (y, acc, new_state). Pass state for decode."""
+    b, s, _ = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+
+    zxbcdt, acc = linear(p["in_proj"], x, acc, spec=spec, group=group)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ds]
+    dt = zxbcdt[..., -nh:]
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(b, s, nh, hd)
+    bs = xbc[..., di:di + ds]
+    cs = xbc[..., di + ds:]
+
+    dt, acc = taps.bias_add(dt.astype(jnp.float32), p["dt_bias"], acc,
+                            spec=spec, group=group)
+    dt = jax.nn.softplus(dt)                                      # (B,S,nh)
+    a = -jnp.exp(p["a_log"])                                      # (nh,)
+    decay = jnp.exp(dt * a)                                       # (B,S,nh)
+
+    h0 = state["h"] if state is not None else \
+        jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t, dec_t = inp
+        # h: (B,nh,hd,ds)
+        dbx = jnp.einsum("bhd,bn,bh->bhdn", x_t.astype(jnp.float32),
+                         b_t.astype(jnp.float32), dt_t)
+        h = h * dec_t[:, :, None, None] + dbx
+        y_t = jnp.einsum("bhdn,bn->bhd", h, c_t.astype(jnp.float32))
+        return h, y_t
+
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    bs_t = jnp.moveaxis(bs, 1, 0)
+    cs_t = jnp.moveaxis(cs, 1, 0)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    dec_t = jnp.moveaxis(decay, 1, 0)
+    h_final, ys = jax.lax.scan(step, h0, (xs_t, bs_t, cs_t, dt_t, dec_t))
+    y = jnp.moveaxis(ys, 0, 1)                                    # (B,S,nh,hd)
+
+    # skip connection D ⊙ x  (elementwise tap on the per-head D)
+    y = y + xs.astype(jnp.float32) * p["d"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    # gated RMSNorm (mamba2's norm before out_proj)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+    y, acc = taps.scale(yf.astype(x.dtype), p["norm_g"], acc,
+                        spec=spec, group=group)
+
+    y, acc = linear(p["out_proj"], y, acc, spec=spec, group=group)
+    y = shard(y, "batch", None, "embed_act")
+    new_state = {"h": h_final, "conv": new_conv} if state is not None else None
+    return y, acc, new_state

@@ -1,0 +1,91 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments —
+O(n+m) optimizer state per (n×m) matrix instead of AdamW's O(2·n·m) f32.
+
+At deepseek-v2-236b this is the difference between 6.9 GB/device of
+moments and ~0.02 GB/device (+ the f32 row/col vectors), which buys the
+activation headroom the train_4k cell needs without microbatching.
+Implements the standard recipe: factored v for ≥2-D params, scalar-free
+update clipping by RMS, relative step size or fixed lr.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay: float = 0.8           # t^-decay schedule for v's EMA
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factored: int = 2    # factor matrices with ≥2 dims
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: object    # row second-moments (or full v for vectors)
+    vc: object    # col second-moments (dummy zeros for vectors)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    def rows(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def cols(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return AdafactorState(
+        jnp.zeros((), jnp.int32),
+        jax.tree_util.tree_map(rows, params),
+        jax.tree_util.tree_map(cols, params))
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def update(cfg: AdafactorConfig, state: AdafactorState, params, grads):
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+    lr = cfg.lr if cfg.schedule is None else cfg.lr * cfg.schedule(step)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps1
+        if _factored(p):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # v ≈ vr vcᵀ / mean(vr)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            r = (vr / jnp.maximum(denom, cfg.eps1))[..., None]
+            u = g * jax.lax.rsqrt(r * vc[..., None, :] + cfg.eps1)
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(vr + cfg.eps1)
+        u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_threshold)
+        scale = jnp.maximum(cfg.eps2, _rms(p.astype(jnp.float32))) \
+            if p.ndim >= 1 else cfg.eps2
+        new_p = p.astype(jnp.float32) - lr * scale * u
+        if cfg.weight_decay:
+            new_p -= lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), vr, vc
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.vr, state.vc)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), AdafactorState(step, pick(1), pick(2))

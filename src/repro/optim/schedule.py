@@ -1,0 +1,26 @@
+"""LR schedules as step→multiplier functions (composable with AdamW.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / max(1, warmup))
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return warm * cos
+    return f
+
+
+def constant():
+    return lambda step: jnp.ones_like(step, jnp.float32)
+
+
+def rsqrt(warmup: int):
+    def f(step):
+        step = step.astype(jnp.float32)
+        return jnp.minimum(step / max(1, warmup) ** 1.5, 1.0 / jnp.sqrt(
+            jnp.maximum(step, 1.0)))
+    return f

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (per chip) — the roofline denominators."""
+
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+CHIPS_PER_POD = 256
+HBM_BYTES = 16e9               # capacity, for fit checks

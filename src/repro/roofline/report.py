@@ -1,0 +1,132 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/dryrun and experiments/roofline.
+
+    PYTHONPATH=src python -m repro.roofline.report > experiments/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+from repro.configs.common import SHAPES
+
+ARCH_ORDER = ["qwen2-vl-7b", "zamba2-7b", "llama3.2-1b", "qwen2-7b",
+              "minitron-4b", "gemma2-9b", "rwkv6-3b", "seamless-m4t-medium",
+              "deepseek-v2-236b", "phi3.5-moe"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt(x, unit=""):
+    if x == 0:
+        return "0"
+    for div, suf in [(1e15, "P"), (1e12, "T"), (1e9, "G"), (1e6, "M"),
+                     (1e3, "k")]:
+        if abs(x) >= div:
+            return f"{x / div:.2f}{suf}{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def _ms(x):
+    return f"{x * 1e3:.2f}"
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        j = json.load(open(f))
+        out[os.path.basename(f)[:-5]] = j
+    return out
+
+
+def dryrun_table(dr):
+    lines = ["| arch | shape | mesh | status | compile s | params/dev | "
+             "state/dev | temp/dev | peak/dev | HLO flops | coll bytes | "
+             "AR/AG/RS/A2A/CP counts |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shp in SHAPE_ORDER:
+            for mesh in ["16x16", "2x16x16"]:
+                k = f"{arch}__{shp}__{mesh}"
+                if k not in dr:
+                    continue
+                d = dr[k]
+                if d.get("skipped"):
+                    lines.append(f"| {arch} | {shp} | {mesh} | SKIP¹ | – | – "
+                                 f"| – | – | – | – | – | – |")
+                    continue
+                cc = d.get("coll_counts", {})
+                counts = "/".join(str(cc.get(c, 0)) for c in
+                                  ["all-reduce", "all-gather",
+                                   "reduce-scatter", "all-to-all",
+                                   "collective-permute"])
+                lines.append(
+                    f"| {arch} | {shp} | {mesh} | "
+                    f"{'OK' if d['ok'] else 'FAIL'} | {d['compile_s']:.1f} | "
+                    f"{d['param_bytes_per_dev'] / 1e9:.2f}G | "
+                    f"{d['state_bytes_per_dev'] / 1e9:.2f}G | "
+                    f"{d['temp_bytes_per_dev'] / 1e9:.2f}G | "
+                    f"**{d['peak_bytes_per_dev'] / 1e9:.2f}G** | "
+                    f"{_fmt(d['flops'])} | "
+                    f"{_fmt(d['coll_bytes'].get('total', 0), 'B')} | "
+                    f"{counts} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rf, tag=""):
+    lines = ["| arch | shape | compute ms | memory ms | coll ms | "
+             "bottleneck | roof-frac | MODEL_FLOPS | HLO_FLOPs | useful | "
+             "MFU-bound | peak GB | next lever |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shp in SHAPE_ORDER:
+            k = f"{arch}__{shp}" + (f"__{tag}" if tag else "")
+            if k not in rf:
+                continue
+            d = rf[k]
+            lines.append(
+                f"| {arch} | {shp} | {_ms(d['t_compute'])} | "
+                f"{_ms(d['t_memory'])} | {_ms(d['t_collective'])} | "
+                f"**{d['bottleneck']}** | {d['roofline_fraction']:.2f} | "
+                f"{_fmt(d['model_flops'])} | {_fmt(d['flops'])} | "
+                f"{d['useful_ratio']:.2f} | {d['mfu_bound']:.3f} | "
+                f"{d['peak_gb_per_dev']:.1f} | {lever(d)} |")
+    return "\n".join(lines)
+
+
+def lever(d) -> str:
+    """One sentence: what would move the dominant term down."""
+    b = d["bottleneck"]
+    cb = d.get("coll_breakdown", {})
+    if b == "collective":
+        top = max(cb, key=cb.get) if cb else "coll_ar"
+        name = {"coll_ar": "all-reduce", "coll_ag": "all-gather",
+                "coll_rs": "reduce-scatter", "coll_a2a": "all-to-all",
+                "coll_cp": "collective-permute"}[top]
+        return (f"dominant {name}: reshard to cut it (FSDP "
+                f"reduce-scatter / replicate small params / fuse collectives)")
+    if b == "memory":
+        if d["useful_ratio"] < 0.5:
+            return ("HLO bytes ≫ useful: fuse stat reductions (Pallas "
+                    "gram/rowsumsq) and drop remat re-reads")
+        return "increase arithmetic intensity: larger per-device tiles / batch"
+    if d["useful_ratio"] < 0.4:
+        return ("flops overhead (remat + stats): adaptive gram estimator "
+                "and selective remat")
+    return "near compute roof: only kernel-level MXU utilization remains"
+
+
+def main():
+    dr = load("experiments/dryrun")
+    rf = load("experiments/roofline")
+    print("## §Dry-run (all 40 cells × 2 meshes)\n")
+    print(dryrun_table(dr))
+    print("\n¹ documented skip (see DESIGN.md §6).\n")
+    print("\n## §Roofline (single-pod 16×16, 256 chips)\n")
+    print(roofline_table({k: v for k, v in rf.items() if "__opt" not in k
+                          and "__" in k}))
+
+
+if __name__ == "__main__":
+    main()

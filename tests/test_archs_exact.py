@@ -1,0 +1,72 @@
+"""Per-arch exactness of per-example norms vs the naive (§3) oracle,
+over the documented pex scope."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, taps
+from repro.core.taps import PexSpec
+from repro.models import registry
+
+from helpers import oracle_sq_norms, scope_filter, smoke_setup
+
+ALL_ARCHS = sorted(registry.ARCHS)
+
+
+def _nodrops(cfg):
+    """MoE capacity high enough that routing is batch-size invariant
+    (otherwise the naive oracle computes a *different function*)."""
+    if getattr(cfg, "moe", None) is not None:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_norms_exact_vs_naive(arch):
+    aspec, cfg, mod, params, batch = smoke_setup(arch, cfg_edit=_nodrops)
+    pex = PexSpec(enabled=True, method="gram")
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    res = api.value_and_norms(loss_fn, params, batch, pex, 3)
+    oracle = oracle_sq_norms(aspec, cfg, params, batch, scope_filter(arch))
+    ours = np.asarray(jnp.sum(res.sq_norms, -1))
+    np.testing.assert_allclose(ours, np.asarray(oracle), rtol=5e-4)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-9b", "rwkv6-3b"])
+def test_norms_exact_direct_method(arch):
+    aspec, cfg, mod, params, batch = smoke_setup(arch, cfg_edit=_nodrops)
+    pex = PexSpec(enabled=True, method="direct")
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    res = api.value_and_norms(loss_fn, params, batch, pex, 3)
+    oracle = oracle_sq_norms(aspec, cfg, params, batch, scope_filter(arch))
+    np.testing.assert_allclose(np.asarray(jnp.sum(res.sq_norms, -1)),
+                               np.asarray(oracle), rtol=5e-4)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "phi3.5-moe"])
+def test_clipped_grads_exact(arch):
+    from repro.core import naive
+    aspec, cfg, mod, params, batch = smoke_setup(arch, cfg_edit=_nodrops)
+    pex = PexSpec(enabled=True, method="gram")
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    clip = 5.0
+    res = api.clipped_value_and_grads(loss_fn, params, batch, pex, 3, clip)
+    plain = registry.make_loss_fn(aspec, cfg, taps.DISABLED)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        lv, _, _ = plain(p, taps.init_acc(1, taps.DISABLED), b1)
+        return lv[0]
+
+    pg = naive.per_example_grads(single, params, batch)
+    # clip coefficients from the *scoped* norms our machinery computes
+    c = jnp.minimum(1.0, clip / (jnp.sqrt(jnp.sum(res.sq_norms, -1)) + 1e-6))
+    flat_ours, _ = jax.tree_util.tree_flatten(res.grads)
+    flat_naive, _ = jax.tree_util.tree_flatten(
+        jax.tree_util.tree_map(lambda g: jnp.einsum("b,b...->...", c, g), pg))
+    for a, b in zip(flat_ours, flat_naive):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)

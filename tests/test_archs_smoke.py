@@ -1,0 +1,76 @@
+"""Per-arch reduced-config smoke tests: one instrumented train step on
+CPU — output shapes, finiteness, and norm positivity (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, taps
+from repro.core.taps import PexSpec
+from repro.models import registry
+
+from helpers import smoke_setup
+
+ALL_ARCHS = sorted(registry.ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    aspec, cfg, mod, params, batch = smoke_setup(arch)
+    pex = PexSpec(enabled=True, method="gram")
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    res = api.value_grads_and_norms(loss_fn, params, batch, pex, 3)
+    assert res.loss_vec.shape == (3,)
+    assert res.sq_norms.shape == (3, 1)
+    assert np.isfinite(float(res.loss))
+    assert np.all(np.isfinite(np.asarray(res.sq_norms)))
+    assert np.all(np.asarray(res.sq_norms) > 0)
+    for leaf in jax.tree_util.tree_leaves(res.grads):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float32)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = registry.get(arch).full()
+    expected = {
+        "qwen2-vl-7b": dict(n_layers=28, d_model=3584, vocab=152064),
+        "zamba2-7b": dict(n_layers=81, d_model=3584, vocab=32000),
+        "llama3.2-1b": dict(n_layers=16, d_model=2048, vocab=128256),
+        "qwen2-7b": dict(n_layers=28, d_model=3584, vocab=152064),
+        "minitron-4b": dict(n_layers=32, d_model=3072, vocab=256000),
+        "gemma2-9b": dict(n_layers=42, d_model=3584, vocab=256000),
+        "rwkv6-3b": dict(n_layers=32, d_model=2560, vocab=65536),
+        "seamless-m4t-medium": dict(d_model=1024, vocab=256206),
+        "deepseek-v2-236b": dict(n_layers=60, d_model=5120, vocab=102400),
+        "phi3.5-moe": dict(n_layers=32, d_model=4096, vocab=32064),
+    }[arch]
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # spot-check family-specific fields
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.n_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.mla.kv_lora == 512 and cfg.mla.n_heads == 128
+    if arch == "phi3.5-moe":
+        assert cfg.moe.n_experts == 16 and cfg.moe.top_k == 2
+    if arch == "gemma2-9b":
+        assert cfg.attn.softcap == 50.0 and cfg.logit_softcap == 30.0
+        assert cfg.attn.n_kv == 8 and cfg.attn.n_heads == 16
+    if arch == "qwen2-7b":
+        assert cfg.attn.bias and cfg.attn.n_kv == 4 and cfg.attn.n_heads == 28
+    if arch == "zamba2-7b":
+        assert cfg.ssm.d_state == 64
+    if arch == "rwkv6-3b":
+        assert cfg.d_ff == 8960
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_instrumentation_off_matches_on_loss(arch):
+    """Taps change nothing about the forward computation."""
+    aspec, cfg, mod, params, batch = smoke_setup(arch)
+    pex = PexSpec(enabled=True, method="gram")
+    lv_on, _, _ = registry.make_loss_fn(aspec, cfg, pex)(
+        params, taps.init_acc(3, pex), batch)
+    lv_off, _, _ = registry.make_loss_fn(aspec, cfg, taps.DISABLED)(
+        params, taps.init_acc(3, taps.DISABLED), batch)
+    np.testing.assert_allclose(lv_on, lv_off, rtol=1e-6)

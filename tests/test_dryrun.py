@@ -1,0 +1,32 @@
+"""Dry-run regression: the production-mesh lowering path compiles for
+reduced configs of every family, on both meshes, in a subprocess (the
+512-host-device XLA flag must be set before jax init, so this cannot
+run in-process with the rest of the suite)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, timeout=900)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v2-236b",
+                                  "zamba2-7b", "rwkv6-3b",
+                                  "seamless-m4t-medium"])
+def test_smoke_dryrun_single_pod(arch):
+    r = _run(["--smoke", "--arch", arch])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_smoke_dryrun_multi_pod():
+    r = _run(["--smoke", "--arch", "qwen2-7b", "--multi-pod"])
+    assert r.returncode == 0, r.stdout + r.stderr

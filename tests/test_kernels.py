@@ -1,0 +1,115 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode
+on CPU; the kernels target TPU BlockSpec tiling)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 24, 40), (3, 128, 512, 512),
+                                   (2, 200, 300, 520), (1, 256, 1024, 256),
+                                   (4, 64, 128, 896)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_norm(shape, dtype):
+    b, s, pi, po = shape
+    h = jnp.asarray(RNG.normal(size=(b, s, pi)), dtype)
+    z = jnp.asarray(RNG.normal(size=(b, s, po)), dtype)
+    got = ops.gram_norm(h, z)
+    want = ref.gram_norm_ref(h, z)
+    rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=rtol)
+
+
+@pytest.mark.parametrize("shape", [(4, 100), (8, 2048), (3, 5000), (16, 128),
+                                   (1, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rowsumsq(shape, dtype):
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(ops.rowsumsq(x), ref.rowsumsq_ref(x), rtol=rtol)
+
+
+@pytest.mark.parametrize("shape", [(2, 10, 36), (4, 256, 512), (3, 100, 130)])
+def test_clip_scale(shape):
+    z = jnp.asarray(RNG.normal(size=shape), jnp.float32)
+    c = jnp.asarray(RNG.uniform(0, 1, size=shape[0]), jnp.float32)
+    np.testing.assert_allclose(ops.clip_scale(z, c), ref.clip_scale_ref(z, c),
+                               rtol=1e-6)
+
+
+def test_gram_norm_zero_padding_exact():
+    """Padding rows/features must contribute exactly nothing."""
+    b, s, pi, po = 2, 100, 130, 70   # deliberately awkward sizes
+    h = jnp.asarray(RNG.normal(size=(b, s, pi)), jnp.float32)
+    z = jnp.asarray(RNG.normal(size=(b, s, po)), jnp.float32)
+    np.testing.assert_allclose(ops.gram_norm(h, z), ref.gram_norm_ref(h, z),
+                               rtol=1e-5)
+
+
+def test_gram_norm_matches_direct_identity():
+    """‖HᵀZ‖²_F == Σ_{tt'} <h,h><z,z> (the identity the kernel exploits)."""
+    b, s, pi, po = 3, 32, 48, 24
+    h = np.asarray(RNG.normal(size=(b, s, pi)), np.float32)
+    z = np.asarray(RNG.normal(size=(b, s, po)), np.float32)
+    direct = np.stack([((h[i].T @ z[i]) ** 2).sum() for i in range(b)])
+    np.testing.assert_allclose(np.asarray(ops.gram_norm(jnp.asarray(h),
+                                                        jnp.asarray(z))),
+                               direct, rtol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(B=2, Hq=4, Hkv=2, S=256, D=64, cap=None, win=None),
+    dict(B=1, Hq=8, Hkv=8, S=512, D=32, cap=None, win=None),
+    dict(B=2, Hq=4, Hkv=1, S=256, D=64, cap=50.0, win=None),
+    dict(B=1, Hq=2, Hkv=2, S=512, D=64, cap=None, win=128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(cfg, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    q = jnp.asarray(RNG.normal(size=(cfg["B"], cfg["Hq"], cfg["S"], cfg["D"])), dtype)
+    k = jnp.asarray(RNG.normal(size=(cfg["B"], cfg["Hkv"], cfg["S"], cfg["D"])), dtype)
+    v = jnp.asarray(RNG.normal(size=(cfg["B"], cfg["Hkv"], cfg["S"], cfg["D"])), dtype)
+    got = flash_attention(q, k, v, scale=cfg["D"] ** -0.5, softcap=cfg["cap"],
+                          window=cfg["win"], block_q=128, block_k=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, scale=cfg["D"] ** -0.5,
+                                   softcap=cfg["cap"], window=cfg["win"])
+    rtol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(B=1, Hq=2, Hkv=1, S=256, D=32, cap=None, win=None),
+    dict(B=2, Hq=4, Hkv=2, S=256, D=64, cap=None, win=None),
+    dict(B=1, Hq=2, Hkv=2, S=256, D=32, cap=None, win=128),
+    dict(B=1, Hq=2, Hkv=1, S=256, D=32, cap=30.0, win=None),
+])
+def test_flash_attention_backward(cfg):
+    """Pallas dq/dk/dv kernels vs the reference VJP (GQA accumulation,
+    sliding window, softcap chain rule)."""
+    import jax
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_bwd)
+    B, Hq, Hkv, S, D = (cfg[k] for k in ("B", "Hq", "Hkv", "S", "D"))
+    q = jnp.asarray(RNG.normal(size=(B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, S, D)), jnp.float32)
+    o, lse = flash_attention(q, k, v, scale=D ** -0.5, softcap=cfg["cap"],
+                             window=cfg["win"], block_q=128, block_k=128,
+                             interpret=True, return_lse=True)
+    do = jnp.asarray(RNG.normal(size=o.shape), jnp.float32)
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, do, scale=D ** -0.5, softcap=cfg["cap"],
+        window=cfg["win"], block_q=128, block_k=128, interpret=True)
+    _, vjp = jax.vjp(lambda a, b, c: ref.flash_attention_ref(
+        a, b, c, scale=D ** -0.5, softcap=cfg["cap"], window=cfg["win"]),
+        q, k, v)
+    rq, rk, rv = vjp(do)
+    np.testing.assert_allclose(dq, rq, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dk, rk, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dv, rv, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,313 @@
+"""Core machinery vs the paper-§3 naive oracle: every estimator, every
+tap op, under jit / scan / remat, plus both clipping forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, clipping, naive, taps
+from repro.core.taps import PexSpec
+
+
+def _toy(spec, B=4, S=6, D=8, H=10, V=12, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {
+        "emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * 0.3,
+        "w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * 0.3,
+        "b1": jnp.asarray(rng.normal(size=(H,)), jnp.float32) * 0.1,
+        "g": jnp.asarray(rng.normal(size=(H,)), jnp.float32) * 0.5 + 1.0,
+        "w2": jnp.asarray(rng.normal(size=(H, V)), jnp.float32) * 0.3,
+    }
+    batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
+             "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
+
+    def loss_fn(p, acc, b):
+        h, acc = taps.embedding(p["emb"], b["ids"], acc, spec=spec)
+        z, acc = taps.dense(h, p["w1"], acc, spec=spec)
+        z, acc = taps.bias_add(z, p["b1"], acc, spec=spec)
+        h = jax.nn.gelu(z)
+        h, acc = taps.scale(h, p["g"], acc, spec=spec)
+        logits, acc = taps.dense(h, p["w2"], acc, spec=spec)
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
+        return -jnp.sum(ll, axis=-1), acc, {}
+
+    return params, batch, loss_fn
+
+
+def _oracle(params, batch, loss_fn, B):
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        lv, _, _ = loss_fn(p, taps.init_acc(1, taps.DISABLED), b1)
+        return lv[0]
+    return naive.per_example_sq_norms(single, params, batch)
+
+
+@pytest.mark.parametrize("method", ["gram", "direct", "auto"])
+def test_sequence_methods_exact(method):
+    spec = PexSpec(enabled=True, method=method)
+    params, batch, loss_fn = _toy(spec)
+    res = api.value_and_norms(loss_fn, params, batch, spec, 4)
+    oracle = _oracle(params, batch, loss_fn, 4)
+    np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), oracle, rtol=2e-5)
+
+
+def test_gram_pallas_matches():
+    spec = PexSpec(enabled=True, method="gram", use_pallas=True)
+    params, batch, loss_fn = _toy(spec)
+    res = api.value_and_norms(loss_fn, params, batch, spec, 4)
+    oracle = _oracle(params, batch, loss_fn, 4)
+    np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), oracle, rtol=2e-5)
+
+
+def test_factorized_exact_for_mlp():
+    """Paper §4 verbatim is exact in the paper's (rank-1 / MLP) setting."""
+    spec = PexSpec(enabled=True, method="factorized")
+    rng = np.random.default_rng(1)
+    B, D, H, O = 5, 7, 9, 4
+    params = {"w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * 0.4,
+              "w2": jnp.asarray(rng.normal(size=(H, O)), jnp.float32) * 0.4}
+    batch = {"x": jnp.asarray(rng.normal(size=(B, D)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(B, O)), jnp.float32)}
+
+    def loss_fn(p, acc, b):
+        z, acc = taps.dense(b["x"], p["w1"], acc, spec=spec)
+        z2, acc = taps.dense(jnp.tanh(z), p["w2"], acc, spec=spec)
+        return jnp.sum(jnp.square(z2 - b["y"]), -1), acc, {}
+
+    res = api.value_and_norms(loss_fn, params, batch, spec, B)
+    oracle = _oracle(params, batch, loss_fn, B)
+    np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), oracle, rtol=2e-5)
+
+
+def test_single_pass_grads_match_plain():
+    spec = PexSpec(enabled=True, method="gram")
+    params, batch, loss_fn = _toy(spec)
+    res = api.value_grads_and_norms(loss_fn, params, batch, spec, 4)
+
+    def total(p):
+        lv, _, _ = loss_fn(p, taps.init_acc(4, spec), batch)
+        return jnp.sum(lv)
+
+    g = jax.grad(total)(params)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], g[k], rtol=1e-5, atol=1e-6)
+
+
+def test_twopass_clipping_matches_naive():
+    spec = PexSpec(enabled=True, method="gram")
+    params, batch, loss_fn = _toy(spec)
+    clip = 0.5
+    res = api.clipped_value_and_grads(loss_fn, params, batch, spec, 4, clip)
+    oracle = _oracle(params, batch, loss_fn, 4)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        lv, _, _ = loss_fn(p, taps.init_acc(1, taps.DISABLED), b1)
+        return lv[0]
+
+    pex_g = naive.per_example_grads(single, params, batch)
+    c = jnp.minimum(1.0, clip / (jnp.sqrt(oracle) + 1e-6))
+    for k in params:
+        want = jnp.einsum("b,b...->...", c, pex_g[k])
+        np.testing.assert_allclose(res.grads[k], want, rtol=1e-4, atol=1e-6)
+
+
+def test_onepass_paper_s6():
+    """§6 one-pass: rescale Z̄, recompute W̄' = XᵀZ̄' only."""
+    rng = np.random.default_rng(1)
+    B, D, H, O = 5, 7, 9, 4
+    params = {"w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * 0.4,
+              "w2": jnp.asarray(rng.normal(size=(H, O)), jnp.float32) * 0.4}
+    batch = {"x": jnp.asarray(rng.normal(size=(B, D)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(B, O)), jnp.float32)}
+
+    def forward(p, tp, b):
+        hs = {"w1": b["x"]}
+        z1 = b["x"] @ p["w1"] + tp["w1"]
+        h1 = jnp.tanh(z1)
+        hs["w2"] = h1
+        z2 = h1 @ p["w2"] + tp["w2"]
+        return jnp.sum(jnp.square(z2 - b["y"]), -1), hs
+
+    shapes = {"w1": (B, H), "w2": (B, O)}
+    _, sq, wbar = clipping.onepass_clipped_weight_grads(
+        forward, params, batch, shapes, clip_norm=0.7)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda v: v[None], ex)
+        tz = {k: jnp.zeros((1,) + s[1:]) for k, s in shapes.items()}
+        return forward(p, tz, b1)[0][0]
+
+    oracle = naive.per_example_sq_norms(single, params, batch)
+    np.testing.assert_allclose(sq, oracle, rtol=1e-5)
+    pex_g = naive.per_example_grads(single, params, batch)
+    c = jnp.minimum(1.0, 0.7 / (jnp.sqrt(oracle) + 1e-6))
+    for k in params:
+        want = jnp.einsum("b,b...->...", c, pex_g[k])
+        np.testing.assert_allclose(wbar[k], want, rtol=1e-4, atol=1e-6)
+
+
+def test_under_jit_scan_remat():
+    spec = PexSpec(enabled=True, method="gram")
+    rng = np.random.default_rng(2)
+    B, S, D, V = 4, 6, 8, 12
+    params = {"emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * .3,
+              "ws": jnp.asarray(rng.normal(size=(3, D, D)), jnp.float32) * .3,
+              "wo": jnp.asarray(rng.normal(size=(D, V)), jnp.float32) * .3}
+    batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
+             "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
+
+    def loss_fn(p, acc, b):
+        h, acc = taps.embedding(p["emb"], b["ids"], acc, spec=spec)
+
+        def blk(carry, w):
+            h, acc = carry
+            z, acc = taps.dense(h, w, acc, spec=spec)
+            return (jnp.tanh(z) + h, acc), None
+
+        (h, acc), _ = jax.lax.scan(jax.checkpoint(blk), (h, acc), p["ws"])
+        logits, acc = taps.dense(h, p["wo"], acc, spec=spec)
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
+        return -jnp.sum(ll, -1), acc, {}
+
+    @jax.jit
+    def run(p, b):
+        return api.value_and_norms(loss_fn, p, b, spec, B).sq_norms
+
+    ours = jnp.sum(run(params, batch), -1)
+    oracle = _oracle(params, batch, loss_fn, B)
+    np.testing.assert_allclose(ours, oracle, rtol=2e-5)
+
+
+def test_disabled_spec_is_plain():
+    spec = taps.DISABLED
+    params, batch, loss_fn = _toy(spec)
+    lv, acc, _ = loss_fn(params, taps.init_acc(4, spec), batch)
+    assert lv.shape == (4,)
+    np.testing.assert_array_equal(acc, jnp.zeros((4, 1)))
+
+
+def test_norm_only_pass_value_matches():
+    spec = PexSpec(enabled=True, method="gram")
+    params, batch, loss_fn = _toy(spec)
+    res = api.value_and_norms(loss_fn, params, batch, spec, 4)
+    lv, _, _ = loss_fn(params, taps.init_acc(4, spec), batch)
+    np.testing.assert_allclose(res.loss, jnp.sum(lv), rtol=1e-6)
+    np.testing.assert_allclose(res.loss_vec, lv, rtol=1e-6)
+
+
+def test_onepass_s6_sequence_model():
+    """§6 one-pass on a weight-shared (sequence) model: Gram norms +
+    W̄' = XᵀZ̄' match the naive per-example clip exactly."""
+    rng = np.random.default_rng(3)
+    B, S, D, H = 4, 6, 8, 10
+    params = {"w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * .4,
+              "w2": jnp.asarray(rng.normal(size=(H, D)), jnp.float32) * .4}
+    batch = {"x": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)}
+
+    def forward(p, tp, b):
+        hs = {"w1": b["x"]}
+        z1 = b["x"] @ p["w1"] + tp["w1"]
+        h1 = jnp.tanh(z1)
+        hs["w2"] = h1
+        z2 = h1 @ p["w2"] + tp["w2"]
+        lv = jnp.sum(jnp.square(z2 - b["y"]), axis=(1, 2))
+        return lv, hs
+
+    shapes = {"w1": (B, S, H), "w2": (B, S, D)}
+    _, sq, wbar = clipping.onepass_clipped_weight_grads_seq(
+        forward, params, batch, shapes, clip_norm=0.9)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda v: v[None], ex)
+        tz = {k: jnp.zeros((1,) + s[1:]) for k, s in shapes.items()}
+        return forward(p, tz, b1)[0][0]
+
+    oracle = naive.per_example_sq_norms(single, params, batch)
+    np.testing.assert_allclose(sq, oracle, rtol=1e-5)
+    pg = naive.per_example_grads(single, params, batch)
+    c = jnp.minimum(1.0, 0.9 / (jnp.sqrt(oracle) + 1e-6))
+    for k in params:
+        want = jnp.einsum("b,b...->...", c, pg[k])
+        np.testing.assert_allclose(wbar[k], want, rtol=1e-4, atol=1e-6)
+
+
+def test_per_group_norm_columns():
+    """acc columns split per group and sum to the total."""
+    spec_g = PexSpec(enabled=True, method="gram",
+                     groups=("embed", "dense", "norm"))
+    rng = np.random.default_rng(5)
+    B, S, D, V = 3, 5, 6, 8
+    params = {"emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * .3,
+              "w": jnp.asarray(rng.normal(size=(D, V)), jnp.float32) * .3,
+              "g": jnp.ones((D,), jnp.float32)}
+    batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
+             "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
+
+    def loss_fn(p, acc, b):
+        h, acc = taps.embedding(p["emb"], b["ids"], acc, spec=spec_g,
+                                group="embed")
+        h, acc = taps.scale(h, p["g"], acc, spec=spec_g, group="norm")
+        logits, acc = taps.dense(h, p["w"], acc, spec=spec_g, group="dense")
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
+        return -jnp.sum(ll, -1), acc, {}
+
+    res = api.value_and_norms(loss_fn, params, batch, spec_g, B)
+    assert res.sq_norms.shape == (B, 3)
+    # column-wise oracle via param filters
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        lv, _, _ = loss_fn(p, taps.init_acc(1, taps.DISABLED), b1)
+        return lv[0]
+    for col, key in [(0, "emb"), (1, "w"), (2, "g")]:
+        want = naive.per_example_sq_norms(
+            single, params, batch, lambda path, k=key: f"'{k}'" in str(path))
+        np.testing.assert_allclose(res.sq_norms[:, col], want, rtol=1e-4)
+
+
+def test_per_token_norms_exact():
+    """Per-token §4: s_{j,t} = ||h_t||²||z̄_t||² exactly equals the
+    Frobenius norm of token t's rank-1 gradient contribution, and the
+    contributions reconstruct the full dW."""
+    from repro.core import token_norms
+    rng = np.random.default_rng(9)
+    B, S, D, H = 3, 7, 6, 10
+    params = {"w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * .4,
+              "w2": jnp.asarray(rng.normal(size=(H, D)), jnp.float32) * .4}
+    batch = {"x": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)}
+
+    def loss_fn(p, acc, b):
+        z1, acc = token_norms.token_dense(b["x"], p["w1"], acc)
+        h1 = jnp.tanh(z1)
+        z2, acc = token_norms.token_dense(h1, p["w2"], acc)
+        return jnp.sum(jnp.square(z2 - b["y"]), axis=(1, 2)), acc, {}
+
+    res = token_norms.value_and_token_norms(loss_fn, params, batch, B, S)
+    assert res.sq_norms.shape == (B, S)
+
+    # oracle: materialize z̄ via perturbation taps
+    def f(tp):
+        z1 = batch["x"] @ params["w1"] + tp["t1"]
+        h1 = jnp.tanh(z1)
+        z2 = h1 @ params["w2"] + tp["t2"]
+        return jnp.sum(jnp.square(z2 - batch["y"])), h1
+
+    taps0 = {"t1": jnp.zeros((B, S, H)), "t2": jnp.zeros((B, S, D))}
+    total, vjp, h1 = jax.vjp(f, taps0, has_aux=True)
+    (zb,) = vjp(jnp.ones(()))
+    want = (np.sum(np.square(np.asarray(batch["x"])), -1) *
+            np.sum(np.square(np.asarray(zb["t1"])), -1) +
+            np.sum(np.square(np.asarray(h1)), -1) *
+            np.sum(np.square(np.asarray(zb["t2"])), -1))
+    np.testing.assert_allclose(res.sq_norms, want, rtol=1e-5)
+
+    # rank-1 reconstruction: Σ_{j,t} h z̄ᵀ == dW
+    dw1 = jnp.einsum("bsi,bso->io", batch["x"], zb["t1"])
+    g = jax.grad(lambda p: jnp.sum(loss_fn(
+        p, token_norms.init_token_acc(B, S), batch)[0]))(params)
+    np.testing.assert_allclose(dw1, g["w1"], rtol=1e-5)

@@ -1,0 +1,95 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import norms as N
+from repro.kernels import ops, ref
+
+DIM = st.integers(min_value=1, max_value=12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 4), s=st.integers(1, 10), pi=DIM, po=DIM,
+       seed=st.integers(0, 2 ** 16))
+def test_gram_equals_direct_equals_bruteforce(b, s, pi, po, seed):
+    """All exact estimators agree with ‖H_jᵀZ̄_j‖²_F for any shape."""
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(b, s, pi)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(b, s, po)), jnp.float32)
+    brute = np.stack([((np.asarray(h[i]).T @ np.asarray(z[i])) ** 2).sum()
+                      for i in range(b)])
+    np.testing.assert_allclose(N.stat_gram(h, z), brute, rtol=1e-4)
+    np.testing.assert_allclose(N.stat_direct(h, z, chunk=3), brute, rtol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 4), s=st.integers(1, 8), p=DIM,
+       seed=st.integers(0, 2 ** 16))
+def test_factorized_upper_bounds_exact(b, s, p, seed):
+    """Mechanical §4 on flattened rows ≥ the exact norm (Cauchy–Schwarz);
+    equality at s=1 — the paper's setting."""
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(b, s, p)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(b, s, p)), jnp.float32)
+    fact = np.asarray(N.stat_factorized(h, z))
+    exact = np.asarray(N.stat_gram(h, z))
+    assert np.all(fact >= exact * (1 - 1e-5))
+    if s == 1:
+        np.testing.assert_allclose(fact, exact, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=st.integers(1, 24), pi=DIM, po=DIM, b=st.integers(1, 5),
+       seed=st.integers(0, 2 ** 16))
+def test_segmented_direct_bruteforce(t, pi, po, b, seed):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(t, pi)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(t, po)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, b + 1, size=(t,)), jnp.int32)
+    got = N.stat_direct_segmented(h, z, seg, b, chunk_in=4, token_block=5)
+    want = []
+    for j in range(b):
+        m = np.asarray(seg) == j
+        g = np.asarray(h)[m].T @ np.asarray(z)[m]
+        want.append((g ** 2).sum())
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 4), s=st.integers(1, 10), d=DIM, v=st.integers(2, 9),
+       seed=st.integers(0, 2 ** 16))
+def test_embedding_segment_norm_bruteforce(b, s, d, v, seed):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, v, size=(b, s)), jnp.int32)
+    z = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    got = N.stat_embedding(ids, z)
+    want = np.zeros(b)
+    for j in range(b):
+        acc = {}
+        for t in range(s):
+            acc.setdefault(int(ids[j, t]), np.zeros(d))
+            acc[int(ids[j, t])] += np.asarray(z[j, t])
+        want[j] = sum((vv ** 2).sum() for vv in acc.values())
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 6), s=st.integers(1, 40), pi=st.integers(1, 80),
+       po=st.integers(1, 80), seed=st.integers(0, 2 ** 16))
+def test_pallas_gram_any_shape(b, s, pi, po, seed):
+    """Kernel wrapper pads arbitrary shapes exactly."""
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(b, s, pi)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(b, s, po)), jnp.float32)
+    np.testing.assert_allclose(ops.gram_norm(h, z), ref.gram_norm_ref(h, z),
+                               rtol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 5), n=st.integers(1, 300), seed=st.integers(0, 2**16))
+def test_pallas_rowsumsq_any_shape(b, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    np.testing.assert_allclose(ops.rowsumsq(x), ref.rowsumsq_ref(x), rtol=1e-5)

@@ -1,0 +1,158 @@
+"""Integration: trainer step modes, serving engine, decode-state
+continuity, local/global masking, MoE capacity behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.common import ShapeSpec
+from repro.core import taps
+from repro.core.taps import PexSpec
+from repro.data.pipeline import DataConfig
+from repro.models import registry
+from repro.nn.param import unbox
+from repro.optim import adamw
+from repro.serve.engine import Engine, Request
+from repro.train.trainer import TrainConfig, Trainer
+
+from helpers import smoke_setup
+
+
+def _trainer(mode, steps=6, arch="llama3.2-1b", **kw):
+    aspec = registry.get(arch)
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    pex = PexSpec(enabled=True, method="gram")
+    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    return Trainer(loss_fn, params, pex, adamw.AdamWConfig(lr=1e-3),
+                   TrainConfig(mode=mode, steps=steps, log_every=0, **kw),
+                   DataConfig(vocab=cfg.vocab, seq=16, global_batch=8))
+
+
+@pytest.mark.parametrize("mode", ["plain", "norms", "clip", "importance"])
+def test_trainer_modes_reduce_loss_and_run(mode):
+    t = _trainer(mode, steps=8)
+    ms = t.train()
+    assert len(ms) == 8
+    assert all(np.isfinite(m["loss"]) for m in ms)
+    if mode in ("norms", "clip"):
+        assert all(m["norm_mean"] > 0 for m in ms)
+
+
+def test_trainer_grad_compression_runs():
+    t = _trainer("norms", steps=4, compress_grads=True)
+    ms = t.train()
+    assert np.isfinite(ms[-1]["loss"])
+
+
+def test_engine_slot_recycling_and_lengths():
+    arch = "llama3.2-1b"
+    aspec = registry.get(arch)
+    cfg = registry.serving_config(aspec, aspec.smoke(),
+                                  ShapeSpec("t", "decode", 32, 2))
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    eng = Engine(arch, cfg, params, batch_slots=2, temperature=0.0)
+    reqs = [Request(prompt=[1, 2, 3], max_new=4),
+            Request(prompt=[4, 5], max_new=6),
+            Request(prompt=[7], max_new=3)]
+    done = eng.generate(reqs)
+    assert [len(r.out) for r in done] == [4, 6, 3]
+    # greedy decode is deterministic
+    done2 = Engine(arch, cfg, params, batch_slots=2,
+                   temperature=0.0).generate(
+        [Request(prompt=[1, 2, 3], max_new=4)])
+    assert done2[0].out == done[0].out
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-7b"])
+def test_ssm_two_segment_prefill_matches_one_shot(arch):
+    """Feeding S tokens as two chunks through the recurrent state must
+    equal one-shot prefill — the property elastic decode relies on."""
+    aspec = registry.get(arch)
+    mod = registry.family_module(aspec)
+    B, S = 2, 8
+    cfg = registry.serving_config(aspec, aspec.smoke(),
+                                  ShapeSpec("t", "decode", S, B))
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    fwd = registry.make_forward_tokens(aspec, cfg)
+    batch = registry.make_train_batch(aspec, cfg, ShapeSpec("t", "train", S, B))
+
+    logits_full, _ = fwd(params, batch, mod.init_caches(B, cfg), 0)
+    c = mod.init_caches(B, cfg)
+    _, c = fwd(params, {"ids": batch["ids"][:, :5]}, c, 0)
+    logits_b, _ = fwd(params, {"ids": batch["ids"][:, 5:]}, c, 5)
+    np.testing.assert_allclose(np.asarray(logits_full[:, 5:, :cfg.vocab]),
+                               np.asarray(logits_b[:, :, :cfg.vocab]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gemma2_local_layers_actually_window():
+    """Even layers must not see beyond the window; odd (global) must."""
+    from repro.nn.attention import AttnCfg, _attend
+    cfg = AttnCfg(d_model=8, n_heads=1, n_kv=1, head_dim=8, window=2,
+                  head_multiple=1)
+    B, S = 1, 6
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, S, 1, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, 1, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, 1, 8)), jnp.float32)
+    out_local = _attend(q, k, v, cfg, 0, None, local_flag=jnp.array(True))
+    out_global = _attend(q, k, v, cfg, 0, None, local_flag=jnp.array(False))
+    # with window=2 the last query ignores k[:3]; perturbing k[0] must
+    # change only the global variant
+    k2 = k.at[:, 0].add(10.0)
+    out_local2 = _attend(q, k2, v, cfg, 0, None, local_flag=jnp.array(True))
+    out_global2 = _attend(q, k2, v, cfg, 0, None, local_flag=jnp.array(False))
+    np.testing.assert_allclose(out_local[:, -1], out_local2[:, -1], rtol=1e-6)
+    assert np.abs(np.asarray(out_global[:, -1] - out_global2[:, -1])).max() > 1e-4
+
+
+def test_moe_capacity_drops_tokens_not_nans():
+    from repro.nn.moe import MoeCfg, init_moe, moe
+    cfg = MoeCfg(d_model=16, d_ff=8, n_experts=4, top_k=2,
+                 capacity_factor=0.25)   # aggressive drops
+    p = unbox(init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 16)),
+                    jnp.float32)
+    y, _ = moe(p, x, taps.init_acc(2, taps.DISABLED), cfg=cfg,
+               spec=taps.DISABLED)
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_elastic_restore_reshard(tmp_path):
+    """Checkpoint written once restores under a different (simulated)
+    topology: values identical, placement re-derived."""
+    from repro.ckpt.checkpoint import CheckpointManager
+    tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree, block=True)
+    dev = jax.devices()[0]
+    sh = jax.sharding.SingleDeviceSharding(dev)
+    restored, _ = mgr.restore(1, tree,
+                              shardings={"w": sh})
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    assert restored["w"].sharding == sh
+
+
+def test_flash_attention_wiring_matches_plain():
+    """flash=True must not change loss, grads, or per-example norms."""
+    from repro.core import api
+    aspec = registry.get("llama3.2-1b")
+    cfg = aspec.smoke()
+    cfg_f = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, flash=True))
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    batch = registry.make_train_batch(aspec, cfg,
+                                      ShapeSpec("t", "train", 128, 2))
+    pex = PexSpec(enabled=True, method="gram")
+    r1 = api.value_grads_and_norms(
+        registry.make_loss_fn(aspec, cfg, pex), params, batch, pex, 2)
+    r2 = api.value_grads_and_norms(
+        registry.make_loss_fn(aspec, cfg_f, pex), params, batch, pex, 2)
+    np.testing.assert_allclose(r1.loss, r2.loss, rtol=1e-4)
+    np.testing.assert_allclose(r1.sq_norms, r2.sq_norms, rtol=1e-3)
