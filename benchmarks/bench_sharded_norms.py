@@ -1,0 +1,78 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# ^ MUST precede any jax-touching import (device count locks at first init).
+
+"""Sharded vs single-device per-example-norm throughput.
+
+Times value_and_norms (norms-only) and value_grads_and_norms (grads +
+norms) on the smoke model, single-device vs the dist.pex shard_map
+pipeline over an 8-way host-CPU data mesh, and reports examples/s.
+
+Host-CPU shards share the same silicon, so this measures the
+*pipeline overhead* of the shard_map path (partitioning, psum,
+layout), not real scaling — on a TPU pod the shards are physical.
+
+    PYTHONPATH=src python benchmarks/bench_sharded_norms.py
+    PYTHONPATH=src python benchmarks/bench_sharded_norms.py --batch 32 --seq 16
+"""
+import argparse
+import sys
+
+import jax
+
+try:
+    from benchmarks.common import row, time_fn
+except ImportError:   # run as a script: python benchmarks/bench_sharded_norms.py
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import row, time_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--method", default="gram")
+    args = ap.parse_args()
+
+    from repro.configs.common import ShapeSpec
+    from repro.core import api
+    from repro.core.taps import PexSpec
+    from repro.dist import pex
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import registry
+    from repro.nn.param import unbox
+
+    aspec = registry.get(args.arch)
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    spec = PexSpec(enabled=True, method=args.method)
+    loss_fn = registry.make_loss_fn(aspec, cfg, spec)
+    batch = registry.make_train_batch(
+        aspec, cfg, ShapeSpec("bench", "train", args.seq, args.batch))
+    mesh = make_host_mesh(model_parallel=1)
+    n_shards = mesh.shape["data"]
+    b = args.batch
+    print(f"# {args.arch} smoke, B={b} S={args.seq}, "
+          f"{n_shards}-way data mesh vs single device")
+    print("variant,us,examples_per_s")
+
+    cases = {
+        "norms_single": jax.jit(lambda p, d: api.value_and_norms(
+            loss_fn, p, d, spec, b).sq_norms),
+        "norms_sharded": jax.jit(lambda p, d: pex.value_and_norms(
+            loss_fn, p, d, spec, b, mesh=mesh).sq_norms),
+        "grads_norms_single": jax.jit(lambda p, d: api.value_grads_and_norms(
+            loss_fn, p, d, spec, b).grads),
+        "grads_norms_sharded": jax.jit(lambda p, d: pex.value_grads_and_norms(
+            loss_fn, p, d, spec, b, mesh=mesh).grads),
+    }
+    for name, fn in cases.items():
+        us = time_fn(fn, params, batch)
+        row(name, us, f"{b / (us * 1e-6):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -63,6 +63,19 @@ def value_grads_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
     return PexResult(loss, loss_vec, aux, sq, grads)
 
 
+def add_grad_noise(grads, noise_std: float, clip_norm: float,
+                   rng: jax.Array):
+    """σ·C Gaussian noise per leaf — the DP-SGD noise step. Kept
+    separate from the clipping passes so the sharded pipeline
+    (dist.pex) can apply it once after the gradient allreduce."""
+    flat, tree = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(rng, len(flat))
+    flat = [g + noise_std * clip_norm *
+            jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+            for g, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(tree, flat)
+
+
 def clip_coefficients(sq_norms: jax.Array, clip_norm: float,
                       eps: float = 1e-6) -> jax.Array:
     """c_j = min(1, C / ||g_j||). sq_norms: (B,) or (B,G) (summed)."""
@@ -92,10 +105,5 @@ def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
 
     grads = jax.grad(g)(params)
     if noise_std > 0.0:
-        flat, tree = jax.tree_util.tree_flatten(grads)
-        keys = jax.random.split(noise_rng, len(flat))
-        flat = [g_ + noise_std * clip_norm *
-                jax.random.normal(k, g_.shape, jnp.float32).astype(g_.dtype)
-                for g_, k in zip(flat, keys)]
-        grads = jax.tree_util.tree_unflatten(tree, flat)
+        grads = add_grad_noise(grads, noise_std, clip_norm, noise_rng)
     return PexResult(res.loss, res.loss_vec, res.aux, res.sq_norms, grads)

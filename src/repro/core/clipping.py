@@ -26,10 +26,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import clip_coefficients
+from repro.dist.sharding import shard
 
 
 def zero_taps(shapes: Dict[str, Tuple[int, ...]], dtype=jnp.float32):
-    return {k: jnp.zeros(s, dtype) for k, s in shapes.items()}
+    """Zero perturbation taps, batch-sharded under an active mesh: each
+    tap (and its cotangent Z̄) leads with the example axis, so the whole
+    one-pass pipeline stays shard-local like the accumulator form."""
+    return {k: shard(jnp.zeros(s, dtype), "batch", *([None] * (len(s) - 1)))
+            for k, s in shapes.items()}
 
 
 def norms_from_taps(hs: Dict[str, jax.Array],

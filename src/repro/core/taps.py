@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import norms as N
+from repro.dist.sharding import shard as _shard
 
 _ACC_DTYPE = jnp.float32
 
@@ -75,8 +76,14 @@ DISABLED = PexSpec(enabled=False)
 
 
 def init_acc(batch: int, spec: PexSpec) -> jax.Array:
-    """Fresh accumulator for one instrumented forward pass."""
-    return jnp.zeros((batch, spec.n_groups), _ACC_DTYPE)
+    """Fresh accumulator for one instrumented forward pass.
+
+    Constrained to the batch axis under an active mesh (dist.sharding
+    rules): the accumulator — and hence its cotangent, the (B, G) norm
+    vector — lives wherever the examples live, keeping the technique
+    collective-free under data parallelism."""
+    return _shard(jnp.zeros((batch, spec.n_groups), _ACC_DTYPE),
+                  "batch", None)
 
 
 def _int_zero_cotangent(x):

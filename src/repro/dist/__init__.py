@@ -1,0 +1,21 @@
+"""Distribution substrate: rules-based sharding + the mesh-sharded
+per-example-norm pipeline.
+
+``repro.dist.sharding`` is the logical-axis layer every ``nn/`` module
+talks to; ``repro.dist.pex`` lifts the ``core.api`` per-example
+transforms onto a device mesh with ``shard_map``. See DESIGN.md §4.
+
+``pex`` loads lazily: it imports ``core.api``, whose tap layer imports
+``dist.sharding`` — an eager import here would close that cycle while
+``core.api`` is still half-initialized.
+"""
+from repro.dist import sharding
+
+__all__ = ["sharding", "pex"]
+
+
+def __getattr__(name):
+    if name == "pex":
+        import importlib
+        return importlib.import_module("repro.dist.pex")
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

@@ -1,0 +1,242 @@
+"""Mesh-sharded per-example-norm pipeline (DESIGN.md §4).
+
+Lifts the ``core.api`` transforms onto a device mesh with
+``shard_map``: the batch is split over the data axes, each shard runs
+the tap-instrumented model on its local examples, and only the
+*parameter gradients* (and scalar loss) cross devices via ``psum``.
+The per-example quantities — the (B,) loss vector and the (B, G)
+squared norms — stay batch-sharded end to end, which is the whole
+point: the accumulator technique adds no collective traffic (taps
+docstring), and this module keeps that true on a mesh.
+
+Clipping composes for free: the clip coefficient c_j depends only on
+example j's own norm, so it is computed shard-locally and the clipped
+gradients allreduce exactly like plain ones. DP-SGD noise is added
+once, *after* the psum — adding it per-shard would inflate the noise
+variance by the shard count.
+
+Mesh axes not named in ``data_axes`` (e.g. "model") are left in auto
+mode, so the standard ``("data", "model")`` mesh from ``launch.mesh``
+composes directly. On the pinned jax (0.4.x) XLA's manual-subgroup
+SPMD support is incomplete: auto axes of extent > 1 crash the
+partitioner, so those are rejected with an actionable error until the
+toolchain moves — pure data parallelism (any extent, any number of
+data axes) is fully supported.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import api
+from repro.core.api import PexResult
+from repro.core.taps import PexSpec
+from repro.dist import sharding as shd
+
+DataAxes = Tuple[str, ...]
+
+
+def _norm_axes(data_axes) -> DataAxes:
+    if isinstance(data_axes, str):
+        return (data_axes,)
+    return tuple(data_axes)
+
+
+def _reject_aux(aux) -> None:
+    """The sharded paths return PexResult.aux == {}: an arbitrary aux
+    pytree has no inferable out_spec (per-example? replicated?). Fail
+    loudly at trace time instead of silently dropping real metrics."""
+    if jax.tree_util.tree_leaves(aux):
+        raise NotImplementedError(
+            "loss_fn returned a non-empty aux pytree, which the sharded "
+            "per-example pipeline does not thread through; fold metrics "
+            "into loss_vec/sq_norms or run single-device (mesh=None)")
+
+
+def _wrap(mesh: Mesh, data_axes: DataAxes, fn: Callable, n_out_sharded: int,
+          n_out_replicated: int) -> Callable:
+    """shard_map ``fn(params, batch) -> (*sharded, *replicated)``.
+
+    ``sharded`` outputs carry a leading batch axis split over
+    ``data_axes``; ``replicated`` outputs (scalar loss, psum'd grads)
+    are identical on every shard. Axes outside ``data_axes`` stay auto
+    so in-model tensor-parallel constraints keep working.
+    """
+    dp = P(data_axes)
+    rest = frozenset(mesh.axis_names) - frozenset(data_axes)
+    big_rest = [a for a in rest if mesh.shape[a] > 1]
+    if big_rest:
+        raise NotImplementedError(
+            f"mesh axes {big_rest} (extent > 1) outside data_axes="
+            f"{data_axes}: jax 0.4.x shard_map auto-subgroups crash "
+            f"XLA's SPMD partitioner; run per-example sharding "
+            f"data-parallel-only, or include the axis in data_axes")
+    # extent-1 non-data axes are safely manual (replication over a
+    # singleton is trivial), so no `auto=` — which 0.4.x also lacks
+    # outside jit.
+    out_specs = tuple([dp] * n_out_sharded + [P()] * n_out_replicated)
+
+    def body(params, batch):
+        # inside the fully-manual region every placement is already
+        # decided, so in-model rules-based constraints (dist.sharding
+        # .shard) must go quiet — they reference manual mesh axes,
+        # which with_sharding_constraint rejects
+        with shd.use_rules(None, {}):
+            return fn(params, batch)
+
+    return shard_map(body, mesh=mesh, in_specs=(P(), dp),
+                     out_specs=out_specs, check_rep=False)
+
+
+def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
+                    batch_size: int, *, mesh: Optional[Mesh] = None,
+                    data_axes: Sequence[str] = ("data",)) -> PexResult:
+    """Sharded norms-only pass. Single-device semantics when mesh=None.
+
+    Returns the same PexResult as ``core.api.value_and_norms``; the
+    loss is the global scalar, ``loss_vec``/``sq_norms`` are the full
+    (B,)/(B, G) arrays, laid out batch-sharded over ``data_axes``.
+    ``aux`` is always {} on the mesh path (non-empty aux raises — see
+    ``_reject_aux``); the grads/clipped variants share this contract.
+    """
+    if mesh is None:
+        return api.value_and_norms(loss_fn, params, batch, spec, batch_size)
+    data_axes = _norm_axes(data_axes)
+    local_b = shd.local_batch(batch_size, data_axes, mesh)
+
+    def run(p, b):
+        r = api.value_and_norms(loss_fn, p, b, spec, local_b)
+        _reject_aux(r.aux)
+        return r.loss_vec, r.sq_norms, jax.lax.psum(r.loss, data_axes)
+
+    loss_vec, sq, loss = _wrap(mesh, data_axes, run, 2, 1)(params, batch)
+    return PexResult(loss, loss_vec, {}, sq)
+
+
+def value_grads_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
+                          batch_size: int, *, mesh: Optional[Mesh] = None,
+                          data_axes: Sequence[str] = ("data",)) -> PexResult:
+    """Sharded headline pass: summed gradients (psum over the data
+    axes) AND batch-sharded per-example norms in one backward."""
+    if mesh is None:
+        return api.value_grads_and_norms(loss_fn, params, batch, spec,
+                                         batch_size)
+    data_axes = _norm_axes(data_axes)
+    local_b = shd.local_batch(batch_size, data_axes, mesh)
+
+    def run(p, b):
+        r = api.value_grads_and_norms(loss_fn, p, b, spec, local_b)
+        _reject_aux(r.aux)
+        return (r.loss_vec, r.sq_norms,
+                jax.lax.psum(r.loss, data_axes),
+                jax.lax.psum(r.grads, data_axes))
+
+    loss_vec, sq, loss, grads = _wrap(mesh, data_axes, run, 2, 2)(
+        params, batch)
+    return PexResult(loss, loss_vec, {}, sq, grads)
+
+
+def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
+                            batch_size: int, clip_norm: float,
+                            noise_std: float = 0.0,
+                            noise_rng: Optional[jax.Array] = None, *,
+                            mesh: Optional[Mesh] = None,
+                            data_axes: Sequence[str] = ("data",)) -> PexResult:
+    """Sharded per-example clipping (paper §6, two-pass ghost form).
+
+    c_j uses only example j's local norm, so both passes run entirely
+    shard-local; one gradient psum at the end. Noise is added once to
+    the reduced gradient (matching the single-device DP-SGD step), not
+    per shard.
+    """
+    if mesh is None:
+        return api.clipped_value_and_grads(loss_fn, params, batch, spec,
+                                           batch_size, clip_norm,
+                                           noise_std=noise_std,
+                                           noise_rng=noise_rng)
+    data_axes = _norm_axes(data_axes)
+    local_b = shd.local_batch(batch_size, data_axes, mesh)
+
+    def run(p, b):
+        r = api.clipped_value_and_grads(loss_fn, p, b, spec, local_b,
+                                        clip_norm)
+        _reject_aux(r.aux)
+        return (r.loss_vec, r.sq_norms,
+                jax.lax.psum(r.loss, data_axes),
+                jax.lax.psum(r.grads, data_axes))
+
+    loss_vec, sq, loss, grads = _wrap(mesh, data_axes, run, 2, 2)(
+        params, batch)
+    if noise_std > 0.0:
+        grads = api.add_grad_noise(grads, noise_std, clip_norm, noise_rng)
+    return PexResult(loss, loss_vec, {}, sq, grads)
+
+
+# --- facade ----------------------------------------------------------------
+
+class ShardedPexAPI:
+    """``core.api``-shaped namespace bound to one (mesh, data_axes).
+
+    Lets call sites (trainer, dryrun) pick the single-device or the
+    mesh path with one assignment instead of branching at every call.
+    """
+
+    def __init__(self, mesh: Mesh, data_axes: Sequence[str] = ("data",)):
+        self.mesh = mesh
+        self.data_axes = _norm_axes(data_axes)
+
+    def value_and_norms(self, loss_fn, params, batch, spec, batch_size):
+        return value_and_norms(loss_fn, params, batch, spec, batch_size,
+                               mesh=self.mesh, data_axes=self.data_axes)
+
+    def value_grads_and_norms(self, loss_fn, params, batch, spec, batch_size):
+        return value_grads_and_norms(loss_fn, params, batch, spec,
+                                     batch_size, mesh=self.mesh,
+                                     data_axes=self.data_axes)
+
+    def clipped_value_and_grads(self, loss_fn, params, batch, spec,
+                                batch_size, clip_norm, noise_std=0.0,
+                                noise_rng=None):
+        return clipped_value_and_grads(loss_fn, params, batch, spec,
+                                       batch_size, clip_norm,
+                                       noise_std=noise_std,
+                                       noise_rng=noise_rng, mesh=self.mesh,
+                                       data_axes=self.data_axes)
+
+
+def api_for(mesh: Optional[Mesh] = None,
+            data_axes: Sequence[str] = ("data",)):
+    """``core.api`` when mesh is None, else a mesh-bound facade."""
+    if mesh is None:
+        return api
+    return ShardedPexAPI(mesh, data_axes)
+
+
+# --- diagnostics -----------------------------------------------------------
+
+def gradient_noise_scale(sq_norms: jax.Array, grads,
+                         batch_size: Optional[int] = None) -> jax.Array:
+    """Critical-batch diagnostic B_simple = tr(Σ) / ||G||² from the
+    per-example squared norms the pipeline already computes.
+
+    With s̄ = mean_j ||g_j||² and the batch gradient G_B (= mean of the
+    per-example gradients): E[s̄] = tr(Σ) + ||G||² and
+    E[||G_B||²] = ||G||² + tr(Σ)/B, so both moments are recovered
+    unbiasedly from one step — the large-batch monitoring quantity of
+    Gray et al. (2024) / McCandlish et al. (2018). ``grads`` is the
+    *summed* gradient pytree (what ``value_grads_and_norms`` returns);
+    pass ``batch_size`` when it differs from ``len(sq_norms)``.
+    """
+    if sq_norms.ndim == 2:
+        sq_norms = jnp.sum(sq_norms, axis=-1)
+    b = batch_size if batch_size is not None else sq_norms.shape[0]
+    s_bar = jnp.mean(sq_norms.astype(jnp.float32))
+    g_mean_sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree_util.tree_leaves(grads)) / (b * b)
+    tr_sigma = (s_bar - g_mean_sq) * b / (b - 1)
+    norm_g_sq = (b * g_mean_sq - s_bar) / (b - 1)
+    return tr_sigma / jnp.maximum(norm_g_sq, 1e-20)

@@ -12,13 +12,16 @@ product is reduced into a per-example scalar. Nothing of size S×S ever
 exists — the working set is four (Ts × C) row panels + two Ts×Ts f32
 scratch accumulators in VMEM.
 
-Grid: (B, S/Ts, S/Ts, K) with K = max(p_in, p_out)/C feature chunks.
-The k axis is the innermost (fastest) so the scratch accumulators for a
-given (i, j) complete before the product is folded into the output.
-Feature chunks beyond a tensor's own extent are masked with ``pl.when``
-(their index map clamps, so the loads stay in bounds).
+Grid: (B, S/Ts, S/Ts, K) with K = max(p_in/C_in, p_out/C_out) feature
+chunks — the H-gram and Z̄-gram are chunked *independently* (C_in over
+p_in, C_out over p_out), so asymmetric feature dims each pad only to
+their own chunk size instead of the larger tensor's. The k axis is the
+innermost (fastest) so the scratch accumulators for a given (i, j)
+complete before the product is folded into the output. Feature chunks
+beyond a tensor's own chunk count are masked with ``pl.when`` (their
+index map clamps, so the loads stay in bounds).
 
-VMEM budget at Ts=128, C=512, bf16 inputs:
+VMEM budget at Ts=128, C_in=C_out=512, bf16 inputs:
     4 panels · 128·512·2 B = 512 KiB   + 2 scratch · 128·128·4 B = 128 KiB
 well under the ~16 MiB/core budget; MXU dims (128, 512) are aligned to
 the 128×128 systolic array.
@@ -69,19 +72,24 @@ def _kernel(k_in: int, k_out: int, n_k: int,
             out_ref[0, 0] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("tile_s", "chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_s", "chunk_in",
+                                              "chunk_out", "interpret"))
 def gram_norm(h: jax.Array, zbar: jax.Array, *, tile_s: int = 128,
-              chunk: int = 512, interpret: bool = False) -> jax.Array:
+              chunk_in: int = 512, chunk_out: int = 512,
+              interpret: bool = False) -> jax.Array:
     """h: (B, S, p_in), zbar: (B, S, p_out) → (B,) f32.
 
-    Caller guarantees S % tile_s == 0 and both feature dims % chunk == 0
-    (the ops.py wrapper pads with zeros, which contribute nothing).
+    Caller guarantees S % tile_s == 0, p_in % chunk_in == 0 and
+    p_out % chunk_out == 0 (the ops.py wrapper pads with zeros, which
+    contribute nothing). The two feature dims are chunked independently
+    so an asymmetric pair never over-pads the smaller one.
     """
     b, s, p_in = h.shape
     _, _, p_out = zbar.shape
     assert s % tile_s == 0, (s, tile_s)
-    assert p_in % chunk == 0 and p_out % chunk == 0, (p_in, p_out, chunk)
-    k_in, k_out = p_in // chunk, p_out // chunk
+    assert p_in % chunk_in == 0, (p_in, chunk_in)
+    assert p_out % chunk_out == 0, (p_out, chunk_out)
+    k_in, k_out = p_in // chunk_in, p_out // chunk_out
     n_k = max(k_in, k_out)
     n_s = s // tile_s
 
@@ -102,10 +110,10 @@ def gram_norm(h: jax.Array, zbar: jax.Array, *, tile_s: int = 128,
         functools.partial(_kernel, k_in, k_out, n_k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tile_s, chunk), h_map),
-            pl.BlockSpec((1, tile_s, chunk), h_map_j),
-            pl.BlockSpec((1, tile_s, chunk), z_map),
-            pl.BlockSpec((1, tile_s, chunk), z_map_j),
+            pl.BlockSpec((1, tile_s, chunk_in), h_map),
+            pl.BlockSpec((1, tile_s, chunk_in), h_map_j),
+            pl.BlockSpec((1, tile_s, chunk_out), z_map),
+            pl.BlockSpec((1, tile_s, chunk_out), z_map_j),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda bi, i, j, k: (bi, 0)),
         out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),

@@ -23,21 +23,33 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _chunk_for(p: int) -> int:
+    """Feature-chunk size for one tensor: 512 for large dims, else the
+    dim itself rounded to the 128-lane boundary."""
+    return 512 if p >= 512 else _round_up(p, 128)
+
+
 def gram_norm(h: jax.Array, zbar: jax.Array) -> jax.Array:
-    """(B,S,p_in),(B,S,p_out) → (B,) f32; pads S and feature dims."""
+    """(B,S,p_in),(B,S,p_out) → (B,) f32; pads S and feature dims.
+
+    p_in and p_out get independently-sized chunks: a shared chunk of
+    max(p_in, p_out) padded the smaller tensor up to the larger one's
+    chunk (e.g. (p_in=1024, p_out=128) zero-padded zbar 4× and burned
+    the MXU on all-zero Z̄-gram partials)."""
     b, s, p_in = h.shape
     p_out = zbar.shape[-1]
     tile_s = min(128, _round_up(s, 8))
-    chunk = 512 if max(p_in, p_out) >= 512 else _round_up(max(p_in, p_out), 128)
+    chunk_in = _chunk_for(p_in)
+    chunk_out = _chunk_for(p_out)
     s_pad = _round_up(s, tile_s)
-    pi_pad = _round_up(p_in, chunk)
-    po_pad = _round_up(p_out, chunk)
+    pi_pad = _round_up(p_in, chunk_in)
+    po_pad = _round_up(p_out, chunk_out)
     if (s_pad, pi_pad) != (s, p_in):
         h = jnp.pad(h, ((0, 0), (0, s_pad - s), (0, pi_pad - p_in)))
     if (s_pad, po_pad) != (s, p_out):
         zbar = jnp.pad(zbar, ((0, 0), (0, s_pad - s), (0, po_pad - p_out)))
-    return _gn.gram_norm(h, zbar, tile_s=tile_s, chunk=chunk,
-                         interpret=_interpret())
+    return _gn.gram_norm(h, zbar, tile_s=tile_s, chunk_in=chunk_in,
+                         chunk_out=chunk_out, interpret=_interpret())
 
 
 def rowsumsq(x: jax.Array) -> jax.Array:

@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.common import SHAPES, ShapeSpec
 from repro.core import api
 from repro.core.taps import PexSpec
+from repro.dist import pex as dpex
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
@@ -173,8 +174,13 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
                cfg_override=None, pex_method: str = "direct",
                pex_on: bool = True, keep_hlo: bool = False,
                donate: bool = True, extra_rules: Optional[dict] = None,
-               optimizer: str = "adamw"):
-    """Lower + compile one cell; returns (CellResult, compiled|None)."""
+               optimizer: str = "adamw", pex_spmd: bool = False):
+    """Lower + compile one cell; returns (CellResult, compiled|None).
+
+    ``pex_spmd`` routes the train step through the dist.pex shard_map
+    pipeline (explicit per-shard norms + gradient psum) instead of
+    GSPMD auto-sharding; requires a data-only mesh (model extent 1).
+    """
     aspec = registry.get(arch_id)
     shape = _shape(shape_name)
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -217,7 +223,12 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
             n_micro = aspec.train_microbatches if cfg_override is None else 1
 
             def train_step(params, opt_state, batch):
-                if n_micro == 1:
+                if pex_spmd:
+                    r = dpex.value_grads_and_norms(
+                        loss_fn, params, batch, pex, b,
+                        mesh=mesh, data_axes=_dp(multi_pod))
+                    grads, loss, sq = r.grads, r.loss, r.sq_norms
+                elif n_micro == 1:
                     r = api.value_grads_and_norms(loss_fn, params, batch,
                                                   pex, b)
                     grads, loss, sq = r.grads, r.loss, r.sq_norms
@@ -293,6 +304,8 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
         # scale to global so the spec's /(chips × ...) formulas apply.
         n_dev_total = mesh.devices.size
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # jax 0.4.x: list of one dict
+            ca = ca[0] if ca else {}
         res.flops = float(ca.get("flops", 0.0)) * n_dev_total
         res.bytes_accessed = float(ca.get("bytes accessed", 0.0)) * n_dev_total
         ma = compiled.memory_analysis()
@@ -350,23 +363,31 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--pex-method", default="direct")
+    ap.add_argument("--pex-spmd", action="store_true",
+                    help="lower the dist.pex shard_map pipeline instead of "
+                         "GSPMD auto-sharding (train cells; data-only mesh)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs + smoke shapes (CI regression)")
     args = ap.parse_args()
 
     if args.smoke:
-        shp_m = (2, 4, 4) if args.multi_pod else (4, 4)
+        if args.pex_spmd:   # shard_map needs every >1 axis in data_axes
+            shp_m = (2, 8, 1) if args.multi_pod else (16, 1)
+        else:
+            shp_m = (2, 4, 4) if args.multi_pod else (4, 4)
         axes = ("pod", "data", "model") if args.multi_pod else ("data", "model")
-        mesh = jax.make_mesh(shp_m, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        mesh = shd.make_mesh(shp_m, axes)
         archs = sorted(registry.ARCHS) if not args.arch else [args.arch]
+        shapes = ("smoke_train",) if args.pex_spmd else \
+            ("smoke_train", "smoke_prefill", "smoke_decode")
         fails = 0
         for arch in archs:
             cfg = registry.get(arch).smoke()
-            for shp in ("smoke_train", "smoke_prefill", "smoke_decode"):
+            for shp in shapes:
                 try:
                     res, _ = lower_cell(arch, shp, mesh, args.multi_pod,
-                                        cfg_override=cfg)
+                                        cfg_override=cfg,
+                                        pex_spmd=args.pex_spmd)
                     print(f"[{'OK' if res.ok else 'FAIL'}] {arch} × {shp}")
                     fails += 0 if res.ok else 1
                 except Exception as e:
@@ -385,7 +406,8 @@ def main():
         for arch in archs:
             for shp in shapes:
                 results.append(run_cell(arch, shp, mp, out_dir=args.out,
-                                        pex_method=args.pex_method))
+                                        pex_method=args.pex_method,
+                                        pex_spmd=args.pex_spmd))
     n_ok = sum(r.ok for r in results)
     n_skip = sum(r.skipped for r in results)
     print(f"\n{n_ok}/{len(results)} cells OK ({n_skip} documented skips)")

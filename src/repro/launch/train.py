@@ -37,6 +37,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard the batch over all local devices via the "
+                         "dist.pex shard_map pipeline")
     args = ap.parse_args()
 
     aspec = registry.get(args.arch)
@@ -48,6 +51,11 @@ def main():
 
     pex = PexSpec(enabled=args.mode != "plain", method=args.pex_method)
     loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    mesh = None
+    if args.data_parallel:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model_parallel=1)
+        print(f"data-parallel over {mesh.shape['data']} devices")
     trainer = Trainer(
         loss_fn, params, pex,
         adamw.AdamWConfig(lr=args.lr,
@@ -55,7 +63,8 @@ def main():
         TrainConfig(mode=args.mode, clip_norm=args.clip_norm,
                     steps=args.steps, ckpt_dir=args.ckpt_dir, seed=args.seed),
         DataConfig(vocab=cfg.vocab, seq=args.seq, global_batch=args.batch,
-                   seed=args.seed))
+                   seed=args.seed),
+        mesh=mesh)
     trainer.train(resume=args.resume)
 
 

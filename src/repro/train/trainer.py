@@ -22,9 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.core import api, importance, taps
+from repro.core import importance, taps
 from repro.core.taps import PexSpec
 from repro.data.pipeline import DataConfig, PipelineState, SyntheticLM
+from repro.dist import pex
 from repro.ft.heartbeat import HeartbeatConfig, HeartbeatMonitor
 from repro.optim import adamw, grad_compress
 
@@ -46,13 +47,17 @@ class TrainConfig:
 
 
 class Trainer:
-    def __init__(self, loss_fn: Callable, params, pex: PexSpec,
+    def __init__(self, loss_fn: Callable, params, pex_spec: PexSpec,
                  opt_cfg: adamw.AdamWConfig, train_cfg: TrainConfig,
-                 data_cfg: DataConfig):
+                 data_cfg: DataConfig, *, mesh=None, data_axes=("data",)):
+        """``mesh=None`` runs single-device; a mesh routes every
+        per-example transform through the data-parallel shard_map
+        pipeline (dist.pex) with gradients psum'd across ``data_axes``."""
         self.loss_fn = loss_fn
-        self.pex = pex
+        self.pex = pex_spec
         self.cfg = train_cfg
         self.opt_cfg = opt_cfg
+        self.api = pex.api_for(mesh, data_axes)
         self.data = SyntheticLM(data_cfg)
         self.params = params
         self.opt_state = adamw.init(params)
@@ -67,16 +72,18 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _build_step(self):
-        cfg, pex, loss_fn, opt_cfg = self.cfg, self.pex, self.loss_fn, self.opt_cfg
+        cfg, pex_spec, loss_fn, opt_cfg = (self.cfg, self.pex, self.loss_fn,
+                                           self.opt_cfg)
+        papi = self.api   # core.api or the mesh-bound dist.pex facade
 
         @partial(jax.jit, static_argnames=("batch_size",))
         def plain_or_norms(params, opt_state, err, batch, batch_size):
             if cfg.mode == "norms":
-                res = api.value_grads_and_norms(loss_fn, params, batch,
-                                                pex, batch_size)
+                res = papi.value_grads_and_norms(loss_fn, params, batch,
+                                                 pex_spec, batch_size)
             else:
-                res = api.value_grads_and_norms(loss_fn, params, batch,
-                                                taps.DISABLED, batch_size)
+                res = papi.value_grads_and_norms(loss_fn, params, batch,
+                                                 taps.DISABLED, batch_size)
             grads = res.grads
             if err is not None:
                 grads, err = grad_compress.compress_decompress(grads, err)
@@ -85,8 +92,8 @@ class Trainer:
 
         @partial(jax.jit, static_argnames=("batch_size",))
         def clip_step(params, opt_state, err, batch, rng, batch_size):
-            res = api.clipped_value_and_grads(
-                loss_fn, params, batch, pex, batch_size, cfg.clip_norm,
+            res = papi.clipped_value_and_grads(
+                loss_fn, params, batch, pex_spec, batch_size, cfg.clip_norm,
                 noise_std=cfg.noise_std, noise_rng=rng)
             grads = res.grads
             if err is not None:
@@ -96,7 +103,7 @@ class Trainer:
 
         @partial(jax.jit, static_argnames=("pool", "take"))
         def importance_select(params, batch, rng, pool, take):
-            res = api.value_and_norms(loss_fn, params, batch, pex, pool)
+            res = papi.value_and_norms(loss_fn, params, batch, pex_spec, pool)
             samp = importance.sample(rng, res.sq_norms, take,
                                      smoothing=cfg.importance_smoothing)
             return samp.indices, samp.weights, res.sq_norms

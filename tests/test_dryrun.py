@@ -30,3 +30,15 @@ def test_smoke_dryrun_single_pod(arch):
 def test_smoke_dryrun_multi_pod():
     r = _run(["--smoke", "--arch", "qwen2-7b", "--multi-pod"])
     assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_smoke_dryrun_pex_spmd():
+    """The dist.pex shard_map pipeline lowers on a 16-way data mesh."""
+    r = _run(["--smoke", "--pex-spmd", "--arch", "llama3.2-1b"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_smoke_dryrun_pex_spmd_multi_pod():
+    """... and with gradient psum over the ("pod", "data") axes."""
+    r = _run(["--smoke", "--pex-spmd", "--arch", "qwen2-7b", "--multi-pod"])
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -40,6 +40,24 @@ def test_clip_scale(shape):
                                rtol=1e-6)
 
 
+@pytest.mark.parametrize("shape", [
+    (2, 64, 1024, 128),    # p_in ≫ p_out: old shared chunk padded z 4×
+    (2, 64, 128, 1024),    # p_out ≫ p_in
+    (1, 32, 640, 96),      # non-multiple small dim
+    (2, 16, 24, 520),      # tiny vs >512
+])
+def test_gram_norm_asymmetric_chunks(shape):
+    """Independent p_in/p_out chunk sizing must stay exact for strongly
+    asymmetric feature dims (each dim pads only to its own chunk)."""
+    from repro.kernels.ops import _chunk_for
+    b, s, pi, po = shape
+    assert _chunk_for(pi) != _chunk_for(po)   # the asymmetry under test
+    h = jnp.asarray(RNG.normal(size=(b, s, pi)), jnp.float32)
+    z = jnp.asarray(RNG.normal(size=(b, s, po)), jnp.float32)
+    np.testing.assert_allclose(ops.gram_norm(h, z), ref.gram_norm_ref(h, z),
+                               rtol=1e-5)
+
+
 def test_gram_norm_zero_padding_exact():
     """Padding rows/features must contribute exactly nothing."""
     b, s, pi, po = 2, 100, 130, 70   # deliberately awkward sizes
