@@ -1,7 +1,20 @@
-"""Benchmark timing utilities."""
+"""Benchmark timing utilities + machine-readable result collection.
+
+Every ``row()`` both prints a CSV line and records it in ``RESULTS`` so
+``run.py --json`` can emit a ``name → us_per_call`` map (BENCH_PR2.json)
+and the perf trajectory can be diffed across PRs.
+"""
+import json
 import time
 
 import jax
+
+#: (name, us_per_call, derived) triples in emission order.
+RESULTS: list[tuple[str, float, str]] = []
+
+
+def reset() -> None:
+    RESULTS.clear()
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -18,6 +31,20 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def row(name: str, us: float, derived: str = "") -> str:
+    RESULTS.append((name, us, derived))
     line = f"{name},{us:.1f},{derived}"
     print(line)
     return line
+
+
+def write_json(path: str) -> None:
+    """Dump collected rows as {name: us_per_call} (derived notes under
+    a parallel "name#derived" key when non-empty)."""
+    out = {}
+    for name, us, derived in RESULTS:
+        out[name] = round(us, 1)
+        if derived:
+            out[f"{name}#derived"] = derived
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -1,22 +1,45 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
+writes the machine-readable ``BENCH_PR2.json`` (name → us_per_call) so
+the perf trajectory is diffable across PRs. ``--smoke`` runs only the
+tiny-shape estimator/kernel sweep (the CI interpret-mode job).
 
   paper5.*     — the paper's §5 cost comparison (its only table)
-  methods.*    — norm-estimator sweep validating the adaptive cost model
+  methods.*    — norm-estimator sweep validating the two-sided
+                 (backend-aware) dispatch model + crossover derivation
   clip.*       — §6 clipping: two-pass ghost vs naive
   importance.* — §1 application: importance sampling vs uniform
 """
+import argparse
+
 from benchmarks import (bench_clipping, bench_importance, bench_methods,
-                        bench_paper_table)
+                        bench_paper_table, common)
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_PR2.json", default=None,
+                    metavar="PATH",
+                    help="write results as {name: us_per_call} JSON "
+                         "(default path: BENCH_PR2.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, kernels in interpret mode, no "
+                         "timing asserts (the CI job)")
+    args = ap.parse_args(argv)
+
+    common.reset()
     print("name,us_per_call,derived")
-    bench_paper_table.main()
-    bench_methods.main()
-    bench_clipping.main()
-    bench_importance.main()
+    if args.smoke:
+        bench_methods.main(smoke=True)
+    else:
+        bench_paper_table.main()
+        bench_methods.main()
+        bench_clipping.main()
+        bench_importance.main()
+    if args.json:
+        common.write_json(args.json)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

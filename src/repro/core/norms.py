@@ -20,9 +20,12 @@ Methods
                 when ``s·p_in·p_out < s²(p_in+p_out)``.
 ``auto``        cost-model pick between ``gram`` and ``direct``.
 
-Cost model (flops per example per layer):
-    gram:   2·S²·(p_in + p_out) + S²
-    direct: 2·S·p_in·p_out        (+ chunk accumulate)
+Cost model (flops per example per layer) — two-sided, one price list
+per backend (``dense_cost``):
+    XLA:     gram  2·S²·(p_in+p_out) + S²;  direct  2·S·p_in·p_out
+    Pallas:  the kernels' own flop models at their *padded* launch
+             tiles — the triangular gram grid does ~half the S² work,
+             and both methods are charged for chunk-padding waste.
 """
 from __future__ import annotations
 
@@ -80,6 +83,7 @@ def stat_direct(h: jax.Array, zbar: jax.Array, chunk: int = 1024) -> jax.Array:
         return stat_factorized(h, zbar)
     b, s, p_in = h.shape
     p_out = zbar.shape[-1]
+    chunk = max(1, min(chunk, p_in))  # never pad p_in beyond one chunk
     n_chunks = max(1, math.ceil(p_in / chunk))
     pad = n_chunks * chunk - p_in
     if pad:
@@ -98,26 +102,82 @@ def stat_direct(h: jax.Array, zbar: jax.Array, chunk: int = 1024) -> jax.Array:
 
 
 def gram_flops(s: int, p_in: int, p_out: int) -> float:
+    """XLA gram-pair cost: two S×S Grams + their product-reduce."""
     return 2.0 * s * s * (p_in + p_out) + s * s
 
 
 def direct_flops(s: int, p_in: int, p_out: int) -> float:
-    return 2.0 * s * p_in * p_out
+    """XLA direct cost: the HᵀZ̄ contraction + square-reduce."""
+    return 2.0 * s * p_in * p_out + 2.0 * p_in * p_out
 
 
-def pick_method(s: int, p_in: int, p_out: int) -> str:
-    """Cost-model choice between gram and direct (both exact)."""
-    return "gram" if gram_flops(s, p_in, p_out) <= direct_flops(s, p_in, p_out) else "direct"
+def dense_cost(method: str, s: int, p_in: int, p_out: int, *,
+               use_pallas: bool = False) -> float:
+    """Per-example flop cost of one dense-layer stat on one backend.
+
+    The two backends genuinely price the same (s, p_in, p_out) point
+    differently: the Pallas gram kernel visits only the upper triangle
+    of sequence-tile pairs (~half the XLA einsum's S² work), and both
+    Pallas kernels pay for padding to their launch tiles — a (640, 96)
+    layer costs its padded (640→640 via 5×128, 96→128) shape, not its
+    logical one. Using one flop formula for both backends mispredicts
+    the crossover by up to 2× in S; this model is what ``pick_method``
+    (and hence ``stat_dense(method="auto")``) consults.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        if method == "gram":
+            return kops.gram_cost(s, p_in, p_out)
+        if method == "direct":
+            return kops.direct_cost(s, p_in, p_out)
+    else:
+        if method == "gram":
+            return gram_flops(s, p_in, p_out)
+        if method == "direct":
+            return direct_flops(s, p_in, p_out)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def pick_method(s: int, p_in: int, p_out: int,
+                use_pallas: bool = False) -> str:
+    """Cost-model choice between gram and direct (both exact) for the
+    backend that will actually run the stat."""
+    g = dense_cost("gram", s, p_in, p_out, use_pallas=use_pallas)
+    d = dense_cost("direct", s, p_in, p_out, use_pallas=use_pallas)
+    return "gram" if g <= d else "direct"
+
+
+def crossover_s(p_in: int, p_out: int, *, use_pallas: bool = False,
+                s_max: int = 1 << 16) -> int:
+    """Smallest sequence length at which ``direct`` beats ``gram`` under
+    the backend's cost model (binary search; monotone in s because gram
+    grows ~s² and direct ~s)."""
+    lo, hi = 1, s_max
+    if pick_method(hi, p_in, p_out, use_pallas) == "gram":
+        return s_max
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if pick_method(mid, p_in, p_out, use_pallas) == "direct":
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
 
 
 def stat_dense(h: jax.Array, zbar: jax.Array, method: Method = "auto",
                use_pallas: bool = False) -> jax.Array:
-    """Dispatch a dense-layer stat. h (B,[S,]p_in), zbar (B,[S,]p_out)."""
+    """Dispatch a dense-layer stat. h (B,[S,]p_in), zbar (B,[S,]p_out).
+
+    With ``use_pallas`` both exact methods are real kernels — the gram
+    route hits the triangular tile-pair kernel and the direct route the
+    blocked HᵀZ̄ kernel — and ``method="auto"`` picks between them with
+    the backend-aware cost model above.
+    """
     if h.ndim == 2:
         return stat_factorized(h, zbar)
     if method == "auto":
         _, s, p_in = h.shape
-        method = pick_method(s, p_in, zbar.shape[-1])
+        method = pick_method(s, p_in, zbar.shape[-1], use_pallas)
     if method == "factorized":
         return stat_factorized(h, zbar)
     if method == "gram":
@@ -126,6 +186,9 @@ def stat_dense(h: jax.Array, zbar: jax.Array, method: Method = "auto",
             return kops.gram_norm(h, zbar)
         return stat_gram(h, zbar)
     if method == "direct":
+        if use_pallas:
+            from repro.kernels import ops as kops
+            return kops.direct_norm(h, zbar)
         return stat_direct(h, zbar)
     raise ValueError(f"unknown method {method!r}")
 

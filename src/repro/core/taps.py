@@ -50,7 +50,10 @@ class PexSpec:
                  'factorized' applies the paper's formula mechanically to
                  flattened (S·p) rows — exact only when S==1 (kept as the
                  paper-faithful baseline mode; see DESIGN.md §2).
-    use_pallas:  route gram stats through the Pallas tile-pair kernel.
+    use_pallas:  route dense stats through the Pallas kernels — the
+                 triangular tile-pair gram kernel or the blocked HᵀZ̄
+                 direct kernel, whichever the backend-aware cost model
+                 picks (``method='auto'`` covers both regimes).
     groups:      acc column names; per-group norms (e.g. attn/mlp/embed).
     tap_embeddings / tap_head: include embedding / lm-head params in the
                  norm (exact but vocab-sized work; cf. DESIGN.md §5).

@@ -234,6 +234,9 @@ def gradient_noise_scale(sq_norms: jax.Array, grads,
     if sq_norms.ndim == 2:
         sq_norms = jnp.sum(sq_norms, axis=-1)
     b = batch_size if batch_size is not None else sq_norms.shape[0]
+    if b < 2:
+        raise ValueError(f"gradient_noise_scale needs batch >= 2 to "
+                         f"separate the two moments (got {b})")
     s_bar = jnp.mean(sq_norms.astype(jnp.float32))
     g_mean_sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                     for g in jax.tree_util.tree_leaves(grads)) / (b * b)

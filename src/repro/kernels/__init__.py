@@ -2,6 +2,9 @@
 and pure-jnp oracles (ref.py) — validated in interpret mode on CPU.
 
   gram_norm        tile-pair Gram product: per-example ||HᵀZ̄||²_F
+                   (triangular grid — symmetry halves the MXU work)
+  direct_norm      blocked HᵀZ̄ partial-gradient norm for the
+                   long-sequence regime; G never reaches HBM
   rowsumsq         fused row-wise Σx² (paper §4's O(mnp) extra work)
   clip_scale       §6's Z̄ row rescaling
   flash_attention  online-softmax attention, fwd + bwd kernels

@@ -1,17 +1,26 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Handle padding to tile boundaries (zero padding is exact for all three
-ops), backend selection (interpret mode on CPU — the container target;
+Handle padding to tile boundaries (zero padding is exact for all ops),
+backend selection (interpret mode on CPU — the container target;
 compiled Mosaic on real TPU), and adaptive tile sizing for small
-inputs. These are what ``core.norms``/``core.taps`` call.
+inputs. These are what ``core.norms``/``core.taps`` call. The
+``gram_cost``/``direct_cost`` helpers expose each kernel's flop count
+*at the padded shapes this wrapper would actually launch*, so the
+dispatch model in ``core.norms`` charges padding waste to the method
+that incurs it.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import clip_scale as _cs
+from repro.kernels import direct_norm as _dn
+from repro.kernels import flash_attention as _fa
 from repro.kernels import gram_norm as _gn
+from repro.kernels import ref as _ref  # noqa: F401  (re-export for callers)
 from repro.kernels import rowsumsq as _rs
 
 
@@ -23,33 +32,92 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+#: Candidate feature-chunk sizes, all 128-lane aligned. Largest first so
+#: padding ties resolve to the fewest grid steps.
+_CHUNK_CANDIDATES = (512, 384, 256, 128)
+
+
 def _chunk_for(p: int) -> int:
-    """Feature-chunk size for one tensor: 512 for large dims, else the
-    dim itself rounded to the 128-lane boundary."""
-    return 512 if p >= 512 else _round_up(p, 128)
+    """Feature-chunk size for one tensor of width ``p``.
+
+    Small dims (< 512) fit one chunk rounded to the 128-lane boundary.
+    Large dims pick from ``_CHUNK_CANDIDATES`` the chunk minimizing
+    total padding (ties → largest chunk, i.e. fewest k steps): the old
+    always-512 schedule padded 640→1024 (25% waste); now 640 → 5×128
+    (exact), 768 → 2×384 (exact), 1152 → 3×384 (exact).
+    """
+    if p < 512:
+        return _round_up(p, 128)
+    best = min(_CHUNK_CANDIDATES,
+               key=lambda c: (_round_up(p, c) - p, _CHUNK_CANDIDATES.index(c)))
+    return best
 
 
-def gram_norm(h: jax.Array, zbar: jax.Array) -> jax.Array:
+def _launch_tiles(s: int, p_in: int, p_out: int):
+    """(tile_s, chunk_in, chunk_out, s_pad, pi_pad, po_pad) the gram and
+    direct wrappers would launch for the given logical shape."""
+    tile_s = min(128, _round_up(s, 8))
+    chunk_in = _chunk_for(p_in)
+    chunk_out = _chunk_for(p_out)
+    return (tile_s, chunk_in, chunk_out, _round_up(s, tile_s),
+            _round_up(p_in, chunk_in), _round_up(p_out, chunk_out))
+
+
+def gram_norm(h: jax.Array, zbar: jax.Array, *,
+              triangular: bool = True) -> jax.Array:
     """(B,S,p_in),(B,S,p_out) → (B,) f32; pads S and feature dims.
 
     p_in and p_out get independently-sized chunks: a shared chunk of
     max(p_in, p_out) padded the smaller tensor up to the larger one's
     chunk (e.g. (p_in=1024, p_out=128) zero-padded zbar 4× and burned
-    the MXU on all-zero Z̄-gram partials)."""
+    the MXU on all-zero Z̄-gram partials). ``triangular`` (default)
+    visits only the upper triangle of sequence-tile pairs — ~2× fewer
+    MXU flops; ``False`` keeps the full redundant grid for regression
+    tests."""
     b, s, p_in = h.shape
     p_out = zbar.shape[-1]
-    tile_s = min(128, _round_up(s, 8))
-    chunk_in = _chunk_for(p_in)
-    chunk_out = _chunk_for(p_out)
-    s_pad = _round_up(s, tile_s)
-    pi_pad = _round_up(p_in, chunk_in)
-    po_pad = _round_up(p_out, chunk_out)
+    tile_s, chunk_in, chunk_out, s_pad, pi_pad, po_pad = _launch_tiles(
+        s, p_in, p_out)
     if (s_pad, pi_pad) != (s, p_in):
         h = jnp.pad(h, ((0, 0), (0, s_pad - s), (0, pi_pad - p_in)))
     if (s_pad, po_pad) != (s, p_out):
         zbar = jnp.pad(zbar, ((0, 0), (0, s_pad - s), (0, po_pad - p_out)))
     return _gn.gram_norm(h, zbar, tile_s=tile_s, chunk_in=chunk_in,
-                         chunk_out=chunk_out, interpret=_interpret())
+                         chunk_out=chunk_out, triangular=triangular,
+                         interpret=_interpret())
+
+
+def gram_cost(s: int, p_in: int, p_out: int, *,
+              triangular: bool = True) -> float:
+    """Flops the Pallas gram path spends on a (·, s, p_in)×(·, s, p_out)
+    layer, per example, **including padding waste** at the launch tiles."""
+    tile_s, _, _, s_pad, pi_pad, po_pad = _launch_tiles(s, p_in, p_out)
+    return float(_gn.flop_estimate(1, s_pad, pi_pad, po_pad, tile_s=tile_s,
+                                   triangular=triangular))
+
+
+def direct_norm(h: jax.Array, zbar: jax.Array) -> jax.Array:
+    """(B,S,p_in),(B,S,p_out) → (B,) ||H_jᵀZ̄_j||²_F; pads all dims.
+
+    Zero-padding is exact: padded sequence rows add nothing to HᵀZ̄ and
+    padded feature columns only append zero rows/columns to it."""
+    b, s, p_in = h.shape
+    p_out = zbar.shape[-1]
+    tile_s, chunk_in, chunk_out, s_pad, pi_pad, po_pad = _launch_tiles(
+        s, p_in, p_out)
+    if (s_pad, pi_pad) != (s, p_in):
+        h = jnp.pad(h, ((0, 0), (0, s_pad - s), (0, pi_pad - p_in)))
+    if (s_pad, po_pad) != (s, p_out):
+        zbar = jnp.pad(zbar, ((0, 0), (0, s_pad - s), (0, po_pad - p_out)))
+    return _dn.direct_norm(h, zbar, tile_s=tile_s, chunk_in=chunk_in,
+                           chunk_out=chunk_out, interpret=_interpret())
+
+
+def direct_cost(s: int, p_in: int, p_out: int) -> float:
+    """Flops of the Pallas direct path per example at the launch tiles
+    (padding waste included)."""
+    _, _, _, s_pad, pi_pad, po_pad = _launch_tiles(s, p_in, p_out)
+    return float(_dn.flop_estimate(1, s_pad, pi_pad, po_pad))
 
 
 def rowsumsq(x: jax.Array) -> jax.Array:
@@ -66,13 +134,7 @@ def rowsumsq(x: jax.Array) -> jax.Array:
                         interpret=_interpret())
 
 
-import functools as _functools
-
-from repro.kernels import flash_attention as _fa
-from repro.kernels import ref as _ref
-
-
-@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def flash_attention_vjp(q, k, v, scale, window=None):
     """Differentiable flash attention: Pallas forward (online softmax,
     lse residual) + Pallas backward (dq / dk / dv kernels). The S²
@@ -103,13 +165,14 @@ flash_attention_vjp.defvjp(_fa_fwd, _fa_bwd)
 
 
 def clip_scale(z: jax.Array, c: jax.Array) -> jax.Array:
-    """(B,S,p) ⊙ c(B,) → (B,S,p); pads S and p, then slices back."""
+    """(B,S,p) ⊙ c(B,) → (B,S,p); pads S and p, slices back only when
+    padding was actually applied (the common aligned case is copy-free)."""
     b, s, p = z.shape
     tile_s = min(256, _round_up(s, 8))
     tile_p = min(512, _round_up(p, 128))
     s_pad, p_pad = _round_up(s, tile_s), _round_up(p, tile_p)
-    zp = jnp.pad(z, ((0, 0), (0, s_pad - s), (0, p_pad - p))) \
-        if (s_pad, p_pad) != (s, p) else z
+    padded = (s_pad, p_pad) != (s, p)
+    zp = jnp.pad(z, ((0, 0), (0, s_pad - s), (0, p_pad - p))) if padded else z
     out = _cs.clip_scale(zp, c.astype(jnp.float32), tile_s=tile_s,
                          tile_p=tile_p, interpret=_interpret())
-    return out[:, :s, :p]
+    return out[:, :s, :p] if padded else out

@@ -43,8 +43,8 @@ def test_clip_scale(shape):
 @pytest.mark.parametrize("shape", [
     (2, 64, 1024, 128),    # p_in ≫ p_out: old shared chunk padded z 4×
     (2, 64, 128, 1024),    # p_out ≫ p_in
-    (1, 32, 640, 96),      # non-multiple small dim
-    (2, 16, 24, 520),      # tiny vs >512
+    (1, 32, 704, 96),      # non-multiple dims (704 → 2×384, 96 → 128)
+    (2, 16, 24, 1000),     # tiny vs large (24 → 128, 1000 → 2×512)
 ])
 def test_gram_norm_asymmetric_chunks(shape):
     """Independent p_in/p_out chunk sizing must stay exact for strongly
@@ -76,6 +76,91 @@ def test_gram_norm_matches_direct_identity():
     np.testing.assert_allclose(np.asarray(ops.gram_norm(jnp.asarray(h),
                                                         jnp.asarray(z))),
                                direct, rtol=1e-5)
+
+
+@pytest.mark.parametrize("tile_s", [64, 128])
+def test_gram_triangular_matches_full_grid(tile_s):
+    """Symmetry regression: the triangular grid (off-diagonal pairs
+    folded with weight 2) must reproduce the full-grid value to f32
+    tolerance — same dots, same accumulation order within a pair."""
+    from repro.kernels import gram_norm as gn
+    b, s, pi, po = 2, 512, 256, 384
+    h = jnp.asarray(RNG.normal(size=(b, s, pi)), jnp.float32)
+    z = jnp.asarray(RNG.normal(size=(b, s, po)), jnp.float32)
+    tri = gn.gram_norm(h, z, tile_s=tile_s, chunk_in=256, chunk_out=384,
+                       triangular=True, interpret=True)
+    full = gn.gram_norm(h, z, tile_s=tile_s, chunk_in=256, chunk_out=384,
+                        triangular=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(tri), np.asarray(full), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(tri), ref.gram_norm_ref(h, z),
+                               rtol=1e-5)
+
+
+def test_gram_triangular_flop_model_halving():
+    """The triangular grid's flop model must approach 2× below the full
+    grid as S grows (exactly n_s²/(n_s(n_s+1)/2) = 2n_s/(n_s+1))."""
+    from repro.kernels import gram_norm as gn
+
+    def ratio(s):
+        full = gn.flop_estimate(1, s, 512, 512, triangular=False)
+        tri = gn.flop_estimate(1, s, 512, 512, triangular=True)
+        return full / tri
+
+    assert ratio(512) >= 1.5
+    assert ratio(1024) >= 1.7
+    assert ratio(8192) >= 1.9   # → 2× asymptotically
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 24, 40),     # tiny, odd dims
+                                   (3, 128, 512, 512),  # aligned
+                                   (2, 200, 300, 520),  # S not a tile multiple
+                                   (1, 256, 1024, 256), # B=1, p_in ≠ p_out
+                                   (2, 64, 128, 896),
+                                   (1, 640, 640, 96)])  # long S, odd chunks
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_direct_norm(shape, dtype):
+    """Blocked HᵀZ̄ kernel vs the gram oracle (mathematically the same
+    quantity: ||H_jᵀZ̄_j||²_F)."""
+    b, s, pi, po = shape
+    h = jnp.asarray(RNG.normal(size=(b, s, pi)), dtype)
+    z = jnp.asarray(RNG.normal(size=(b, s, po)), dtype)
+    got = ops.direct_norm(h, z)
+    want = ref.gram_norm_ref(h, z)
+    rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=rtol)
+
+
+def test_direct_norm_matches_bruteforce():
+    b, s, pi, po = 3, 40, 36, 20
+    h = np.asarray(RNG.normal(size=(b, s, pi)), np.float32)
+    z = np.asarray(RNG.normal(size=(b, s, po)), np.float32)
+    brute = np.stack([((h[i].T @ z[i]) ** 2).sum() for i in range(b)])
+    got = ops.direct_norm(jnp.asarray(h), jnp.asarray(z))
+    np.testing.assert_allclose(np.asarray(got), brute, rtol=1e-5)
+
+
+@pytest.mark.parametrize("p,expect", [
+    (640, 128),    # 5×128 exact — the old schedule padded to 1024 (+60%)
+    (768, 384),    # 2×384 exact (384 beats equally-exact 256/128: fewer k)
+    (1152, 384),   # 3×384 exact — old: 1536 (+33%)
+    (1024, 512),   # unchanged: 2×512
+    (512, 512),
+    (384, 384),    # < 512: single chunk at the 128-lane boundary
+    (96, 128),
+    (1, 128),
+])
+def test_chunk_for_schedule(p, expect):
+    from repro.kernels.ops import _chunk_for
+    assert _chunk_for(p) == expect
+    assert _chunk_for(p) % 128 == 0
+
+
+def test_chunk_for_never_worse_than_512():
+    """The adaptive schedule's padding is ≤ the old always-512 rule."""
+    from repro.kernels.ops import _chunk_for, _round_up
+    for p in range(512, 4097, 32):
+        c = _chunk_for(p)
+        assert _round_up(p, c) - p <= _round_up(p, 512) - p, p
 
 
 @pytest.mark.parametrize("cfg", [
