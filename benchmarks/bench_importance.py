@@ -21,7 +21,7 @@ def run(steps=30):
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(1), cfg))
     pex = PexSpec(enabled=True, method="gram")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     dcfg = DataConfig(vocab=cfg.vocab, seq=32, global_batch=32, seed=5)
     ocfg = adamw.AdamWConfig(lr=3e-3)
 

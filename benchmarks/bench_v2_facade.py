@@ -1,0 +1,72 @@
+"""pex v2 abstraction-tax guard.
+
+The Engine facade (trace-time Tap collector + v2 loss adapter) must be
+pure sugar: the train-step program it traces has to compile to HLO of
+the same flop/byte cost as the v1 explicit-accumulator path. This
+module lowers both paths for a smoke llama config, asserts cost
+equality, and emits the numbers as benchmark rows so BENCH_PR3.json
+records the (lack of) tax across PRs.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ShapeSpec
+from repro.core import api
+from repro.core.engine import Engine
+from repro.core.taps import PexSpec, Tap
+from repro.models import registry
+from repro.nn.param import unbox
+from repro.roofline.hlo import compiled_cost
+
+from benchmarks.common import row, time_fn
+
+REL_TOL = 1e-6   # equal-cost: same program modulo float accounting noise
+
+
+def run(b=4, s=16, check=True):
+    aspec = registry.get("llama3.2-1b")
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    batch = registry.make_train_batch(aspec, cfg,
+                                      ShapeSpec("v2", "train", s, b))
+    spec = PexSpec(enabled=True, method="gram")
+    loss_v2 = registry.make_loss_fn_v2(aspec, cfg)
+    eng = Engine(spec)
+
+    def v1_loss(p, acc, bt):
+        tap = Tap(spec, acc=acc)
+        lv, aux = loss_v2(p, bt, tap)
+        return lv, tap.carry(), aux
+
+    def step_v1(p, bt):
+        r = api.value_grads_and_norms(v1_loss, p, bt, spec, b)
+        return r.loss, r.sq_norms, r.grads
+
+    def step_v2(p, bt):
+        r = eng.value_grads_and_norms(loss_v2, p, bt)
+        return r.loss, r.sq_norms, r.grads
+
+    c1 = jax.jit(step_v1).lower(params, batch).compile()
+    c2 = jax.jit(step_v2).lower(params, batch).compile()
+    f1, by1 = compiled_cost(c1)
+    f2, by2 = compiled_cost(c2)
+    tag = f"b={b},s={s}"
+    row(f"v2.engine_step[{tag}]", time_fn(jax.jit(step_v2), params, batch),
+        f"flops={f2:.4g}")
+    row(f"v2.v1_step[{tag}]", time_fn(jax.jit(step_v1), params, batch),
+        f"flops={f1:.4g}")
+    if f1 <= 0.0 or by1 <= 0.0:
+        row(f"v2.flops_ratio[{tag}]", 0.0, "cost_analysis unavailable")
+        return
+    row(f"v2.flops_ratio[{tag}]", 0.0, f"{f2 / f1:.8f}")
+    row(f"v2.bytes_ratio[{tag}]", 0.0, f"{by2 / by1:.8f}")
+    if check:
+        assert abs(f2 - f1) <= REL_TOL * f1, (
+            f"Engine facade changed HLO flops: v1={f1} v2={f2}")
+        assert abs(by2 - by1) <= REL_TOL * by1, (
+            f"Engine facade changed HLO bytes: v1={by1} v2={by2}")
+
+
+def main(smoke: bool = False):
+    run(b=4, s=16) if smoke else run(b=8, s=64)

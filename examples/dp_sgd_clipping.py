@@ -1,16 +1,15 @@
 """Per-example gradient clipping (paper §6) as DP-SGD: clip every
 example's gradient to C, add Gaussian noise σ·C, train. The clipping
 costs one norms pass + one weighted backward — never materializing a
-single per-example gradient.
+single per-example gradient. Everything routes through the pex v2
+``Engine``.
 
     PYTHONPATH=src python examples/dp_sgd_clipping.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api
-from repro.core.taps import PexSpec
+from repro import pex
 from repro.data.pipeline import DataConfig
 from repro.models import registry
 from repro.nn.param import unbox
@@ -23,10 +22,10 @@ def main():
     cfg = aspec.smoke()
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
-    pex = PexSpec(enabled=True, method="auto")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    spec = pex.PexSpec(method="auto")
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
 
-    t = Trainer(loss_fn, params, pex,
+    t = Trainer(loss_fn, params, spec,
                 adamw.AdamWConfig(lr=1e-3),
                 TrainConfig(mode="clip", clip_norm=0.5, noise_std=0.1,
                             steps=50, log_every=10),
@@ -37,9 +36,11 @@ def main():
           f"(every example's contribution clipped to 0.5)")
 
     # show the §6 semantics directly: post-clip per-example influence
+    eng = pex.Engine(spec, clip_norm=0.5, noise_std=0.1)
     batch = t.data.batch_at(0)
-    res = api.clipped_value_and_grads(loss_fn, t.params, batch, pex, 16, 0.5)
-    c = api.clip_coefficients(res.sq_norms, 0.5)
+    res = eng.clipped_step(loss_fn, t.params, batch,
+                           rng=jax.random.PRNGKey(1))
+    c = pex.clip_coefficients(res.sq_norms, 0.5)
     print("clip coefficients c_j:",
           np.array2string(np.asarray(c), precision=3))
 

@@ -47,7 +47,7 @@ def main():
     print(f"params: {count_params(params) / 1e6:.1f}M")
 
     pex = PexSpec(enabled=True, method="auto")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     dcfg = DataConfig(vocab=cfg.vocab, seq=args.seq,
                       global_batch=args.batch, seed=11)
     ocfg = adamw.AdamWConfig(

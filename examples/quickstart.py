@@ -1,8 +1,9 @@
 """Quickstart: per-example gradient norms for free (Goodfellow 2015).
 
-Builds a small llama-family model, runs ONE backward pass that yields
-both the parameter gradients and every example's gradient norm, and
-cross-checks against the naive per-example method (paper §3).
+Builds a small llama-family model, runs ONE backward pass through the
+pex v2 ``Engine`` that yields both the parameter gradients and every
+example's gradient norm, and cross-checks against the naive
+per-example method (paper §3).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,9 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import pex
 from repro.configs.common import ShapeSpec
-from repro.core import api, naive, taps
-from repro.core.taps import PexSpec
+from repro.core import naive
 from repro.models import registry
 from repro.nn.param import unbox
 
@@ -25,24 +26,24 @@ def main():
     B, S = 8, 32
     batch = registry.make_train_batch(arch, cfg, ShapeSpec("q", "train", S, B))
 
-    # Instrumented loss: every dense layer taps (H, Z̄) into a (B,) acc.
-    pex = PexSpec(enabled=True, method="auto")
-    loss_fn = registry.make_loss_fn(arch, cfg, pex)
+    # Instrumentation is declared ONCE on the Engine; the model receives
+    # a Tap collector and every dense layer registers (H, Z̄) with it.
+    eng = pex.Engine(pex.PexSpec(method="auto"))
+    loss_fn = registry.make_loss_fn_v2(arch, cfg)
 
     # ONE backward pass → grads + all per-example squared norms (§4–§5).
-    res = jax.jit(lambda p, b: api.value_grads_and_norms(
-        loss_fn, p, b, pex, B))(params, batch)
+    res = jax.jit(lambda p, b: eng.value_grads_and_norms(
+        loss_fn, p, b))(params, batch)
     norms = jnp.sqrt(jnp.sum(res.sq_norms, -1))
     print(f"loss = {float(res.loss):.3f}")
     print("per-example ‖∇L_j‖ :", np.array2string(np.asarray(norms),
                                                   precision=2))
 
-    # Cross-check vs the naive method the paper replaces (§3).
-    plain = registry.make_loss_fn(arch, cfg, taps.DISABLED)
-
+    # Cross-check vs the naive method the paper replaces (§3): the same
+    # model with the inert tap is the plain, uninstrumented network.
     def single(p, ex):
         b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-        lv, _, _ = plain(p, taps.init_acc(1, taps.DISABLED), b1)
+        lv, _ = loss_fn(p, b1, pex.NULL)
         return lv[0]
 
     oracle = jnp.sqrt(naive.per_example_sq_norms(single, params, batch))

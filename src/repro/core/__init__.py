@@ -1,20 +1,26 @@
 """Core: the paper's per-example gradient-norm technique as a composable
 JAX transform family.
 
-  taps       — custom_vjp cotangent-accumulator ops (dense/bias/scale/embedding)
+  taps       — custom_vjp cotangent-accumulator ops + the pex v2 Tap
+               collector and accumulator layouts (example / token)
+  engine     — pex v2 Engine: one entry point for local, sharded, and
+               token-level runs (see also the repro.pex namespace)
   norms      — the estimator zoo (factorized = paper §4, gram, direct, ...)
-  api        — value_and_norms / value_grads_and_norms / clipped grads (§6, 2-pass)
+  api        — v1 explicit-acc transforms (Engine builds on these)
   clipping   — one-pass §6 (perturbation taps; faithful MLP form)
   importance — Zhao & Zhang importance sampling on top of the norms
   naive      — paper §3 oracle (vmap-of-grad), used by tests & benchmarks
 """
-from repro.core.taps import (PexSpec, DISABLED, init_acc, dense, bias_add,
-                             scale, embedding)
+from repro.core.taps import (PexSpec, DISABLED, NULL, Tap, ExampleLayout,
+                             TokenLayout, init_acc, scan, checkpoint,
+                             dense, bias_add, scale, embedding)
 from repro.core.api import (PexResult, value_and_norms, value_grads_and_norms,
                             clip_coefficients, clipped_value_and_grads)
+from repro.core.engine import Engine, plain_engine
 
 __all__ = [
-    "PexSpec", "DISABLED", "init_acc", "dense", "bias_add", "scale",
+    "PexSpec", "DISABLED", "NULL", "Tap", "ExampleLayout", "TokenLayout",
+    "init_acc", "scan", "checkpoint", "dense", "bias_add", "scale",
     "embedding", "PexResult", "value_and_norms", "value_grads_and_norms",
-    "clip_coefficients", "clipped_value_and_grads",
+    "clip_coefficients", "clipped_value_and_grads", "Engine", "plain_engine",
 ]

@@ -1,6 +1,6 @@
-"""Public transforms for per-example gradient work.
+"""Per-example transform layer (v1 surface; Engine builds on this).
 
-Canonical instrumented-loss signature used across the framework:
+Canonical v1 instrumented-loss signature used across the framework:
 
     loss_fn(params, acc, batch) -> (loss_vec, acc_out, aux)
 
@@ -8,22 +8,29 @@ where ``loss_vec`` is the (B,) vector of per-example losses L^(j)
 (paper §2: C = Σ_j L^(j)), ``acc_out`` is the threaded accumulator
 (must be returned so the tap chain stays live), and ``aux`` is any
 extra pytree (metrics).
+
+pex v2 callers should use ``repro.core.engine.Engine`` (or the
+``repro.pex`` namespace), which adapts tap-collector losses
+(``loss_fn(params, batch, tap) -> (loss_vec, aux)``) onto these
+transforms and picks the local vs. mesh path. These functions accept an
+optional accumulator ``layout`` so the same passes serve per-example
+``(B, G)`` and per-token ``(B, S)`` granularities.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.taps import PexSpec, init_acc
+from repro.core.taps import ExampleLayout, PexSpec, TokenLayout
 
 
 class PexResult(NamedTuple):
     loss: jax.Array            # scalar total C
     loss_vec: jax.Array        # (B,) per-example losses
     aux: object
-    sq_norms: jax.Array        # (B, G) per-example, per-group ||grad||²
+    sq_norms: jax.Array        # (B, G) / (B, S) per-example ||grad||²
     grads: object = None       # param pytree (when requested)
 
 
@@ -31,14 +38,28 @@ def _total(loss_vec):
     return jnp.sum(loss_vec)
 
 
+def _layout_or_default(layout, spec: PexSpec):
+    return layout if layout is not None else ExampleLayout(spec.n_groups)
+
+
+def check_noise_args(noise_std: float, noise_rng) -> None:
+    """DP-SGD noise needs a key; fail at trace time with a clear error
+    instead of deep inside ``jax.random.split``."""
+    if noise_std and noise_std > 0.0 and noise_rng is None:
+        raise ValueError(
+            f"noise_std={noise_std} > 0 requires a PRNG key: pass "
+            f"noise_rng=jax.random.PRNGKey(...) (DP-SGD noise is "
+            f"irreproducible without one)")
+
+
 def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
-                    batch_size: int) -> PexResult:
+                    batch_size: int, layout=None) -> PexResult:
     """Norms-only pass: forward + activation backprop + O(mnp).
 
     The ``dW`` chains are never built (grad is taken w.r.t. the
     accumulator only), matching the cheap pass of paper §5.
     """
-    acc0 = init_acc(batch_size, spec)
+    acc0 = _layout_or_default(layout, spec).init(batch_size)
 
     def f(acc):
         loss_vec, acc_out, aux = loss_fn(params, acc, batch)
@@ -49,10 +70,10 @@ def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
 
 
 def value_grads_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
-                          batch_size: int) -> PexResult:
+                          batch_size: int, layout=None) -> PexResult:
     """The paper's headline: gradients AND all per-example norms in one
     backward pass, for O(mnp) extra work."""
-    acc0 = init_acc(batch_size, spec)
+    acc0 = _layout_or_default(layout, spec).init(batch_size)
 
     def f(p, acc):
         loss_vec, acc_out, aux = loss_fn(p, acc, batch)
@@ -68,6 +89,7 @@ def add_grad_noise(grads, noise_std: float, clip_norm: float,
     """σ·C Gaussian noise per leaf — the DP-SGD noise step. Kept
     separate from the clipping passes so the sharded pipeline
     (dist.pex) can apply it once after the gradient allreduce."""
+    check_noise_args(noise_std, rng)
     flat, tree = jax.tree_util.tree_flatten(grads)
     keys = jax.random.split(rng, len(flat))
     flat = [g + noise_std * clip_norm *
@@ -87,7 +109,8 @@ def clip_coefficients(sq_norms: jax.Array, clip_norm: float,
 def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
                             batch_size: int, clip_norm: float,
                             noise_std: float = 0.0,
-                            noise_rng: jax.Array = None) -> PexResult:
+                            noise_rng: jax.Array = None,
+                            layout=None) -> PexResult:
     """Per-example gradient clipping (paper §6, two-pass ghost form).
 
     Pass 1 computes the norms via the accumulator; pass 2 backprops the
@@ -95,9 +118,16 @@ def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
     sum of clipped per-example gradients (c_j are constants). Optional
     Gaussian noise makes this a DP-SGD step.
     """
-    res = value_and_norms(loss_fn, params, batch, spec, batch_size)
+    check_noise_args(noise_std, noise_rng)
+    if isinstance(layout, TokenLayout):
+        raise NotImplementedError(
+            "per-example clipping needs per-example ||g_j||^2; the "
+            "(B, S) token map does not sum to them (cross-token terms) "
+            "- clip with the example layout")
+    res = value_and_norms(loss_fn, params, batch, spec, batch_size,
+                          layout=layout)
     c = clip_coefficients(res.sq_norms, clip_norm)
-    acc0 = init_acc(batch_size, spec)
+    acc0 = _layout_or_default(layout, spec).init(batch_size)
 
     def g(p):
         loss_vec, _, _ = loss_fn(p, acc0, batch)

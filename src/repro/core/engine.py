@@ -1,0 +1,190 @@
+"""pex v2 ``Engine`` — one entry point for local, sharded, and
+token-level per-example-gradient runs (DESIGN.md §7).
+
+The Engine replaces the ``core.api`` functions + ``dist.pex.api_for``
+split: it is constructed once with the instrumentation policy and the
+execution context, and every pass takes a **tap-collector loss**
+
+    loss_fn(params, batch, tap) -> (loss_vec, aux)
+
+(the v2 canonical signature; ``registry.make_loss_fn_v2`` builds one
+for any registered arch). The Engine creates the ``Tap`` inside the
+traced function, infers the batch size from the batch pytree, and
+dispatches the local path (``mesh=None``) or the ``shard_map``
+pipeline (``dist.pex``) — per-example quantities stay batch-sharded,
+only gradients/loss cross devices.
+
+    eng = Engine(PexSpec(method="auto"), mesh=mesh, clip_norm=1.0)
+    res = eng.value_grads_and_norms(loss_fn, params, batch)
+    res = eng.clipped_step(loss_fn, params, batch, rng=key)   # DP-SGD
+    bs  = eng.gradient_noise_scale(loss_fn, params, batch)    # B_simple
+
+``granularity="token"`` swaps the accumulator layout to the per-token
+``(B, S)`` map (``TokenLayout``) — same taps, same passes, token-level
+norms — replacing the old parallel ``core.token_norms`` stack.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+
+from repro.core import api
+from repro.core.api import PexResult
+from repro.core.taps import DISABLED, ExampleLayout, PexSpec, Tap, TokenLayout
+from repro.dist import pex as _dpex
+
+
+def infer_batch_size(batch) -> int:
+    """Leading-axis extent shared by every batch leaf."""
+    leaves = jax.tree_util.tree_leaves(batch)
+    if not leaves:
+        raise ValueError("cannot infer batch_size from an empty batch pytree")
+    sizes = {leaf.shape[0] for leaf in leaves}
+    if len(sizes) != 1:
+        raise ValueError(f"batch leaves disagree on the leading (example) "
+                         f"axis: {sorted(sizes)}; pass batch_size= explicitly")
+    return sizes.pop()
+
+
+def infer_seq_len(batch) -> int:
+    """Second-axis extent of the sequence-shaped batch leaves; must be
+    unambiguous (multi-sequence batches, e.g. encoder-decoder frames vs
+    ids, need an explicit seq=)."""
+    sizes = {leaf.shape[1] for leaf in jax.tree_util.tree_leaves(batch)
+             if leaf.ndim >= 2}
+    if len(sizes) == 1:
+        return sizes.pop()
+    if not sizes:
+        raise ValueError("token granularity needs a (B, S, ...) batch leaf "
+                         "to infer the sequence length; pass seq= explicitly")
+    raise ValueError(f"batch leaves carry different sequence lengths "
+                     f"{sorted(sizes)}; pass seq= explicitly to pick the "
+                     f"tapped one")
+
+
+class Engine:
+    """Per-example-gradient engine bound to one (spec, mesh, policy).
+
+    Parameters
+    ----------
+    spec:        ``PexSpec`` instrumentation policy (default: enabled,
+                 method='auto'). ``taps.DISABLED`` gives a plain engine
+                 (taps compile away; sq_norms are zeros).
+    mesh:        ``jax.sharding.Mesh`` or None. A mesh routes every pass
+                 through the ``dist.pex`` shard_map pipeline over
+                 ``data_axes``; None runs single-device/GSPMD.
+    clip_norm:   default clip threshold C for ``clipped_step``.
+    noise_std:   default DP-SGD noise multiplier σ for ``clipped_step``
+                 (noise σ·C is added once, after the gradient psum).
+    granularity: 'example' → (B, G) accumulator (per-group columns from
+                 ``spec.groups``); 'token' → (B, S) accumulator.
+    """
+
+    def __init__(self, spec: Optional[PexSpec] = None, *,
+                 mesh=None, data_axes: Sequence[str] = ("data",),
+                 clip_norm: Optional[float] = None, noise_std: float = 0.0,
+                 granularity: str = "example"):
+        if granularity not in ("example", "token"):
+            raise ValueError(f"granularity must be 'example' or 'token', "
+                             f"got {granularity!r}")
+        self.spec = spec if spec is not None else PexSpec()
+        self.mesh = mesh
+        self.data_axes = (data_axes,) if isinstance(data_axes, str) \
+            else tuple(data_axes)
+        self.clip_norm = clip_norm
+        self.noise_std = noise_std
+        self.granularity = granularity
+
+    # ------------------------------------------------------------------
+    def _layout(self, batch, seq: Optional[int]):
+        if self.granularity == "token":
+            return TokenLayout(seq if seq is not None
+                               else infer_seq_len(batch))
+        return ExampleLayout(self.spec.n_groups)
+
+    def _adapt(self, loss_fn: Callable, layout) -> Callable:
+        """v2 tap-collector loss → v1 explicit-acc loss (the Tap is
+        created inside the traced function, per trace)."""
+        def v1_loss(params, acc, batch):
+            tap = Tap(self.spec, acc=acc, layout=layout)
+            loss_vec, aux = loss_fn(params, batch, tap)
+            return loss_vec, tap.carry(), aux
+        return v1_loss
+
+    def _run(self, fn, loss_fn, params, batch, batch_size, seq, **kw):
+        b = batch_size if batch_size is not None else infer_batch_size(batch)
+        layout = self._layout(batch, seq)
+        v1_loss = self._adapt(loss_fn, layout)
+        if self.mesh is None:
+            return getattr(api, fn)(v1_loss, params, batch, self.spec, b,
+                                    layout=layout, **kw)
+        return getattr(_dpex, fn)(v1_loss, params, batch, self.spec, b,
+                                  mesh=self.mesh, data_axes=self.data_axes,
+                                  layout=layout, **kw)
+
+    # ------------------------------------------------------------------
+    def value_and_norms(self, loss_fn: Callable, params, batch, *,
+                        batch_size: Optional[int] = None,
+                        seq: Optional[int] = None) -> PexResult:
+        """Norms-only pass (paper §5 cheap pass): no ``dW`` chains."""
+        return self._run("value_and_norms", loss_fn, params, batch,
+                         batch_size, seq)
+
+    def value_grads_and_norms(self, loss_fn: Callable, params, batch, *,
+                              batch_size: Optional[int] = None,
+                              seq: Optional[int] = None) -> PexResult:
+        """Summed gradients AND all per-example norms in one backward."""
+        return self._run("value_grads_and_norms", loss_fn, params, batch,
+                         batch_size, seq)
+
+    def clipped_step(self, loss_fn: Callable, params, batch, *,
+                     rng: Optional[jax.Array] = None,
+                     clip_norm: Optional[float] = None,
+                     noise_std: Optional[float] = None,
+                     batch_size: Optional[int] = None) -> PexResult:
+        """Per-example clipping (paper §6 two-pass ghost form), plus
+        DP-SGD noise when ``noise_std > 0`` (needs ``rng``)."""
+        if self.granularity == "token":
+            raise NotImplementedError(
+                "clipped_step reweights the (B,) per-example losses; "
+                "per-token clip coefficients have no loss to reweight — "
+                "use granularity='example'")
+        c = clip_norm if clip_norm is not None else self.clip_norm
+        if c is None:
+            raise ValueError("clipped_step needs clip_norm: set it on the "
+                             "Engine or pass clip_norm= per call")
+        sigma = noise_std if noise_std is not None else self.noise_std
+        api.check_noise_args(sigma, rng)
+        return self._run("clipped_value_and_grads", loss_fn, params, batch,
+                         batch_size, None, clip_norm=c, noise_std=sigma,
+                         noise_rng=rng)
+
+    def gradient_noise_scale(self, loss_fn: Callable, params, batch, *,
+                             batch_size: Optional[int] = None) -> jax.Array:
+        """Critical-batch diagnostic B_simple = tr(Σ)/||G||² from one
+        grads+norms pass (Gray et al. 2024 / McCandlish et al. 2018)."""
+        if self.granularity == "token":
+            raise NotImplementedError(
+                "gradient_noise_scale needs per-example ||g_j||²; "
+                "per-token norms do not sum to them (cross-token terms) — "
+                "use granularity='example'")
+        b = batch_size if batch_size is not None else infer_batch_size(batch)
+        res = self.value_grads_and_norms(loss_fn, params, batch,
+                                         batch_size=b)
+        return _dpex.gradient_noise_scale(res.sq_norms, res.grads,
+                                          batch_size=b)
+
+    # ------------------------------------------------------------------
+    def tap(self, batch_size: int, *, seq: Optional[int] = None) -> Tap:
+        """Standalone live Tap for hand-rolled transforms (the Engine
+        passes above create their own)."""
+        layout = self._layout(None, seq) if self.granularity == "token" \
+            else ExampleLayout(self.spec.n_groups)
+        return Tap(self.spec, acc=layout.init(batch_size), layout=layout)
+
+
+#: Engine with instrumentation off: every pass is the plain model
+#: (sq_norms are zeros; taps compile away).
+def plain_engine(**kw) -> Engine:
+    return Engine(DISABLED, **kw)

@@ -5,29 +5,51 @@ layer, the pair ``(H, Z̄)`` from which per-example gradient norms follow
 for free. JAX (like the frameworks the paper complains about) does not
 expose ``Z̄``, so each instrumented op here is a ``jax.custom_vjp``
 whose backward pass computes the standard cotangents *and* adds the
-layer's per-example stat to the cotangent of a ``(batch, n_groups)``
-accumulator threaded through the forward pass:
+layer's per-example stat to the cotangent of an accumulator threaded
+through the forward pass.
 
-    z, acc = pex.dense(h, w, acc, spec=spec, group="mlp")
+pex v2 (DESIGN.md §7): the accumulator is owned by a trace-time ``Tap``
+collector created once per traced function (by ``core.engine.Engine``
+or directly) and handed to the model — layers call
 
-``jax.grad`` w.r.t. the initial accumulator then recovers
-``Σ_i s⁽ⁱ⁾`` in the same single backward pass that produces the
-parameter gradients (paper §4–§5). The accumulator is ``(B, G)`` and
-lives on the data axis, so the technique adds no collective traffic.
+    z = tap.dense(h, w, group="mlp")
 
-Key properties:
-  * works under ``jit``, ``lax.scan`` (acc in the carry), ``jax.checkpoint``
-    (remat), ``vmap`` and ``pjit`` — it is just a custom_vjp op;
+and never see the accumulator. ``jax.grad`` w.r.t. the tap's initial
+accumulator then recovers ``Σ_i s⁽ⁱ⁾`` in the same single backward
+pass that produces the parameter gradients (paper §4–§5).
+
+How each op's stat lands in the accumulator is pluggable via the tap's
+**layout**:
+
+  * ``ExampleLayout(n_groups)`` — a ``(B, G)`` accumulator; each op's
+    per-example stat is scattered into its group's column (v1
+    semantics, the paper's per-example norms);
+  * ``TokenLayout(seq)`` — a ``(B, S)`` accumulator; the paper's §4
+    factorization applied at token granularity, where it is exact for
+    *every* dense/bias/scale/embedding op (token t's contribution to
+    ``∂L/∂W`` is the rank-1 outer product ``h_t z̄_tᵀ``), replacing the
+    old parallel ``core.token_norms`` stack.
+
+Key properties (unchanged from v1):
+  * works under ``jit``, ``lax.scan`` (via ``pex.scan`` / the tap
+    ``carry()`` contract), ``jax.checkpoint`` (via ``pex.checkpoint``),
+    ``vmap`` and ``pjit`` — each op is just a custom_vjp;
   * when gradients w.r.t. the accumulator are *not* requested, the stat
     computation is dead code and is removed by jaxpr/XLA DCE — the
-    instrumented model costs the same as the plain one;
+    instrumented model costs the same as the plain one (asserted in
+    tests/test_dce.py);
   * when only norms are requested (importance sampling), the ``dW``
     chains are dead code instead — the pass costs forward +
     activation-backprop + O(mnp), as in paper §5.
+
+The v1 explicit-accumulator functions (``dense(h, w, acc, *, spec)``
+etc.) remain as thin deprecation shims for one release; new code goes
+through ``Tap`` / ``repro.pex``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional, Tuple
 
@@ -55,6 +77,10 @@ class PexSpec:
                  direct kernel, whichever the backend-aware cost model
                  picks (``method='auto'`` covers both regimes).
     groups:      acc column names; per-group norms (e.g. attn/mlp/embed).
+                 ``"all"`` / ``"other"`` act as catch-all columns; an op
+                 tapping a group not in ``groups`` (and with no catch-all
+                 present) raises at trace time — a typo'd group name must
+                 not silently corrupt another column's stats.
     tap_embeddings / tap_head: include embedding / lm-head params in the
                  norm (exact but vocab-sized work; cf. DESIGN.md §5).
     """
@@ -66,9 +92,17 @@ class PexSpec:
     tap_head: bool = True
 
     def group_index(self, group: Optional[str]) -> int:
-        if group is None or group not in self.groups:
+        if group is None:
             return 0
-        return self.groups.index(group)
+        if group in self.groups:
+            return self.groups.index(group)
+        for catch_all in ("all", "other"):
+            if catch_all in self.groups:
+                return self.groups.index(catch_all)
+        raise ValueError(
+            f"unknown pex group {group!r}: spec.groups={self.groups} has "
+            f"no catch-all column ('all' or 'other'); add {group!r} to "
+            f"groups or include a catch-all")
 
     @property
     def n_groups(self) -> int:
@@ -78,15 +112,110 @@ class PexSpec:
 DISABLED = PexSpec(enabled=False)
 
 
-def init_acc(batch: int, spec: PexSpec) -> jax.Array:
-    """Fresh accumulator for one instrumented forward pass.
+# ---------------------------------------------------------------------------
+# accumulator layouts — where a tap's stat lands
+# ---------------------------------------------------------------------------
 
-    Constrained to the batch axis under an active mesh (dist.sharding
-    rules): the accumulator — and hence its cotangent, the (B, G) norm
-    vector — lives wherever the examples live, keeping the technique
-    collective-free under data parallelism."""
-    return _shard(jnp.zeros((batch, spec.n_groups), _ACC_DTYPE),
-                  "batch", None)
+@dataclasses.dataclass(frozen=True)
+class ExampleLayout:
+    """(B, n_groups) accumulator: per-example, per-group squared norms
+    (the paper's object). Dense stats go through the estimator zoo
+    (core.norms) and scatter into the op's group column."""
+    n_groups: int = 1
+
+    def init(self, batch: int) -> jax.Array:
+        """Fresh accumulator, constrained to the batch axis under an
+        active mesh (dist.sharding rules) so the (B, G) norm vector
+        lives wherever the examples live — collective-free under DP."""
+        return _shard(jnp.zeros((batch, self.n_groups), _ACC_DTYPE),
+                      "batch", None)
+
+    def add_dense(self, acc_bar, h, zbar, group, method, use_pallas):
+        stat = N.stat_dense(h, zbar, method=method, use_pallas=use_pallas)
+        return acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+
+    def add_bias(self, acc_bar, zbar, group):
+        return acc_bar.at[:, group].add(
+            N.stat_bias(zbar).astype(acc_bar.dtype))
+
+    def add_scale(self, acc_bar, h, zbar, group):
+        return acc_bar.at[:, group].add(
+            N.stat_elementwise(h, zbar).astype(acc_bar.dtype))
+
+    def add_embedding(self, acc_bar, ids, zbar, group):
+        stat = N.stat_embedding(ids.reshape(ids.shape[0], -1),
+                                zbar.reshape(zbar.shape[0], -1,
+                                             zbar.shape[-1]))
+        return acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+
+    def add_example_stat(self, acc_bar, stat, group):
+        """Scatter an already-(B,)-shaped stat (MoE expert taps)."""
+        return acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+
+
+def _sumsq_tail(x, keep: int = 2):
+    """Σ x² over all axes past the first ``keep`` (f32)."""
+    axes = tuple(range(keep, x.ndim))
+    return jnp.sum(jnp.square(x.astype(_ACC_DTYPE)), axis=axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenLayout:
+    """(B, S) accumulator: the paper's §4 factorization at token
+    granularity, where it is exact for every dense layer in every
+    sequence model — token t's contribution to ``∂L/∂W`` is the rank-1
+    outer product ``h_t z̄_tᵀ``, so ``s_{j,t} = ‖h_{j,t}‖²·‖z̄_{j,t}‖²``.
+    Group columns do not apply; all taps fold into the one (B, S) map.
+    Uses: token-level data filtering / curriculum, influence
+    diagnostics, per-token clipping."""
+    seq: int
+
+    def init(self, batch: int) -> jax.Array:
+        return _shard(jnp.zeros((batch, self.seq), _ACC_DTYPE),
+                      "batch", None)
+
+    def add_dense(self, acc_bar, h, zbar, group, method, use_pallas):
+        if h.ndim != 3:
+            raise ValueError(
+                f"TokenLayout dense tap needs (B, S, p) activations, got "
+                f"shape {h.shape}; per-token factorization is only exact "
+                f"when each token is one row of the matmul")
+        return acc_bar + _sumsq_tail(h) * _sumsq_tail(zbar)
+
+    def add_bias(self, acc_bar, zbar, group):
+        # token t's bias contribution is z̄_t itself
+        self._check_rank(zbar, "bias_add")
+        return acc_bar + _sumsq_tail(zbar)
+
+    def add_scale(self, acc_bar, h, zbar, group):
+        # token t's gain contribution is h_t ⊙ z̄_t
+        self._check_rank(zbar, "scale")
+        return acc_bar + _sumsq_tail(h.astype(_ACC_DTYPE) *
+                                     zbar.astype(_ACC_DTYPE))
+
+    def add_embedding(self, acc_bar, ids, zbar, group):
+        # one-hot row ⇒ ‖h_t‖² = 1 ⇒ stat is ‖z̄_t‖²
+        self._check_rank(zbar, "embedding")
+        return acc_bar + _sumsq_tail(zbar)
+
+    def _check_rank(self, zbar, op: str) -> None:
+        if zbar.ndim < 3:
+            raise ValueError(
+                f"TokenLayout {op} tap needs (B, S, ...) activations, got "
+                f"shape {zbar.shape}; a rank-2 stat would silently "
+                f"broadcast into the (B, S) accumulator")
+
+    def add_example_stat(self, acc_bar, stat, group):
+        raise NotImplementedError(
+            "MoE expert taps produce per-example stats (capacity slots "
+            "lose token positions); token-granularity norms over expert "
+            "weights are not supported — exclude the MoE group or use "
+            "ExampleLayout")
+
+
+def init_acc(batch: int, spec: PexSpec) -> jax.Array:
+    """Fresh (B, n_groups) example-layout accumulator (v1 helper)."""
+    return ExampleLayout(spec.n_groups).init(batch)
 
 
 def _int_zero_cotangent(x):
@@ -94,41 +223,31 @@ def _int_zero_cotangent(x):
 
 
 # ---------------------------------------------------------------------------
+# custom_vjp op registry (layout-parameterized)
 # dense: z = h @ w        (the paper's layer; h (B,[S,]p_in), w (p_in,p_out))
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _pex_dense(method: str, use_pallas: bool, group: int,
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _pex_dense(method: str, use_pallas: bool, group: int, layout,
                h: jax.Array, w: jax.Array, acc: jax.Array):
     return jnp.einsum("...i,io->...o", h, w), acc
 
 
-def _pex_dense_fwd(method, use_pallas, group, h, w, acc):
+def _pex_dense_fwd(method, use_pallas, group, layout, h, w, acc):
     z = jnp.einsum("...i,io->...o", h, w)
     return (z, acc), (h, w)
 
 
-def _pex_dense_bwd(method, use_pallas, group, res, cts):
+def _pex_dense_bwd(method, use_pallas, group, layout, res, cts):
     h, w = res
     zbar, acc_bar = cts
     dh = jnp.einsum("...o,io->...i", zbar, w).astype(h.dtype)
     dw = jnp.einsum("...i,...o->io", h, zbar).astype(w.dtype)
-    stat = N.stat_dense(h, zbar, method=method, use_pallas=use_pallas)
-    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    dacc = layout.add_dense(acc_bar, h, zbar, group, method, use_pallas)
     return dh, dw, dacc
 
 
 _pex_dense.defvjp(_pex_dense_fwd, _pex_dense_bwd)
-
-
-def dense(h: jax.Array, w: jax.Array, acc: jax.Array, *,
-          spec: PexSpec, group: str = "all",
-          method: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
-    """Instrumented matmul. Plain einsum when spec.enabled is False."""
-    if not spec.enabled:
-        return jnp.einsum("...i,io->...o", h, w), acc
-    m = method or spec.method
-    return _pex_dense(m, spec.use_pallas, spec.group_index(group), h, w, acc)
 
 
 # ---------------------------------------------------------------------------
@@ -137,18 +256,18 @@ def dense(h: jax.Array, w: jax.Array, acc: jax.Array, *,
 #   segmented-direct estimator with per-row example ids)
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _pex_dense_expert(group: int, n_examples: int,
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _pex_dense_expert(group: int, n_examples: int, layout,
                       x: jax.Array, w: jax.Array, seg: jax.Array,
                       acc: jax.Array):
     return jnp.einsum("ecd,edf->ecf", x, w), acc
 
 
-def _pex_dense_expert_fwd(group, n_examples, x, w, seg, acc):
+def _pex_dense_expert_fwd(group, n_examples, layout, x, w, seg, acc):
     return (jnp.einsum("ecd,edf->ecf", x, w), acc), (x, w, seg)
 
 
-def _pex_dense_expert_bwd(group, n_examples, res, cts):
+def _pex_dense_expert_bwd(group, n_examples, layout, res, cts):
     x, w, seg = res
     zbar, acc_bar = cts
     dx = jnp.einsum("ecf,edf->ecd", zbar, w).astype(x.dtype)
@@ -163,21 +282,11 @@ def _pex_dense_expert_bwd(group, n_examples, res, cts):
         x.reshape(e * c, d), zbar.reshape(e * c, -1),
         composite.reshape(e * c), e * (n_examples + 1))
     stat = stat_ec.reshape(e, n_examples + 1)[:, :n_examples].sum(axis=0)
-    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    dacc = layout.add_example_stat(acc_bar, stat, group)
     return dx, dw, _int_zero_cotangent(seg), dacc
 
 
 _pex_dense_expert.defvjp(_pex_dense_expert_fwd, _pex_dense_expert_bwd)
-
-
-def dense_expert(x: jax.Array, w: jax.Array, seg: jax.Array, acc: jax.Array,
-                 *, spec: PexSpec, group: str = "moe"):
-    """Instrumented per-expert matmul. x (E,C,d), w (E,d,f), seg (E,C) int
-    example ids (>= batch ⇒ padding row, excluded from stats)."""
-    if not spec.enabled:
-        return jnp.einsum("ecd,edf->ecf", x, w), acc
-    return _pex_dense_expert(spec.group_index(group), acc.shape[0],
-                             x, w, seg, acc)
 
 
 # ---------------------------------------------------------------------------
@@ -187,18 +296,18 @@ def dense_expert(x: jax.Array, w: jax.Array, seg: jax.Array, acc: jax.Array,
 #   stats land at acc rows [g·bg, (g+1)·bg).
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _pex_dense_expert_grouped(group: int, bg: int,
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _pex_dense_expert_grouped(group: int, bg: int, layout,
                               x: jax.Array, w: jax.Array, seg: jax.Array,
                               acc: jax.Array):
     return jnp.einsum("gecd,edf->gecf", x, w), acc
 
 
-def _pex_dense_expert_grouped_fwd(group, bg, x, w, seg, acc):
+def _pex_dense_expert_grouped_fwd(group, bg, layout, x, w, seg, acc):
     return (jnp.einsum("gecd,edf->gecf", x, w), acc), (x, w, seg)
 
 
-def _pex_dense_expert_grouped_bwd(group, bg, res, cts):
+def _pex_dense_expert_grouped_bwd(group, bg, layout, res, cts):
     x, w, seg = res
     zbar, acc_bar = cts
     dx = jnp.einsum("gecf,edf->gecd", zbar, w).astype(x.dtype)
@@ -215,7 +324,7 @@ def _pex_dense_expert_grouped_bwd(group, bg, res, cts):
         return stat_ec.reshape(e, bg + 1)[:, :bg].sum(axis=0)  # (bg,)
 
     stat = jax.vmap(one_group)(x, zbar, seg).reshape(ng * bg)
-    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    dacc = layout.add_example_stat(acc_bar, stat, group)
     return dx, dw, _int_zero_cotangent(seg), dacc
 
 
@@ -223,79 +332,56 @@ _pex_dense_expert_grouped.defvjp(_pex_dense_expert_grouped_fwd,
                                  _pex_dense_expert_grouped_bwd)
 
 
-def dense_expert_grouped(x: jax.Array, w: jax.Array, seg: jax.Array,
-                         acc: jax.Array, bg: int, *, spec: PexSpec,
-                         group: str = "moe"):
-    """Grouped instrumented expert matmul. x (G,E,C,d), w (E,d,f),
-    seg (G,E,C) group-local example ids (>= bg ⇒ padding row)."""
-    if not spec.enabled:
-        return jnp.einsum("gecd,edf->gecf", x, w), acc
-    return _pex_dense_expert_grouped(spec.group_index(group), bg,
-                                     x, w, seg, acc)
-
-
 # ---------------------------------------------------------------------------
 # bias_add: z = x + b      (paper folds b into W as a ones-column; same math)
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _pex_bias(group: int, x: jax.Array, b: jax.Array, acc: jax.Array):
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _pex_bias(group: int, layout, x: jax.Array, b: jax.Array,
+              acc: jax.Array):
     return x + b, acc
 
 
-def _pex_bias_fwd(group, x, b, acc):
+def _pex_bias_fwd(group, layout, x, b, acc):
     return (x + b, acc), None
 
 
-def _pex_bias_bwd(group, _, cts):
+def _pex_bias_bwd(group, layout, _, cts):
     zbar, acc_bar = cts
     reduce_axes = tuple(range(zbar.ndim - 1))
     db = jnp.sum(zbar, axis=reduce_axes).astype(zbar.dtype)
-    stat = N.stat_bias(zbar)
-    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    dacc = layout.add_bias(acc_bar, zbar, group)
     return zbar, db, dacc
 
 
 _pex_bias.defvjp(_pex_bias_fwd, _pex_bias_bwd)
 
 
-def bias_add(x, b, acc, *, spec: PexSpec, group: str = "all"):
-    if not spec.enabled:
-        return x + b, acc
-    return _pex_bias(spec.group_index(group), x, b, acc)
-
-
 # ---------------------------------------------------------------------------
 # scale: z = g ⊙ h         (elementwise params: RMSNorm gains, decays, ...)
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _pex_scale(group: int, h: jax.Array, g: jax.Array, acc: jax.Array):
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _pex_scale(group: int, layout, h: jax.Array, g: jax.Array,
+               acc: jax.Array):
     return h * g, acc
 
 
-def _pex_scale_fwd(group, h, g, acc):
+def _pex_scale_fwd(group, layout, h, g, acc):
     return (h * g, acc), (h, g)
 
 
-def _pex_scale_bwd(group, res, cts):
+def _pex_scale_bwd(group, layout, res, cts):
     h, g = res
     zbar, acc_bar = cts
     dh = (zbar * g).astype(h.dtype)
     reduce_axes = tuple(range(zbar.ndim - 1))
     dg = jnp.sum(zbar * h, axis=reduce_axes).astype(g.dtype)
-    stat = N.stat_elementwise(h, zbar)
-    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    dacc = layout.add_scale(acc_bar, h, zbar, group)
     return dh, dg, dacc
 
 
 _pex_scale.defvjp(_pex_scale_fwd, _pex_scale_bwd)
-
-
-def scale(h, g, acc, *, spec: PexSpec, group: str = "all"):
-    if not spec.enabled:
-        return h * g, acc
-    return _pex_scale(spec.group_index(group), h, g, acc)
 
 
 # ---------------------------------------------------------------------------
@@ -303,33 +389,240 @@ def scale(h, g, acc, *, spec: PexSpec, group: str = "all"):
 #                              exact via sort + segment-sum, O(S·d))
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _pex_embed(group: int, table: jax.Array, ids: jax.Array, acc: jax.Array):
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _pex_embed(group: int, layout, table: jax.Array, ids: jax.Array,
+               acc: jax.Array):
     return jnp.take(table, ids, axis=0), acc
 
 
-def _pex_embed_fwd(group, table, ids, acc):
+def _pex_embed_fwd(group, layout, table, ids, acc):
     # `table` rides along only as a shape/dtype reference for the scatter;
     # it is a live parameter anyway, so this costs no extra memory.
     return (jnp.take(table, ids, axis=0), acc), (ids, table)
 
 
-def _pex_embed_bwd(group, res, cts):
+def _pex_embed_bwd(group, layout, res, cts):
     ids, table = res
     zbar, acc_bar = cts
     flat_ids = ids.reshape(-1)
     flat_z = zbar.reshape(-1, zbar.shape[-1])
     dtable = jnp.zeros_like(table).at[flat_ids].add(flat_z.astype(table.dtype))
-    stat = N.stat_embedding(ids.reshape(ids.shape[0], -1),
-                            zbar.reshape(zbar.shape[0], -1, zbar.shape[-1]))
-    dacc = acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+    dacc = layout.add_embedding(acc_bar, ids, zbar, group)
     return dtable, _int_zero_cotangent(ids), dacc
 
 
 _pex_embed.defvjp(_pex_embed_fwd, _pex_embed_bwd)
 
 
+# ---------------------------------------------------------------------------
+# the trace-time collector (pex v2)
+# ---------------------------------------------------------------------------
+
+class Tap:
+    """Trace-time tap collector: owns the accumulator so models never
+    thread it. Create one per traced function (``Engine`` does this),
+    pass it down; every op mutates ``tap``'s held accumulator at trace
+    time, which keeps the value chain explicit in the jaxpr:
+
+        tap = Tap(spec, acc=layout.init(batch))
+        z = tap.dense(h, w, group="mlp")
+        ...
+        acc_out = tap.carry()     # return so the chain stays live
+
+    Crossing a transform boundary (``lax.scan`` body, ``jax.checkpoint``)
+    requires the accumulator to be an explicit input/output of the inner
+    function — use ``pex.scan`` / ``pex.checkpoint`` (this module's
+    ``scan`` / ``checkpoint``), or ``carry()`` / ``set_carry()`` by hand.
+
+    A tap with ``spec.enabled=False`` or no accumulator is inert: every
+    op is its plain counterpart (``NULL`` is the shared inert tap), so
+    the same model code serves uninstrumented.
+    """
+    __slots__ = ("spec", "layout", "_acc")
+
+    def __init__(self, spec: PexSpec, acc: Optional[jax.Array] = None,
+                 layout=None):
+        self.spec = spec
+        self.layout = layout if layout is not None \
+            else ExampleLayout(spec.n_groups)
+        self._acc = acc
+
+    @property
+    def live(self) -> bool:
+        """True when ops actually register stats."""
+        return self.spec.enabled and self._acc is not None
+
+    # -- accumulator plumbing (transform boundaries) --------------------
+    def carry(self):
+        """Current accumulator value (to return / put in a scan carry)."""
+        return self._acc
+
+    def set_carry(self, acc) -> None:
+        """Rebind the accumulator (entering a scan body / after a scan)."""
+        self._acc = acc
+
+    # -- ops -------------------------------------------------------------
+    def dense(self, h, w, *, group: str = "all",
+              method: Optional[str] = None) -> jax.Array:
+        """Instrumented matmul. Plain einsum when the tap is inert."""
+        if not self.live:
+            return jnp.einsum("...i,io->...o", h, w)
+        m = method or self.spec.method
+        z, self._acc = _pex_dense(m, self.spec.use_pallas,
+                                  self.spec.group_index(group), self.layout,
+                                  h, w, self._acc)
+        return z
+
+    def bias_add(self, x, b, *, group: str = "all") -> jax.Array:
+        if not self.live:
+            return x + b
+        z, self._acc = _pex_bias(self.spec.group_index(group), self.layout,
+                                 x, b, self._acc)
+        return z
+
+    def scale(self, h, g, *, group: str = "all") -> jax.Array:
+        if not self.live:
+            return h * g
+        z, self._acc = _pex_scale(self.spec.group_index(group), self.layout,
+                                  h, g, self._acc)
+        return z
+
+    def embedding(self, table, ids, *, group: str = "embed") -> jax.Array:
+        if not (self.live and self.spec.tap_embeddings):
+            return jnp.take(table, ids, axis=0)
+        z, self._acc = _pex_embed(self.spec.group_index(group), self.layout,
+                                  table, ids, self._acc)
+        return z
+
+    def dense_expert(self, x, w, seg, *, group: str = "moe") -> jax.Array:
+        """Instrumented per-expert matmul. x (E,C,d), w (E,d,f), seg (E,C)
+        int example ids (>= batch ⇒ padding row, excluded from stats)."""
+        if not self.live:
+            return jnp.einsum("ecd,edf->ecf", x, w)
+        z, self._acc = _pex_dense_expert(
+            self.spec.group_index(group), self._acc.shape[0], self.layout,
+            x, w, seg, self._acc)
+        return z
+
+    def dense_expert_grouped(self, x, w, seg, bg: int, *,
+                             group: str = "moe") -> jax.Array:
+        """Grouped instrumented expert matmul. x (G,E,C,d), w (E,d,f),
+        seg (G,E,C) group-local example ids (>= bg ⇒ padding row)."""
+        if not self.live:
+            return jnp.einsum("gecd,edf->gecf", x, w)
+        z, self._acc = _pex_dense_expert_grouped(
+            self.spec.group_index(group), bg, self.layout,
+            x, w, seg, self._acc)
+        return z
+
+
+#: Shared inert tap: every op is its plain counterpart. Serving /
+#: oracle paths pass this instead of constructing a disabled Tap.
+NULL = Tap(DISABLED)
+
+
+def scan(body, init, xs, *, tap: Optional[Tap] = None, length=None,
+         reverse: bool = False, unroll=1, remat: bool = False, policy=None):
+    """``lax.scan`` with the tap's accumulator threaded through the
+    carry — the v2 replacement for hand-carrying ``acc``.
+
+    ``body(carry, x) -> (carry, y)`` uses ``tap`` from its enclosing
+    scope exactly like straight-line code; this wrapper makes the
+    accumulator an explicit carry element so the tap chain survives the
+    scan boundary. ``remat=True`` applies ``jax.checkpoint`` (with
+    ``policy``) to the (acc-explicit) body. With an inert/absent tap
+    this is a plain ``lax.scan`` — the DCE property is untouched.
+    """
+    if tap is None or not tap.live:
+        fn = jax.checkpoint(body, policy=policy) if remat else body
+        return jax.lax.scan(fn, init, xs, length=length, reverse=reverse,
+                            unroll=unroll)
+
+    def threaded(carry, x):
+        c, acc = carry
+        tap.set_carry(acc)
+        c, y = body(c, x)
+        return (c, tap.carry()), y
+
+    fn = jax.checkpoint(threaded, policy=policy) if remat else threaded
+    (c, acc), ys = jax.lax.scan(fn, (init, tap.carry()), xs, length=length,
+                                reverse=reverse, unroll=unroll)
+    tap.set_carry(acc)
+    return c, ys
+
+
+def checkpoint(fn, *, tap: Optional[Tap] = None, policy=None):
+    """``jax.checkpoint`` with the tap's accumulator made explicit, so a
+    rematerialized block neither leaks tracers nor severs the tap chain.
+    Returns a function with ``fn``'s signature."""
+    if tap is None or not tap.live:
+        return jax.checkpoint(fn, policy=policy)
+
+    def explicit(acc, *args, **kw):
+        tap.set_carry(acc)
+        out = fn(*args, **kw)
+        return out, tap.carry()
+
+    inner = jax.checkpoint(explicit, policy=policy)
+
+    def outer(*args, **kw):
+        out, acc = inner(tap.carry(), *args, **kw)
+        tap.set_carry(acc)
+        return out
+
+    return outer
+
+
+# ---------------------------------------------------------------------------
+# v1 explicit-accumulator shims (deprecated; one release)
+# ---------------------------------------------------------------------------
+
+def _v1_warn(name: str) -> None:
+    warnings.warn(
+        f"taps.{name}(..., acc, spec=...) is the deprecated v1 API; "
+        f"create a Tap (repro.pex) and call tap.{name}(...) instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def dense(h, w, acc, *, spec: PexSpec, group: str = "all",
+          method: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    """Deprecated v1 op: instrumented matmul with explicit acc."""
+    _v1_warn("dense")
+    t = Tap(spec, acc=acc)
+    return t.dense(h, w, group=group, method=method), t.carry()
+
+
+def bias_add(x, b, acc, *, spec: PexSpec, group: str = "all"):
+    """Deprecated v1 op: instrumented bias add with explicit acc."""
+    _v1_warn("bias_add")
+    t = Tap(spec, acc=acc)
+    return t.bias_add(x, b, group=group), t.carry()
+
+
+def scale(h, g, acc, *, spec: PexSpec, group: str = "all"):
+    """Deprecated v1 op: instrumented elementwise scale with explicit acc."""
+    _v1_warn("scale")
+    t = Tap(spec, acc=acc)
+    return t.scale(h, g, group=group), t.carry()
+
+
 def embedding(table, ids, acc, *, spec: PexSpec, group: str = "embed"):
-    if not (spec.enabled and spec.tap_embeddings):
-        return jnp.take(table, ids, axis=0), acc
-    return _pex_embed(spec.group_index(group), table, ids, acc)
+    """Deprecated v1 op: instrumented embedding lookup with explicit acc."""
+    _v1_warn("embedding")
+    t = Tap(spec, acc=acc)
+    return t.embedding(table, ids, group=group), t.carry()
+
+
+def dense_expert(x, w, seg, acc, *, spec: PexSpec, group: str = "moe"):
+    """Deprecated v1 op: instrumented expert matmul with explicit acc."""
+    _v1_warn("dense_expert")
+    t = Tap(spec, acc=acc)
+    return t.dense_expert(x, w, seg, group=group), t.carry()
+
+
+def dense_expert_grouped(x, w, seg, acc, bg: int, *, spec: PexSpec,
+                         group: str = "moe"):
+    """Deprecated v1 op: grouped instrumented expert matmul."""
+    _v1_warn("dense_expert_grouped")
+    t = Tap(spec, acc=acc)
+    return t.dense_expert_grouped(x, w, seg, bg, group=group), t.carry()

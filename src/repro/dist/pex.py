@@ -94,7 +94,8 @@ def _wrap(mesh: Mesh, data_axes: DataAxes, fn: Callable, n_out_sharded: int,
 
 def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
                     batch_size: int, *, mesh: Optional[Mesh] = None,
-                    data_axes: Sequence[str] = ("data",)) -> PexResult:
+                    data_axes: Sequence[str] = ("data",),
+                    layout=None) -> PexResult:
     """Sharded norms-only pass. Single-device semantics when mesh=None.
 
     Returns the same PexResult as ``core.api.value_and_norms``; the
@@ -104,12 +105,13 @@ def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
     ``_reject_aux``); the grads/clipped variants share this contract.
     """
     if mesh is None:
-        return api.value_and_norms(loss_fn, params, batch, spec, batch_size)
+        return api.value_and_norms(loss_fn, params, batch, spec, batch_size,
+                                   layout=layout)
     data_axes = _norm_axes(data_axes)
     local_b = shd.local_batch(batch_size, data_axes, mesh)
 
     def run(p, b):
-        r = api.value_and_norms(loss_fn, p, b, spec, local_b)
+        r = api.value_and_norms(loss_fn, p, b, spec, local_b, layout=layout)
         _reject_aux(r.aux)
         return r.loss_vec, r.sq_norms, jax.lax.psum(r.loss, data_axes)
 
@@ -119,17 +121,19 @@ def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
 
 def value_grads_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
                           batch_size: int, *, mesh: Optional[Mesh] = None,
-                          data_axes: Sequence[str] = ("data",)) -> PexResult:
+                          data_axes: Sequence[str] = ("data",),
+                          layout=None) -> PexResult:
     """Sharded headline pass: summed gradients (psum over the data
     axes) AND batch-sharded per-example norms in one backward."""
     if mesh is None:
         return api.value_grads_and_norms(loss_fn, params, batch, spec,
-                                         batch_size)
+                                         batch_size, layout=layout)
     data_axes = _norm_axes(data_axes)
     local_b = shd.local_batch(batch_size, data_axes, mesh)
 
     def run(p, b):
-        r = api.value_grads_and_norms(loss_fn, p, b, spec, local_b)
+        r = api.value_grads_and_norms(loss_fn, p, b, spec, local_b,
+                                      layout=layout)
         _reject_aux(r.aux)
         return (r.loss_vec, r.sq_norms,
                 jax.lax.psum(r.loss, data_axes),
@@ -145,7 +149,8 @@ def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
                             noise_std: float = 0.0,
                             noise_rng: Optional[jax.Array] = None, *,
                             mesh: Optional[Mesh] = None,
-                            data_axes: Sequence[str] = ("data",)) -> PexResult:
+                            data_axes: Sequence[str] = ("data",),
+                            layout=None) -> PexResult:
     """Sharded per-example clipping (paper §6, two-pass ghost form).
 
     c_j uses only example j's local norm, so both passes run entirely
@@ -153,17 +158,18 @@ def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
     the reduced gradient (matching the single-device DP-SGD step), not
     per shard.
     """
+    api.check_noise_args(noise_std, noise_rng)
     if mesh is None:
         return api.clipped_value_and_grads(loss_fn, params, batch, spec,
                                            batch_size, clip_norm,
                                            noise_std=noise_std,
-                                           noise_rng=noise_rng)
+                                           noise_rng=noise_rng, layout=layout)
     data_axes = _norm_axes(data_axes)
     local_b = shd.local_batch(batch_size, data_axes, mesh)
 
     def run(p, b):
         r = api.clipped_value_and_grads(loss_fn, p, b, spec, local_b,
-                                        clip_norm)
+                                        clip_norm, layout=layout)
         _reject_aux(r.aux)
         return (r.loss_vec, r.sq_norms,
                 jax.lax.psum(r.loss, data_axes),
@@ -210,7 +216,11 @@ class ShardedPexAPI:
 
 def api_for(mesh: Optional[Mesh] = None,
             data_axes: Sequence[str] = ("data",)):
-    """``core.api`` when mesh is None, else a mesh-bound facade."""
+    """``core.api`` when mesh is None, else a mesh-bound facade.
+
+    Deprecated (v1): ``core.engine.Engine(spec, mesh=...)`` is the one
+    entry point that subsumes this split; kept one release for
+    explicit-acc callers."""
     if mesh is None:
         return api
     return ShardedPexAPI(mesh, data_axes)

@@ -5,9 +5,9 @@ os.environ.setdefault(
 
 _DOC = """Mesh-sharded per-example pipeline self-check.
 
-Runs the tap-instrumented smoke model single-device and again under
-``dist.pex`` on a ≥2-way data-parallel host mesh, and asserts the two
-agree: scalar loss, (B,) per-example losses, (B, G) squared norms,
+Runs the tap-instrumented smoke model through a local ``Engine`` and
+again through a mesh-bound ``Engine`` (the dist.pex shard_map pipeline)
+on a ≥2-way data-parallel host mesh, and asserts the two agree: scalar loss, (B,) per-example losses, (B, G) squared norms,
 summed gradients, and clipped gradients (f32 allclose). This is the
 repo's executable proof that the per-example-norm math composes with
 batch sharding — run it on any box:
@@ -31,7 +31,7 @@ def run(arch: str = "llama3.2-1b", batch: int = 8, seq: int = 8,
     import numpy as np
 
     from repro.configs.common import ShapeSpec
-    from repro.core import api
+    from repro.core.engine import Engine
     from repro.core.taps import PexSpec
     from repro.dist import pex
     from repro.launch.mesh import make_host_mesh
@@ -49,7 +49,7 @@ def run(arch: str = "llama3.2-1b", batch: int = 8, seq: int = 8,
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     spec = PexSpec(enabled=True, method=method)
-    loss_fn = registry.make_loss_fn(aspec, cfg, spec)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     batch_data = registry.make_train_batch(
         aspec, cfg, ShapeSpec("selfcheck", "train", seq, batch))
 
@@ -57,10 +57,13 @@ def run(arch: str = "llama3.2-1b", batch: int = 8, seq: int = 8,
     n_shards = mesh.shape["data"]
     assert n_shards >= 2, f"only {n_shards} data shards; need >= 2"
 
-    ref = jax.jit(lambda p, b: api.value_grads_and_norms(
-        loss_fn, p, b, spec, batch))(params, batch_data)
-    got = jax.jit(lambda p, b: pex.value_grads_and_norms(
-        loss_fn, p, b, spec, batch, mesh=mesh))(params, batch_data)
+    eng_local = Engine(spec)
+    eng_mesh = Engine(spec, mesh=mesh)
+
+    ref = jax.jit(lambda p, b: eng_local.value_grads_and_norms(
+        loss_fn, p, b))(params, batch_data)
+    got = jax.jit(lambda p, b: eng_mesh.value_grads_and_norms(
+        loss_fn, p, b))(params, batch_data)
 
     ok = True
 
@@ -84,18 +87,18 @@ def run(arch: str = "llama3.2-1b", batch: int = 8, seq: int = 8,
         check("grads" + jax.tree_util.keystr(pa), a, b, rtol=1e-4,
               atol=1e-5)
 
-    ref_n = jax.jit(lambda p, b: api.value_and_norms(
-        loss_fn, p, b, spec, batch))(params, batch_data)
-    got_n = jax.jit(lambda p, b: pex.value_and_norms(
-        loss_fn, p, b, spec, batch, mesh=mesh))(params, batch_data)
+    ref_n = jax.jit(lambda p, b: eng_local.value_and_norms(
+        loss_fn, p, b))(params, batch_data)
+    got_n = jax.jit(lambda p, b: eng_mesh.value_and_norms(
+        loss_fn, p, b))(params, batch_data)
     check("norms-only sq_norms", ref_n.sq_norms, got_n.sq_norms, rtol=1e-4)
 
     clip = 0.5 * float(np.sqrt(np.median(
         np.sum(np.asarray(ref.sq_norms), -1))))
-    ref_c = jax.jit(lambda p, b: api.clipped_value_and_grads(
-        loss_fn, p, b, spec, batch, clip))(params, batch_data)
-    got_c = jax.jit(lambda p, b: pex.clipped_value_and_grads(
-        loss_fn, p, b, spec, batch, clip, mesh=mesh))(params, batch_data)
+    ref_c = jax.jit(lambda p, b: eng_local.clipped_step(
+        loss_fn, p, b, clip_norm=clip))(params, batch_data)
+    got_c = jax.jit(lambda p, b: eng_mesh.clipped_step(
+        loss_fn, p, b, clip_norm=clip))(params, batch_data)
     for (pa, a), (_, b) in zip(
             jax.tree_util.tree_leaves_with_path(ref_c.grads),
             jax.tree_util.tree_leaves_with_path(got_c.grads)):

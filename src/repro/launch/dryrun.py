@@ -30,9 +30,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.common import SHAPES, ShapeSpec
-from repro.core import api
+from repro.core.engine import Engine
 from repro.core.taps import PexSpec
-from repro.dist import pex as dpex
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
@@ -210,7 +209,9 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
         t0 = time.time()
         if shape.kind == "train":
             pex = PexSpec(enabled=pex_on, method=pex_method)
-            loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+            loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+            eng = Engine(pex, mesh=mesh if pex_spmd else None,
+                         data_axes=_dp(multi_pod))
             if optimizer == "adafactor":
                 from repro.optim import adafactor as opt_mod
                 opt_cfg = opt_mod.AdafactorConfig()
@@ -223,14 +224,9 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
             n_micro = aspec.train_microbatches if cfg_override is None else 1
 
             def train_step(params, opt_state, batch):
-                if pex_spmd:
-                    r = dpex.value_grads_and_norms(
-                        loss_fn, params, batch, pex, b,
-                        mesh=mesh, data_axes=_dp(multi_pod))
-                    grads, loss, sq = r.grads, r.loss, r.sq_norms
-                elif n_micro == 1:
-                    r = api.value_grads_and_norms(loss_fn, params, batch,
-                                                  pex, b)
+                if pex_spmd or n_micro == 1:
+                    r = eng.value_grads_and_norms(loss_fn, params, batch,
+                                                  batch_size=b)
                     grads, loss, sq = r.grads, r.loss, r.sq_norms
                 else:
                     mb = b // n_micro
@@ -241,8 +237,8 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
                         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
                     def micro(gsum, mbatch):
-                        r = api.value_grads_and_norms(loss_fn, params,
-                                                      mbatch, pex, mb)
+                        r = eng.value_grads_and_norms(loss_fn, params,
+                                                      mbatch, batch_size=mb)
                         gsum = jax.tree_util.tree_map(
                             lambda a, g: a + g.astype(jnp.float32),
                             gsum, r.grads)
@@ -303,11 +299,9 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
         # numbers (verified in-container: sharded == unsharded/256);
         # scale to global so the spec's /(chips × ...) formulas apply.
         n_dev_total = mesh.devices.size
-        ca = compiled.cost_analysis() or {}
-        if isinstance(ca, (list, tuple)):   # jax 0.4.x: list of one dict
-            ca = ca[0] if ca else {}
-        res.flops = float(ca.get("flops", 0.0)) * n_dev_total
-        res.bytes_accessed = float(ca.get("bytes accessed", 0.0)) * n_dev_total
+        flops, bytes_accessed = hlo_parse.compiled_cost(compiled)
+        res.flops = flops * n_dev_total
+        res.bytes_accessed = bytes_accessed * n_dev_total
         ma = compiled.memory_analysis()
         if ma is not None:
             n_dev = mesh.devices.size

@@ -50,7 +50,7 @@ def main():
           f"mode={args.mode}")
 
     pex = PexSpec(enabled=args.mode != "plain", method=args.pex_method)
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     mesh = None
     if args.data_parallel:
         from repro.launch.mesh import make_host_mesh

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.nn import param as pm
 from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
                                 lm_head, per_example_xent)
@@ -74,51 +74,50 @@ def init(key, cfg: Rwkv6Config):
     return params
 
 
-def _block(p, x, acc, cfg: Rwkv6Config, spec: PexSpec, state=None):
-    h, acc = layernorm(p["ln1"], x, acc, spec=spec)
-    y, acc, state = rwkv_tmix(p["tmix"], h, acc, cfg=cfg.rwkv_cfg, spec=spec,
-                              state=state)
+def _block(p, x, tap: Tap, cfg: Rwkv6Config, state=None):
+    h = layernorm(p["ln1"], x, tap=tap)
+    y, state = rwkv_tmix(p["tmix"], h, tap=tap, cfg=cfg.rwkv_cfg,
+                         state=state)
     x = x + y
-    h, acc = layernorm(p["ln2"], x, acc, spec=spec)
-    y, acc, state = rwkv_cmix(p["cmix"], h, acc, cfg=cfg.rwkv_cfg, spec=spec,
-                              state=state)
-    return x + y, acc, state
+    h = layernorm(p["ln2"], x, tap=tap)
+    y, state = rwkv_cmix(p["cmix"], h, tap=tap, cfg=cfg.rwkv_cfg,
+                         state=state)
+    return x + y, state
 
 
-def _run(params, x, acc, cfg: Rwkv6Config, spec: PexSpec, states=None):
-    def body(carry, xs):
-        x, acc = carry
+def _run(params, x, tap: Tap, cfg: Rwkv6Config, states=None):
+    def body(x, xs):
         p_i, st_i = xs
-        x, acc, st_i = _block(p_i, x, acc, cfg, spec, state=st_i)
-        return (x, acc), st_i
+        x, st_i = _block(p_i, x, tap, cfg, state=st_i)
+        return x, st_i
 
-    body_fn = jax.checkpoint(body) if (cfg.remat and states is None) else body
+    remat = cfg.remat and states is None
     if cfg.stack_mode == "scan":
-        (x, acc), states = jax.lax.scan(body_fn, (x, acc),
-                                        (params["blocks"], states))
+        x, states = taps.scan(body, x, (params["blocks"], states),
+                              tap=tap, remat=remat)
     else:
+        body_fn = taps.checkpoint(body, tap=tap) if remat else body
         outs = []
         for i in range(cfg.n_layers):
             p_i = jax.tree_util.tree_map(lambda v: v[i], params["blocks"])
             st_i = None if states is None else \
                 jax.tree_util.tree_map(lambda v: v[i], states)
-            (x, acc), st_i = body_fn((x, acc), (p_i, st_i))
+            x, st_i = body_fn(x, (p_i, st_i))
             outs.append(st_i)
         states = None if outs[0] is None else \
             jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
-    return x, acc, states
+    return x, states
 
 
-def loss_fn(params, acc, batch, *, cfg: Rwkv6Config, spec: PexSpec):
-    x, acc = embed(params["embed"], batch["ids"], acc,
-                   cfg=cfg.vocab_cfg, spec=spec)
-    x, acc = layernorm(params["ln_in"], x, acc, spec=spec)
-    x, acc, _ = _run(params, x, acc, cfg, spec)
-    x, acc = layernorm(params["ln_f"], x, acc, spec=spec)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+def loss_fn(params, batch, tap: Tap, *, cfg: Rwkv6Config):
+    x = embed(params["embed"], batch["ids"], tap=tap, cfg=cfg.vocab_cfg)
+    x = layernorm(params["ln_in"], x, tap=tap)
+    x, _ = _run(params, x, tap, cfg)
+    x = layernorm(params["ln_f"], x, tap=tap)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     loss_vec = per_example_xent(logits, batch["labels"],
                                 batch.get("label_mask"))
-    return loss_vec, acc, {}
+    return loss_vec, {}
 
 
 def init_caches(batch: int, cfg: Rwkv6Config):
@@ -128,13 +127,10 @@ def init_caches(batch: int, cfg: Rwkv6Config):
 
 
 def forward_tokens(params, batch, caches, cache_index, *, cfg: Rwkv6Config):
-    spec = taps.DISABLED
-    b = batch["ids"].shape[0]
-    acc = taps.init_acc(b, spec)
-    x, acc = embed(params["embed"], batch["ids"], acc,
-                   cfg=cfg.vocab_cfg, spec=spec)
-    x, acc = layernorm(params["ln_in"], x, acc, spec=spec)
-    x, acc, caches = _run(params, x, acc, cfg, spec, states=caches)
-    x, acc = layernorm(params["ln_f"], x, acc, spec=spec)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    tap = taps.NULL
+    x = embed(params["embed"], batch["ids"], tap=tap, cfg=cfg.vocab_cfg)
+    x = layernorm(params["ln_in"], x, tap=tap)
+    x, caches = _run(params, x, tap, cfg, states=caches)
+    x = layernorm(params["ln_f"], x, tap=tap)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     return logits, caches

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.nn import param as pm
 from repro.nn.attention import AttnCfg, attention, init_attention, init_kv_cache
 from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
@@ -103,61 +103,54 @@ def init(key, cfg: SeamlessConfig):
     }
 
 
-def _encode(params, frames, acc, cfg: SeamlessConfig, spec: PexSpec):
-    def body(carry, p_i):
-        x, acc = carry
-        h, acc = layernorm(p_i["ln1"], x, acc, spec=spec)
-        a, acc, _ = attention(p_i["attn"], h, acc,
-                              cfg=cfg.attn_cfg(causal=False), spec=spec)
+def _encode(params, frames, tap: Tap, cfg: SeamlessConfig):
+    def body(x, p_i):
+        h = layernorm(p_i["ln1"], x, tap=tap)
+        a, _ = attention(p_i["attn"], h, tap=tap,
+                         cfg=cfg.attn_cfg(causal=False))
         x = x + a
-        h, acc = layernorm(p_i["ln2"], x, acc, spec=spec)
-        m, acc = mlp(p_i["mlp"], h, acc,
-                     cfg=MlpCfg(cfg.d_model, cfg.d_ff, act="gelu",
-                                gated=False), spec=spec)
-        return (x + m, acc), None
+        h = layernorm(p_i["ln2"], x, tap=tap)
+        m = mlp(p_i["mlp"], h, tap=tap,
+                cfg=MlpCfg(cfg.d_model, cfg.d_ff, act="gelu", gated=False))
+        return x + m, None
 
-    body_fn = jax.checkpoint(body) if cfg.remat and spec.enabled else body
-    (x, acc), _ = jax.lax.scan(body_fn, (frames, acc), params["enc"])
-    x, acc = layernorm(params["ln_enc"], x, acc, spec=spec)
-    return x, acc
+    x, _ = taps.scan(body, frames, params["enc"], tap=tap,
+                     remat=cfg.remat and tap.live)
+    return layernorm(params["ln_enc"], x, tap=tap)
 
 
-def _dec_block(p_i, x, memory, acc, cfg: SeamlessConfig, spec: PexSpec,
+def _dec_block(p_i, x, memory, tap: Tap, cfg: SeamlessConfig,
                self_cache=None, cross_cache=None, cache_index=None):
-    h, acc = layernorm(p_i["ln1"], x, acc, spec=spec)
-    a, acc, self_cache = attention(p_i["self"], h, acc, cfg=cfg.attn_cfg(),
-                                   spec=spec, cache=self_cache,
-                                   cache_index=cache_index)
+    h = layernorm(p_i["ln1"], x, tap=tap)
+    a, self_cache = attention(p_i["self"], h, tap=tap, cfg=cfg.attn_cfg(),
+                              cache=self_cache, cache_index=cache_index)
     x = x + a
-    h, acc = layernorm(p_i["ln_x"], x, acc, spec=spec)
-    a, acc, _ = attention(p_i["cross"], h, acc, cfg=cfg.attn_cfg(cross=True),
-                          spec=spec, memory=memory, cache=cross_cache)
+    h = layernorm(p_i["ln_x"], x, tap=tap)
+    a, _ = attention(p_i["cross"], h, tap=tap, cfg=cfg.attn_cfg(cross=True),
+                     memory=memory, cache=cross_cache)
     x = x + a
-    h, acc = layernorm(p_i["ln2"], x, acc, spec=spec)
-    m, acc = mlp(p_i["mlp"], h, acc, cfg=MlpCfg(cfg.d_model, cfg.d_ff,
-                                                act="gelu", gated=False),
-                 spec=spec)
-    return x + m, acc, self_cache
+    h = layernorm(p_i["ln2"], x, tap=tap)
+    m = mlp(p_i["mlp"], h, tap=tap, cfg=MlpCfg(cfg.d_model, cfg.d_ff,
+                                               act="gelu", gated=False))
+    return x + m, self_cache
 
 
-def loss_fn(params, acc, batch, *, cfg: SeamlessConfig, spec: PexSpec):
+def loss_fn(params, batch, tap: Tap, *, cfg: SeamlessConfig):
     """batch: src_frames (B,S_src,d), ids/labels (B,S_tgt)."""
-    memory, acc = _encode(params, batch["src_frames"], acc, cfg, spec)
-    x, acc = embed(params["embed"], batch["ids"], acc,
-                   cfg=cfg.vocab_cfg, spec=spec)
+    memory = _encode(params, batch["src_frames"], tap, cfg)
+    x = embed(params["embed"], batch["ids"], tap=tap, cfg=cfg.vocab_cfg)
 
-    def body(carry, p_i):
-        x, acc = carry
-        x, acc, _ = _dec_block(p_i, x, memory, acc, cfg, spec)
-        return (x, acc), None
+    def body(x, p_i):
+        x, _ = _dec_block(p_i, x, memory, tap, cfg)
+        return x, None
 
-    body_fn = jax.checkpoint(body) if cfg.remat and spec.enabled else body
-    (x, acc), _ = jax.lax.scan(body_fn, (x, acc), params["dec"])
-    x, acc = layernorm(params["ln_dec"], x, acc, spec=spec)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    x, _ = taps.scan(body, x, params["dec"], tap=tap,
+                     remat=cfg.remat and tap.live)
+    x = layernorm(params["ln_dec"], x, tap=tap)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     loss_vec = per_example_xent(logits, batch["labels"],
                                 batch.get("label_mask"))
-    return loss_vec, acc, {}
+    return loss_vec, {}
 
 
 def init_caches(batch: int, cfg: SeamlessConfig):
@@ -173,12 +166,10 @@ def init_caches(batch: int, cfg: SeamlessConfig):
 
 def precompute_cross(params, memory, *, cfg: SeamlessConfig):
     """Project encoder memory through every decoder layer's cross K/V."""
-    spec = taps.DISABLED
-    acc = taps.init_acc(memory.shape[0], spec)
 
     def per_layer(p_i):
-        k, _ = linear(p_i["cross"]["wk"], memory, acc, spec=spec)
-        v, _ = linear(p_i["cross"]["wv"], memory, acc, spec=spec)
+        k = linear(p_i["cross"]["wk"], memory, tap=taps.NULL)
+        v = linear(p_i["cross"]["wv"], memory, tap=taps.NULL)
         hkv = cfg.kv_heads
         hd = cfg.d_model // cfg.n_heads
         return {"k": k.reshape(k.shape[0], k.shape[1], hkv, hd),
@@ -191,28 +182,24 @@ def precompute_cross(params, memory, *, cfg: SeamlessConfig):
 def forward_tokens(params, batch, caches, cache_index, *, cfg: SeamlessConfig):
     """Decode step(s): batch["ids"] (B,s). Encoder memory and cross K/V
     come precomputed in `caches` (set up at prefill)."""
-    spec = taps.DISABLED
-    b = batch["ids"].shape[0]
-    acc = taps.init_acc(b, spec)
+    tap = taps.NULL
 
     if "src_frames" in batch:  # prefill: encode + fill cross caches
-        memory, _ = _encode(params, batch["src_frames"], acc, cfg, spec)
+        memory = _encode(params, batch["src_frames"], tap, cfg)
         caches = {**caches, "memory": memory,
                   "cross": precompute_cross(params, memory, cfg=cfg)}
 
-    x, acc = embed(params["embed"], batch["ids"], acc,
-                   cfg=cfg.vocab_cfg, spec=spec)
+    x = embed(params["embed"], batch["ids"], tap=tap, cfg=cfg.vocab_cfg)
 
-    def body(carry, xs):
-        x, acc = carry
+    def body(x, xs):
         p_i, sc_i, cc_i = xs
-        x, acc, sc_i = _dec_block(p_i, x, caches["memory"], acc, cfg, spec,
-                                  self_cache=sc_i, cross_cache=cc_i,
-                                  cache_index=cache_index)
-        return (x, acc), sc_i
+        x, sc_i = _dec_block(p_i, x, caches["memory"], tap, cfg,
+                             self_cache=sc_i, cross_cache=cc_i,
+                             cache_index=cache_index)
+        return x, sc_i
 
-    (x, acc), new_self = jax.lax.scan(
-        body, (x, acc), (params["dec"], caches["self"], caches["cross"]))
-    x, acc = layernorm(params["ln_dec"], x, acc, spec=spec)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec"], caches["self"], caches["cross"]))
+    x = layernorm(params["ln_dec"], x, tap=tap)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     return logits, {**caches, "self": new_self}

@@ -4,10 +4,12 @@ deepseek-v2-236b (MLA + MoE), phi3.5-moe.
 
 Layers with identical parameter shapes are stacked and run under
 ``lax.scan`` (small HLO, fast pod-scale compiles); heterogeneous
-prefixes (deepseek's first dense layer) are unstacked. The per-example
-accumulator rides in the scan carry; each block is ``jax.checkpoint``ed
-for training. ``stack_mode='unroll'`` unrolls for the roofline cost
-probes (cost_analysis counts scan bodies once — see roofline/analysis).
+prefixes (deepseek's first dense layer) are unstacked. Instrumentation
+is a single ``Tap`` collector handed to ``loss_fn`` (pex v2): the
+accumulator crosses the scan/remat boundaries via ``taps.scan`` /
+``taps.checkpoint``. ``stack_mode='unroll'`` unrolls for the roofline
+cost probes (cost_analysis counts scan bodies once — see
+roofline/analysis).
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import shard
 from repro.nn import param as pm
 from repro.nn.attention import AttnCfg, attention, init_attention, init_kv_cache
@@ -121,38 +123,38 @@ def init(key, cfg: LMConfig):
 # forward
 # --------------------------------------------------------------------------
 
-def _block(p, x, acc, cfg: LMConfig, spec: PexSpec, *, positions,
+def _block(p, x, tap: Tap, cfg: LMConfig, *, positions,
            cache=None, cache_index=None, local_flag=None, dense_mlp=False):
-    h, acc = rmsnorm(p["ln_attn"], x, acc, spec=spec, eps=cfg.rms_eps,
-                     plus_one=cfg.rms_plus_one)
+    h = rmsnorm(p["ln_attn"], x, tap=tap, eps=cfg.rms_eps,
+                plus_one=cfg.rms_plus_one)
     if cfg.mla is not None:
-        a, acc, cache = mla_attention(p["attn"], h, acc, cfg=cfg.mla,
-                                      spec=spec, positions=positions,
-                                      cache=cache, cache_index=cache_index)
+        a, cache = mla_attention(p["attn"], h, tap=tap, cfg=cfg.mla,
+                                 positions=positions,
+                                 cache=cache, cache_index=cache_index)
     else:
-        a, acc, cache = attention(p["attn"], h, acc, cfg=cfg.attn, spec=spec,
-                                  positions=positions, cache=cache,
-                                  cache_index=cache_index,
-                                  local_flag=local_flag)
+        a, cache = attention(p["attn"], h, tap=tap, cfg=cfg.attn,
+                             positions=positions, cache=cache,
+                             cache_index=cache_index,
+                             local_flag=local_flag)
     if cfg.post_norms:
-        a, acc = rmsnorm(p["ln_attn_post"], a, acc, spec=spec,
-                         eps=cfg.rms_eps, plus_one=cfg.rms_plus_one)
+        a = rmsnorm(p["ln_attn_post"], a, tap=tap,
+                    eps=cfg.rms_eps, plus_one=cfg.rms_plus_one)
     x = x + a
-    h, acc = rmsnorm(p["ln_mlp"], x, acc, spec=spec, eps=cfg.rms_eps,
-                     plus_one=cfg.rms_plus_one)
+    h = rmsnorm(p["ln_mlp"], x, tap=tap, eps=cfg.rms_eps,
+                plus_one=cfg.rms_plus_one)
     if "moe" in p and not dense_mlp:
-        m, acc = moe(p["moe"], h, acc, cfg=cfg.moe, spec=spec)
+        m = moe(p["moe"], h, tap=tap, cfg=cfg.moe)
     else:
         mcfg = cfg.dense_prefix_mlp if dense_mlp and cfg.dense_prefix_mlp \
             else cfg.mlp
-        m, acc = mlp(p["mlp"], h, acc, cfg=mcfg, spec=spec)
+        m = mlp(p["mlp"], h, tap=tap, cfg=mcfg)
     if cfg.post_norms:
-        m, acc = rmsnorm(p["ln_mlp_post"], m, acc, spec=spec,
-                         eps=cfg.rms_eps, plus_one=cfg.rms_plus_one)
-    return x + m, acc, cache
+        m = rmsnorm(p["ln_mlp_post"], m, tap=tap,
+                    eps=cfg.rms_eps, plus_one=cfg.rms_plus_one)
+    return x + m, cache
 
 
-def _run_stack(params, x, acc, cfg: LMConfig, spec: PexSpec, *, positions,
+def _run_stack(params, x, tap: Tap, cfg: LMConfig, *, positions,
                caches=None, cache_index=None):
     """Apply prefix blocks then the scanned/unrolled homogeneous stack.
     caches: None (train) or dict {"prefix": [..], "blocks": stacked-pytree}."""
@@ -161,42 +163,41 @@ def _run_stack(params, x, acc, cfg: LMConfig, spec: PexSpec, *, positions,
 
     for i in range(n_pre):
         c = caches["prefix"][i] if caches is not None else None
-        x, acc, c = _block(params["prefix"][i], x, acc, cfg, spec,
-                           positions=positions, cache=c,
-                           cache_index=cache_index, dense_mlp=True)
+        x, c = _block(params["prefix"][i], x, tap, cfg,
+                      positions=positions, cache=c,
+                      cache_index=cache_index, dense_mlp=True)
         if caches is not None:
             new_caches["prefix"].append(c)
 
     n_stack = cfg.n_layers - n_pre
 
-    def body(carry, xs):
-        x, acc = carry
+    def body(x, xs):
         p_i, cache_i, idx = xs
         lf = (idx % 2 == 0) if cfg.alt_local_global else None
-        x, acc, cache_i = _block(p_i, x, acc, cfg, spec, positions=positions,
-                                 cache=cache_i, cache_index=cache_index,
-                                 local_flag=lf)
-        return (x, acc), cache_i
+        x, cache_i = _block(p_i, x, tap, cfg, positions=positions,
+                            cache=cache_i, cache_index=cache_index,
+                            local_flag=lf)
+        return x, cache_i
 
-    if cfg.remat and caches is None:
-        policy = None if cfg.remat_policy == "full" else \
-            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
-        body_fn = jax.checkpoint(body, policy=policy)
-    else:
-        body_fn = body
+    remat = cfg.remat and caches is None
+    policy = None if cfg.remat_policy == "full" else \
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
     idxs = jnp.arange(n_stack)
     blk_caches = caches["blocks"] if caches is not None else None
 
     if cfg.stack_mode == "scan":
-        (x, acc), out_caches = jax.lax.scan(
-            body_fn, (x, acc), (params["blocks"], blk_caches, idxs))
+        x, out_caches = taps.scan(
+            body, x, (params["blocks"], blk_caches, idxs), tap=tap,
+            remat=remat, policy=policy)
     else:
+        body_fn = taps.checkpoint(body, tap=tap, policy=policy) \
+            if remat else body
         out_list = []
         for i in range(n_stack):
             p_i = jax.tree_util.tree_map(lambda v: v[i], params["blocks"])
             c_i = None if blk_caches is None else \
                 jax.tree_util.tree_map(lambda v: v[i], blk_caches)
-            (x, acc), c_i = body_fn((x, acc), (p_i, c_i, idxs[i]))
+            x, c_i = body_fn(x, (p_i, c_i, idxs[i]))
             out_list.append(c_i)
         out_caches = None
         if caches is not None:
@@ -204,16 +205,15 @@ def _run_stack(params, x, acc, cfg: LMConfig, spec: PexSpec, *, positions,
                 lambda *xs: jnp.stack(xs), *out_list)
     if caches is not None:
         new_caches["blocks"] = out_caches
-    return x, acc, new_caches
+    return x, new_caches
 
 
-def _inputs_to_embeds(params, batch, acc, cfg: LMConfig, spec: PexSpec):
-    x, acc = embed(params["embed"], batch["ids"], acc,
-                   cfg=cfg.vocab_cfg, spec=spec)
+def _inputs_to_embeds(params, batch, tap: Tap, cfg: LMConfig):
+    x = embed(params["embed"], batch["ids"], tap=tap, cfg=cfg.vocab_cfg)
     if cfg.vl_inputs and "vis_embeds" in batch:
         # merged multimodal stream: frontend (stub) supplies patch embeds
         x = jnp.where(batch["vis_mask"][..., None], batch["vis_embeds"], x)
-    return x, acc
+    return x
 
 
 def _positions(batch, cfg: LMConfig, s: int):
@@ -227,19 +227,19 @@ def _positions(batch, cfg: LMConfig, s: int):
 # public entry points
 # --------------------------------------------------------------------------
 
-def loss_fn(params, acc, batch, *, cfg: LMConfig, spec: PexSpec):
-    """Canonical instrumented loss: (loss_vec, acc, aux)."""
+def loss_fn(params, batch, tap: Tap, *, cfg: LMConfig):
+    """Canonical v2 instrumented loss: (loss_vec, aux)."""
     ids = batch["ids"]
     b, s = ids.shape
-    x, acc = _inputs_to_embeds(params, batch, acc, cfg, spec)
-    x, acc, _ = _run_stack(params, x, acc, cfg, spec,
-                           positions=_positions(batch, cfg, s))
-    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps,
-                     plus_one=cfg.rms_plus_one)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    x = _inputs_to_embeds(params, batch, tap, cfg)
+    x, _ = _run_stack(params, x, tap, cfg,
+                      positions=_positions(batch, cfg, s))
+    x = rmsnorm(params["ln_f"], x, tap=tap, eps=cfg.rms_eps,
+                plus_one=cfg.rms_plus_one)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     loss_vec = per_example_xent(logits, batch["labels"],
                                 batch.get("label_mask"))
-    return loss_vec, acc, {}
+    return loss_vec, {}
 
 
 def init_caches(batch: int, cfg: LMConfig):
@@ -260,17 +260,16 @@ def init_caches(batch: int, cfg: LMConfig):
 def forward_tokens(params, batch, caches, cache_index, *, cfg: LMConfig):
     """Prefill or decode: embeds tokens, runs the stack with caches,
     returns (logits, new_caches). Uninstrumented (serving)."""
-    spec = taps.DISABLED
+    tap = taps.NULL
     ids = batch["ids"]
     b, s = ids.shape
-    acc = taps.init_acc(b, spec)
-    x, acc = _inputs_to_embeds(params, batch, acc, cfg, spec)
+    x = _inputs_to_embeds(params, batch, tap, cfg)
     pos = _positions(batch, cfg, s)
     if pos is None and cache_index is not None:
         pos = (cache_index + jnp.arange(s))[None]
-    x, acc, caches = _run_stack(params, x, acc, cfg, spec, positions=pos,
-                                caches=caches, cache_index=cache_index)
-    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps,
-                     plus_one=cfg.rms_plus_one)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    x, caches = _run_stack(params, x, tap, cfg, positions=pos,
+                           caches=caches, cache_index=cache_index)
+    x = rmsnorm(params["ln_f"], x, tap=tap, eps=cfg.rms_eps,
+                plus_one=cfg.rms_plus_one)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     return logits, caches

@@ -8,7 +8,7 @@ block's params are closed over (true weight sharing).
 Pex scope: mamba blocks are fully tapped. The shared block's params are
 reused 13× per forward — the rank-structure the paper's trick exploits
 does not factor across re-uses (cross-use Gram terms), so the shared
-block is *excluded* from the accumulator (spec→DISABLED inside) and
+block is *excluded* from the accumulator (inert tap inside) and
 from the per-example norm scope. Recorded in DESIGN.md §5.
 """
 from __future__ import annotations
@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.nn import param as pm
 from repro.nn.attention import AttnCfg, attention, init_attention, init_kv_cache
 from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
@@ -114,48 +114,40 @@ def init(key, cfg: Zamba2Config):
     return params
 
 
-def _mamba_block(p, x, acc, cfg: Zamba2Config, spec: PexSpec, state=None):
-    h, acc = rmsnorm(p["ln"], x, acc, spec=spec, eps=cfg.rms_eps)
-    y, acc, state = ssm(p["ssm"], h, acc, cfg=cfg.ssm, spec=spec, state=state)
-    return x + y, acc, state
+def _mamba_block(p, x, tap: Tap, cfg: Zamba2Config, state=None):
+    h = rmsnorm(p["ln"], x, tap=tap, eps=cfg.rms_eps)
+    y, state = ssm(p["ssm"], h, tap=tap, cfg=cfg.ssm, state=state)
+    return x + y, state
 
 
 def _shared_block(p, x, x0, cfg: Zamba2Config, *, cache=None,
                   cache_index=None):
-    """Shared attention+MLP on concat(h, h0); pex-excluded (DISABLED)."""
-    spec = taps.DISABLED
-    acc = taps.init_acc(x.shape[0], spec)
+    """Shared attention+MLP on concat(h, h0); pex-excluded (inert tap:
+    weight reuse breaks the per-use rank factorization, DESIGN.md §5)."""
+    tap = taps.NULL
     cat = jnp.concatenate([x, x0], axis=-1)
-    h, acc = rmsnorm(p["ln"], cat, acc, spec=spec, eps=cfg.rms_eps)
-    a, acc, cache = attention(p["attn"], h, acc, cfg=cfg.attn_cfg, spec=spec,
-                              cache=cache, cache_index=cache_index)
+    h = rmsnorm(p["ln"], cat, tap=tap, eps=cfg.rms_eps)
+    a, cache = attention(p["attn"], h, tap=tap, cfg=cfg.attn_cfg,
+                         cache=cache, cache_index=cache_index)
     x = x + a
-    h, acc = rmsnorm(p["ln_mlp"], x, acc, spec=spec, eps=cfg.rms_eps)
-    m, acc = mlp(p["mlp"], h, acc, cfg=MlpCfg(cfg.d_model, cfg.d_ff),
-                 spec=spec)
+    h = rmsnorm(p["ln_mlp"], x, tap=tap, eps=cfg.rms_eps)
+    m = mlp(p["mlp"], h, tap=tap, cfg=MlpCfg(cfg.d_model, cfg.d_ff))
     return x + m, cache
 
 
-def _run(params, x, acc, cfg: Zamba2Config, spec: PexSpec, *,
+def _run(params, x, tap: Tap, cfg: Zamba2Config, *,
          states=None, shared_caches=None, cache_index=None):
     """states: {"blocks": stacked (G,K,...) ssm states, "tail": (T,...)} or
     None (training — fresh zero states are implicit in nn.ssm)."""
     x0 = x
     new_shared = [] if shared_caches is not None else None
 
-    def inner(carry, xs):
-        x, acc = carry
+    def inner(x, xs):
         p_i, st_i = xs
-        x, acc, st_i = _mamba_block(p_i, x, acc, cfg, spec, state=st_i)
-        return (x, acc), st_i
+        x, st_i = _mamba_block(p_i, x, tap, cfg, state=st_i)
+        return x, st_i
 
-    inner_fn = jax.checkpoint(inner) if (cfg.remat and states is None) else inner
-
-    def group(carry, xs):
-        x, acc = carry
-        p_g, st_g = xs
-        (x, acc), st_g = jax.lax.scan(inner_fn, (x, acc), (p_g, st_g))
-        return (x, acc), st_g
+    remat = cfg.remat and states is None
 
     new_states = {"blocks": None, "tail": None}
     if cfg.stack_mode == "scan" and shared_caches is None and states is None:
@@ -163,18 +155,18 @@ def _run(params, x, acc, cfg: Zamba2Config, spec: PexSpec, *,
         # each group's 6 mamba blocks scanned
         for g in range(cfg.n_groups):
             p_g = jax.tree_util.tree_map(lambda v: v[g], params["blocks"])
-            (x, acc), _ = jax.lax.scan(inner_fn, (x, acc), (p_g, None))
+            x, _ = taps.scan(inner, x, (p_g, None), tap=tap, remat=remat)
             x, _ = _shared_block(params["shared"], x, x0, cfg)
         if cfg.n_tail:
-            (x, acc), _ = jax.lax.scan(inner_fn, (x, acc),
-                                       (params["tail"], None))
+            x, _ = taps.scan(inner, x, (params["tail"], None), tap=tap,
+                             remat=remat)
     else:
         # serving (or unroll): python loop, explicit states/caches
         for g in range(cfg.n_groups):
             p_g = jax.tree_util.tree_map(lambda v: v[g], params["blocks"])
             st_g = None if states is None else \
                 jax.tree_util.tree_map(lambda v: v[g], states["blocks"])
-            (x, acc), st_g = jax.lax.scan(inner_fn, (x, acc), (p_g, st_g))
+            x, st_g = taps.scan(inner, x, (p_g, st_g), tap=tap, remat=remat)
             if states is not None:
                 new_states.setdefault("blocks_list", []).append(st_g)
             c = None if shared_caches is None else \
@@ -185,8 +177,8 @@ def _run(params, x, acc, cfg: Zamba2Config, spec: PexSpec, *,
                 new_shared.append(c)
         if cfg.n_tail:
             st_t = None if states is None else states["tail"]
-            (x, acc), st_t = jax.lax.scan(inner_fn, (x, acc),
-                                          (params["tail"], st_t))
+            x, st_t = taps.scan(inner, x, (params["tail"], st_t), tap=tap,
+                                remat=remat)
             new_states["tail"] = st_t
     if states is not None:
         new_states["blocks"] = jax.tree_util.tree_map(
@@ -194,18 +186,17 @@ def _run(params, x, acc, cfg: Zamba2Config, spec: PexSpec, *,
     if shared_caches is not None:
         new_shared = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                             *new_shared)
-    return x, acc, new_states if states is not None else None, new_shared
+    return x, new_states if states is not None else None, new_shared
 
 
-def loss_fn(params, acc, batch, *, cfg: Zamba2Config, spec: PexSpec):
-    x, acc = embed(params["embed"], batch["ids"], acc,
-                   cfg=cfg.vocab_cfg, spec=spec)
-    x, acc, _, _ = _run(params, x, acc, cfg, spec)
-    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+def loss_fn(params, batch, tap: Tap, *, cfg: Zamba2Config):
+    x = embed(params["embed"], batch["ids"], tap=tap, cfg=cfg.vocab_cfg)
+    x, _, _ = _run(params, x, tap, cfg)
+    x = rmsnorm(params["ln_f"], x, tap=tap, eps=cfg.rms_eps)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     loss_vec = per_example_xent(logits, batch["labels"],
                                 batch.get("label_mask"))
-    return loss_vec, acc, {}
+    return loss_vec, {}
 
 
 def init_caches(batch: int, cfg: Zamba2Config):
@@ -226,15 +217,12 @@ def init_caches(batch: int, cfg: Zamba2Config):
 
 
 def forward_tokens(params, batch, caches, cache_index, *, cfg: Zamba2Config):
-    spec = taps.DISABLED
-    b = batch["ids"].shape[0]
-    acc = taps.init_acc(b, spec)
-    x, acc = embed(params["embed"], batch["ids"], acc,
-                   cfg=cfg.vocab_cfg, spec=spec)
-    x, acc, states, shared = _run(params, x, acc, cfg, spec,
-                                  states=caches["states"],
-                                  shared_caches=caches["shared"],
-                                  cache_index=cache_index)
-    x, acc = rmsnorm(params["ln_f"], x, acc, spec=spec, eps=cfg.rms_eps)
-    logits, acc = lm_head(params["head"], x, acc, cfg=cfg.vocab_cfg, spec=spec)
+    tap = taps.NULL
+    x = embed(params["embed"], batch["ids"], tap=tap, cfg=cfg.vocab_cfg)
+    x, states, shared = _run(params, x, tap, cfg,
+                             states=caches["states"],
+                             shared_caches=caches["shared"],
+                             cache_index=cache_index)
+    x = rmsnorm(params["ln_f"], x, tap=tap, eps=cfg.rms_eps)
+    logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     return logits, {"states": states, "shared": shared}

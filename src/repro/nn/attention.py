@@ -16,8 +16,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import pad_to, shard
 from repro.nn import param as pm
 from repro.nn.linear import init_linear, linear
@@ -123,7 +122,7 @@ def _attend(q, k, v, cfg: AttnCfg, q_offset, kv_len: Optional[jax.Array],
     return out.reshape(b, s, hp * d)
 
 
-def attention(p, x, acc, *, cfg: AttnCfg, spec: PexSpec,
+def attention(p, x, *, tap: Tap, cfg: AttnCfg,
               positions: Optional[jax.Array] = None,
               memory: Optional[jax.Array] = None,
               cache=None, cache_index=None,
@@ -134,13 +133,13 @@ def attention(p, x, acc, *, cfg: AttnCfg, spec: PexSpec,
     positions: (S,) / (B,S) int, or (3,B,S) for M-RoPE.
     memory:    encoder output for cross-attention (cfg.cross).
     cache:     KV cache dict for decode; cache_index: write offset.
-    Returns (y, acc, new_cache).
+    Returns (y, new_cache).
     """
     b, s, _ = x.shape
-    q, acc = linear(p["wq"], x, acc, spec=spec, group=group)
+    q = linear(p["wq"], x, tap=tap, group=group)
     kv_src = memory if cfg.cross else x
-    k, acc = linear(p["wk"], kv_src, acc, spec=spec, group=group)
-    v, acc = linear(p["wv"], kv_src, acc, spec=spec, group=group)
+    k = linear(p["wk"], kv_src, tap=tap, group=group)
+    v = linear(p["wv"], kv_src, tap=tap, group=group)
     q = _split_heads(q, cfg.n_heads_p, cfg.head_dim)
     k = _split_heads(k, cfg.n_kv, cfg.head_dim)
     v = _split_heads(v, cfg.n_kv, cfg.head_dim)
@@ -191,6 +190,6 @@ def attention(p, x, acc, *, cfg: AttnCfg, spec: PexSpec,
         y = jnp.moveaxis(yf, 1, 2).reshape(q.shape[0], q.shape[1], -1)
     else:
         y = _attend(q, k, v, cfg, q_offset, kv_len, local_flag)
-    y, acc = linear(p["wo"], y, acc, spec=spec, group=group)
+    y = linear(p["wo"], y, tap=tap, group=group)
     y = shard(y, "batch", None, "embed_act")
-    return y, acc, cache
+    return y, cache

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import pad_to, shard
 from repro.nn import param as pm
 
@@ -41,11 +41,12 @@ def init_embedding(key, cfg: VocabCfg, *, dtype):
     return {"table": table}
 
 
-def embed(p, ids, acc, *, cfg: VocabCfg, spec: PexSpec, group: str = "embed"):
-    x, acc = taps.embedding(p["table"], ids, acc, spec=spec, group=group)
+def embed(p, ids, *, tap: Tap, cfg: VocabCfg,
+          group: str = "embed") -> jax.Array:
+    x = tap.embedding(p["table"], ids, group=group)
     if cfg.scale_by_sqrt_dim:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    return shard(x, "batch", None, "embed_act"), acc
+    return shard(x, "batch", None, "embed_act")
 
 
 def init_lm_head(key, cfg: VocabCfg, *, dtype):
@@ -54,16 +55,17 @@ def init_lm_head(key, cfg: VocabCfg, *, dtype):
     return {"w": w}
 
 
-def lm_head(p, x, acc, *, cfg: VocabCfg, spec: PexSpec, group: str = "head"):
-    sp = spec if spec.tap_head else taps.DISABLED
-    logits, acc = taps.dense(x, p["w"], acc, spec=sp, group=group,
-                             method="direct" if sp.enabled else None)
+def lm_head(p, x, *, tap: Tap, cfg: VocabCfg,
+            group: str = "head") -> jax.Array:
+    t = tap if tap.spec.tap_head else taps.NULL
+    logits = t.dense(x, p["w"], group=group,
+                     method="direct" if t.live else None)
     if cfg.logit_softcap is not None:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
     if cfg.vocab_p != cfg.vocab:
         mask = jnp.arange(cfg.vocab_p) < cfg.vocab
         logits = jnp.where(mask, logits, NEG_INF)
-    return shard(logits, "batch", None, "vocab_act"), acc
+    return shard(logits, "batch", None, "vocab_act")
 
 
 def per_example_xent(logits: jax.Array, labels: jax.Array,

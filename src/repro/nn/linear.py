@@ -2,13 +2,11 @@
 paper's tap so per-example norms are first-class everywhere."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.nn import param as pm
 
 
@@ -21,9 +19,10 @@ def init_linear(key, d_in: int, d_out: int, *, dtype, axes, bias: bool = False,
     return p
 
 
-def linear(p, x, acc, *, spec: PexSpec, group: str = "all",
-           method: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
-    z, acc = taps.dense(x, p["w"], acc, spec=spec, group=group, method=method)
+def linear(p, x, *, tap: Tap, group: str = "all",
+           method: Optional[str] = None) -> jax.Array:
+    """Instrumented affine map. Plain matmul when the tap is inert."""
+    z = tap.dense(x, p["w"], group=group, method=method)
     if "b" in p:
-        z, acc = taps.bias_add(z, p["b"], acc, spec=spec, group=group)
-    return z, acc
+        z = tap.bias_add(z, p["b"], group=group)
+    return z

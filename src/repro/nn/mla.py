@@ -17,7 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import shard
 from repro.nn.attention import NEG_INF
 from repro.nn.linear import init_linear, linear
@@ -68,30 +68,30 @@ def init_mla_cache(batch: int, max_len: int, cfg: MlaCfg, *, dtype):
             "krope": jnp.zeros((batch, max_len, cfg.qk_rope), dtype)}
 
 
-def _project_q(p, x, acc, cfg, spec, group):
+def _project_q(p, x, tap, cfg, group):
     b, s, _ = x.shape
-    q, acc = linear(p["q_down"], x, acc, spec=spec, group=group)
-    q, acc = rmsnorm(p["q_norm"], q, acc, spec=spec)
-    q, acc = linear(p["q_up"], q, acc, spec=spec, group=group)
+    q = linear(p["q_down"], x, tap=tap, group=group)
+    q = rmsnorm(p["q_norm"], q, tap=tap)
+    q = linear(p["q_up"], q, tap=tap, group=group)
     q = q.reshape(b, s, cfg.n_heads, cfg.qk_nope + cfg.qk_rope)
-    return q[..., :cfg.qk_nope], q[..., cfg.qk_nope:], acc
+    return q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
 
 
-def _latent_kv(p, x, acc, cfg, spec, group):
-    ckv, acc = linear(p["kv_down"], x, acc, spec=spec, group=group)
+def _latent_kv(p, x, tap, cfg, group):
+    ckv = linear(p["kv_down"], x, tap=tap, group=group)
     c, krope = ckv[..., :cfg.kv_lora], ckv[..., cfg.kv_lora:]
-    c, acc = rmsnorm(p["kv_norm"], c, acc, spec=spec)
-    return c, krope, acc
+    c = rmsnorm(p["kv_norm"], c, tap=tap)
+    return c, krope
 
 
-def mla_attention(p, x, acc, *, cfg: MlaCfg, spec: PexSpec,
+def mla_attention(p, x, *, tap: Tap, cfg: MlaCfg,
                   positions: Optional[jax.Array] = None,
                   cache=None, cache_index=None, group: str = "attn"):
-    """Returns (y, acc, new_cache). cache=None → full-seq (train/prefill);
+    """Returns (y, new_cache). cache=None → full-seq (train/prefill);
     cache given → decode with the absorbed latent form."""
     b, s, _ = x.shape
-    q_nope, q_rope, acc = _project_q(p, x, acc, cfg, spec, group)
-    c, krope, acc = _latent_kv(p, x, acc, cfg, spec, group)
+    q_nope, q_rope = _project_q(p, x, tap, cfg, group)
+    c, krope = _latent_kv(p, x, tap, cfg, group)
 
     if positions is None:
         start = 0 if cache_index is None else cache_index
@@ -129,7 +129,7 @@ def mla_attention(p, x, acc, *, cfg: MlaCfg, spec: PexSpec,
         o = jnp.einsum("bshl,lhd->bshd", o_lat, wv)
     else:
         # expanded form for train/prefill
-        kv, acc = linear(p["kv_up"], c, acc, spec=spec, group=group)
+        kv = linear(p["kv_up"], c, tap=tap, group=group)
         kv = kv.reshape(b, s, cfg.n_heads, cfg.qk_nope + cfg.v_dim)
         k_nope, v = kv[..., :cfg.qk_nope], kv[..., cfg.qk_nope:]
         k = jnp.concatenate(
@@ -146,5 +146,5 @@ def mla_attention(p, x, acc, *, cfg: MlaCfg, spec: PexSpec,
         attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         o = jnp.einsum("bhst,bthd->bshd", attn, v)
 
-    y, acc = linear(p["wo"], o.reshape(b, s, -1), acc, spec=spec, group=group)
-    return shard(y, "batch", None, "embed_act"), acc, cache
+    y = linear(p["wo"], o.reshape(b, s, -1), tap=tap, group=group)
+    return shard(y, "batch", None, "embed_act"), cache

@@ -7,7 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import shard
 from repro.nn.linear import init_linear, linear
 
@@ -42,14 +42,13 @@ def init_mlp(key, cfg: MlpCfg, *, dtype):
     return p
 
 
-def mlp(p, x, acc, *, cfg: MlpCfg, spec: PexSpec, group: str = "mlp"):
-    up, acc = linear(p["up"], x, acc, spec=spec, group=group)
+def mlp(p, x, *, tap: Tap, cfg: MlpCfg, group: str = "mlp"):
+    up = linear(p["up"], x, tap=tap, group=group)
     if cfg.gated:
-        g, acc = linear(p["gate"], x, acc, spec=spec, group=group)
+        g = linear(p["gate"], x, tap=tap, group=group)
         h = _act(cfg.act)(g) * up
     else:
         h = _act(cfg.act)(up)
     h = shard(h, "batch", None, "mlp_act")
-    y, acc = linear(p["down"], h, acc, spec=spec, group=group)
-    y = shard(y, "batch", None, "embed_act")
-    return y, acc
+    y = linear(p["down"], h, tap=tap, group=group)
+    return shard(y, "batch", None, "embed_act")

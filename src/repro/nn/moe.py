@@ -19,8 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import shard
 from repro.nn import param as pm
 from repro.nn.linear import init_linear, linear
@@ -81,7 +80,7 @@ def _route(cfg: MoeCfg, logits: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return gates * cfg.routed_scale, idx
 
 
-def moe(p, x, acc, *, cfg: MoeCfg, spec: PexSpec, group: str = "moe",
+def moe(p, x, *, tap: Tap, cfg: MoeCfg, group: str = "moe",
         example_ids: Optional[jax.Array] = None):
     """x: (B, S, d). example_ids: (B,) int (defaults to arange(B))."""
     b, s, d = x.shape
@@ -93,8 +92,7 @@ def moe(p, x, acc, *, cfg: MoeCfg, spec: PexSpec, group: str = "moe",
     cap = cfg.capacity(tg)
 
     # router tap sees (B, S, ·) so its per-example stats stay exact
-    logits, acc = linear(p["router"], x.astype(jnp.float32), acc,
-                         spec=spec, group=group)
+    logits = linear(p["router"], x.astype(jnp.float32), tap=tap, group=group)
     gates, eidx = _route(cfg, logits.reshape(t, -1))        # (T,K)
 
     if example_ids is None:
@@ -147,13 +145,10 @@ def moe(p, x, acc, *, cfg: MoeCfg, spec: PexSpec, group: str = "moe",
     buf = shard(buf, "moe_groups", "experts", "capacity", None)
 
     # --- expert MLP (tapped; stats via group-local segmented-direct) --------
-    g, acc = taps.dense_expert_grouped(buf, p["gate"], seg, acc, bg,
-                                       spec=spec, group=group)
-    u, acc = taps.dense_expert_grouped(buf, p["up"], seg, acc, bg,
-                                       spec=spec, group=group)
+    g = tap.dense_expert_grouped(buf, p["gate"], seg, bg, group=group)
+    u = tap.dense_expert_grouped(buf, p["up"], seg, bg, group=group)
     h = (_act(cfg.act)(g) * u).astype(x.dtype)
-    y_buf, acc = taps.dense_expert_grouped(h, p["down"], seg, acc, bg,
-                                           spec=spec, group=group)
+    y_buf = tap.dense_expert_grouped(h, p["down"], seg, bg, group=group)
     y_buf = shard(y_buf, "moe_groups", "experts", "capacity", None)
 
     # --- combine: batched gather back (dropped slots → zero pad row) --------
@@ -168,13 +163,13 @@ def moe(p, x, acc, *, cfg: MoeCfg, spec: PexSpec, group: str = "moe",
     y = jnp.sum(contrib.reshape(t, k, d), axis=1)
 
     if cfg.n_shared:
-        ys, acc = mlp(p["shared"], x, acc,
-                      cfg=MlpCfg(d, cfg.n_shared * cfg.d_ff, act=cfg.act),
-                      spec=spec, group=group)
+        ys = mlp(p["shared"], x, tap=tap,
+                 cfg=MlpCfg(d, cfg.n_shared * cfg.d_ff, act=cfg.act),
+                 group=group)
         y = y.reshape(b, s, d) + ys
     else:
         y = y.reshape(b, s, d)
-    return shard(y, "batch", None, "embed_act"), acc
+    return shard(y, "batch", None, "embed_act")
 
 
 def load_balance_loss(cfg: MoeCfg, logits: jax.Array) -> jax.Array:

@@ -4,8 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.nn import param as pm
 
 
@@ -15,16 +14,15 @@ def init_rmsnorm(d: int, *, dtype, plus_one: bool = False):
     return {"g": init((d,), dtype, ("embed",)), }
 
 
-def rmsnorm(p, x, acc, *, spec: PexSpec, eps: float = 1e-6,
-            plus_one: bool = False, group: str = "norm"):
+def rmsnorm(p, x, *, tap: Tap, eps: float = 1e-6,
+            plus_one: bool = False, group: str = "norm") -> jax.Array:
     dt = x.dtype
     xf = x.astype(jnp.float32)
     xn = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
     xn = xn.astype(dt)
     # gemma's (1+g): the stat/grad w.r.t. g is unchanged by the constant shift
     gval = (1.0 + p["g"].astype(jnp.float32)).astype(dt) if plus_one else p["g"].astype(dt)
-    y, acc = taps.scale(xn, gval, acc, spec=spec, group=group)
-    return y, acc
+    return tap.scale(xn, gval, group=group)
 
 
 def init_layernorm(d: int, *, dtype):
@@ -32,13 +30,12 @@ def init_layernorm(d: int, *, dtype):
             "b": pm.zeros((d,), dtype, ("embed",))}
 
 
-def layernorm(p, x, acc, *, spec: PexSpec, eps: float = 1e-5,
-              group: str = "norm"):
+def layernorm(p, x, *, tap: Tap, eps: float = 1e-5,
+              group: str = "norm") -> jax.Array:
     dt = x.dtype
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
     xn = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
-    y, acc = taps.scale(xn, p["g"].astype(dt), acc, spec=spec, group=group)
-    y, acc = taps.bias_add(y, p["b"].astype(dt), acc, spec=spec, group=group)
-    return y, acc
+    y = tap.scale(xn, p["g"].astype(dt), group=group)
+    return tap.bias_add(y, p["b"].astype(dt), group=group)

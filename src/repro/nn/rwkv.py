@@ -19,8 +19,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import shard
 from repro.nn import param as pm
 from repro.nn.linear import init_linear, linear
@@ -93,7 +92,7 @@ def _token_shift(x, prev: Optional[jax.Array]):
     return jnp.concatenate([first, x[:, :-1]], axis=1)
 
 
-def rwkv_tmix(p, x, acc, *, cfg: RwkvCfg, spec: PexSpec, state=None,
+def rwkv_tmix(p, x, *, tap: Tap, cfg: RwkvCfg, state=None,
               group: str = "rwkv"):
     b, s, d = x.shape
     nh, hd = cfg.n_heads, cfg.head_dim
@@ -102,22 +101,21 @@ def rwkv_tmix(p, x, acc, *, cfg: RwkvCfg, spec: PexSpec, state=None,
 
     # ddlerp: base mix, then per-stream LoRA refinement
     xbase = x + dx * p["mu"][_STREAMS]
-    la, acc = linear(p["mix_a"], xbase, acc, spec=spec, group=group)
+    la = linear(p["mix_a"], xbase, tap=tap, group=group)
     la = jnp.tanh(la).reshape(b, s, _STREAMS, cfg.mix_lora)
     mixed = []
     for i in range(_STREAMS):  # per-stream LoRA-B, tapped
-        lb_i, acc = taps.dense(la[:, :, i], p["mix_b"][i], acc,
-                               spec=spec, group=group)
+        lb_i = tap.dense(la[:, :, i], p["mix_b"][i], group=group)
         mixed.append(x + dx * (p["mu"][i] + lb_i))
     xr, xk, xv, xg, xw = mixed
 
-    r, acc = linear(p["wr"], xr, acc, spec=spec, group=group)
-    k, acc = linear(p["wk"], xk, acc, spec=spec, group=group)
-    v, acc = linear(p["wv"], xv, acc, spec=spec, group=group)
-    g, acc = linear(p["wg"], xg, acc, spec=spec, group=group)
+    r = linear(p["wr"], xr, tap=tap, group=group)
+    k = linear(p["wk"], xk, tap=tap, group=group)
+    v = linear(p["wv"], xv, tap=tap, group=group)
+    g = linear(p["wg"], xg, tap=tap, group=group)
 
-    dw, acc = linear(p["decay_a"], xw, acc, spec=spec, group=group)
-    dw, acc = linear(p["decay_b"], jnp.tanh(dw), acc, spec=spec, group=group)
+    dw = linear(p["decay_a"], xw, tap=tap, group=group)
+    dw = linear(p["decay_b"], jnp.tanh(dw), tap=tap, group=group)
     w = jnp.exp(-jnp.exp(p["w0"] + dw.astype(jnp.float32)))      # (B,S,d)
 
     r_ = r.reshape(b, s, nh, hd).astype(jnp.float32)
@@ -140,28 +138,28 @@ def rwkv_tmix(p, x, acc, *, cfg: RwkvCfg, spec: PexSpec, state=None,
         step, s0, tuple(jnp.moveaxis(a, 1, 0) for a in (r_, k_, v_, w_)))
     o = jnp.moveaxis(o, 0, 1).reshape(b, s, d).astype(x.dtype)
 
-    o, acc = layernorm(p["ln_x"], o, acc, spec=spec)  # group-norm surrogate
+    o = layernorm(p["ln_x"], o, tap=tap)  # group-norm surrogate
     o = o * jax.nn.silu(g)
-    y, acc = linear(p["wo"], o, acc, spec=spec, group=group)
+    y = linear(p["wo"], o, tap=tap, group=group)
     y = shard(y, "batch", None, "embed_act")
     new_state = None
     if state is not None:
         new_state = {**state, "tm_shift": x[:, -1], "wkv": s_final}
-    return y, acc, new_state
+    return y, new_state
 
 
-def rwkv_cmix(p, x, acc, *, cfg: RwkvCfg, spec: PexSpec, state=None,
+def rwkv_cmix(p, x, *, tap: Tap, cfg: RwkvCfg, state=None,
               group: str = "rwkv"):
     xx = _token_shift(x, state["cm_shift"] if state is not None else None)
     dx = xx - x
     xk = x + dx * p["mu"][0]
     xr = x + dx * p["mu"][1]
-    k, acc = linear(p["wk"], xk, acc, spec=spec, group=group)
+    k = linear(p["wk"], xk, tap=tap, group=group)
     k = jnp.square(jax.nn.relu(k))
-    kv, acc = linear(p["wv"], k, acc, spec=spec, group=group)
-    r, acc = linear(p["wr"], xr, acc, spec=spec, group=group)
+    kv = linear(p["wv"], k, tap=tap, group=group)
+    r = linear(p["wr"], xr, tap=tap, group=group)
     y = jax.nn.sigmoid(r) * kv
     new_state = None
     if state is not None:
         new_state = {**state, "cm_shift": x[:, -1]}
-    return shard(y, "batch", None, "embed_act"), acc, new_state
+    return shard(y, "batch", None, "embed_act"), new_state

@@ -19,8 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import taps
-from repro.core.taps import PexSpec
+from repro.core.taps import Tap
 from repro.dist.sharding import shard
 from repro.nn import param as pm
 from repro.nn.linear import init_linear, linear
@@ -87,13 +86,13 @@ def _causal_conv(x, w, b, state: Optional[jax.Array]):
     return out, new_state
 
 
-def ssm(p, x, acc, *, cfg: SsmCfg, spec: PexSpec,
+def ssm(p, x, *, tap: Tap, cfg: SsmCfg,
         state=None, group: str = "ssm"):
-    """x (B,S,d_model) → (y, acc, new_state). Pass state for decode."""
+    """x (B,S,d_model) → (y, new_state). Pass state for decode."""
     b, s, _ = x.shape
     di, ds, nh, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
 
-    zxbcdt, acc = linear(p["in_proj"], x, acc, spec=spec, group=group)
+    zxbcdt = linear(p["in_proj"], x, tap=tap, group=group)
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di:di + di + 2 * ds]
     dt = zxbcdt[..., -nh:]
@@ -105,8 +104,7 @@ def ssm(p, x, acc, *, cfg: SsmCfg, spec: PexSpec,
     bs = xbc[..., di:di + ds]
     cs = xbc[..., di + ds:]
 
-    dt, acc = taps.bias_add(dt.astype(jnp.float32), p["dt_bias"], acc,
-                            spec=spec, group=group)
+    dt = tap.bias_add(dt.astype(jnp.float32), p["dt_bias"], group=group)
     dt = jax.nn.softplus(dt)                                      # (B,S,nh)
     a = -jnp.exp(p["a_log"])                                      # (nh,)
     decay = jnp.exp(dt * a)                                       # (B,S,nh)
@@ -138,10 +136,9 @@ def ssm(p, x, acc, *, cfg: SsmCfg, spec: PexSpec,
     # gated RMSNorm (mamba2's norm before out_proj)
     yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
     yf = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
-    y, acc = taps.scale(yf.astype(x.dtype), p["norm_g"], acc,
-                        spec=spec, group=group)
+    y = tap.scale(yf.astype(x.dtype), p["norm_g"], group=group)
 
-    y, acc = linear(p["out_proj"], y, acc, spec=spec, group=group)
+    y = linear(p["out_proj"], y, tap=tap, group=group)
     y = shard(y, "batch", None, "embed_act")
     new_state = {"h": h_final, "conv": new_conv} if state is not None else None
-    return y, acc, new_state
+    return y, new_state

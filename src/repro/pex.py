@@ -1,0 +1,31 @@
+"""``repro.pex`` — the pex v2 public namespace (DESIGN.md §7).
+
+Declare instrumentation once, tap anywhere:
+
+    from repro import pex
+
+    eng = pex.Engine(pex.PexSpec(method="auto"), mesh=mesh)
+    res = eng.value_grads_and_norms(loss_fn, params, batch)
+
+with models written against the trace-time collector::
+
+    def loss_fn(params, batch, tap):
+        h = tap.embedding(params["emb"], batch["ids"])
+        z = tap.dense(h, params["w"], group="mlp")
+        ...
+        return loss_vec, {}
+
+``pex.scan`` / ``pex.checkpoint`` thread the collector's accumulator
+through ``lax.scan`` / ``jax.checkpoint`` boundaries; ``pex.NULL`` is
+the inert tap for serving / oracle paths.
+"""
+from repro.core.api import PexResult, clip_coefficients
+from repro.core.engine import Engine, infer_batch_size, plain_engine
+from repro.core.taps import (DISABLED, NULL, ExampleLayout, PexSpec, Tap,
+                             TokenLayout, checkpoint, scan)
+
+__all__ = [
+    "Engine", "PexResult", "PexSpec", "Tap", "TokenLayout", "ExampleLayout",
+    "DISABLED", "NULL", "scan", "checkpoint", "clip_coefficients",
+    "infer_batch_size", "plain_engine",
+]

@@ -7,6 +7,12 @@ Step modes:
   importance  — norms on a candidate pool → sample ∝ norm → weighted
                 step on the subsample (Zhao & Zhang; paper §1)
 
+Every per-example pass routes through one pex v2 ``Engine``
+(``core.engine``): the Trainer takes the v2 canonical loss
+``loss_fn(params, batch, tap) -> (loss_vec, aux)`` and the Engine
+dispatches single-device vs. the data-parallel shard_map pipeline from
+its mesh.
+
 Integrates: microbatch gradient accumulation, optional int8
 error-feedback compression, async checkpointing, heartbeats, straggler
 stats, deterministic resume.
@@ -23,9 +29,9 @@ import jax.numpy as jnp
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core import importance, taps
+from repro.core.engine import Engine
 from repro.core.taps import PexSpec
 from repro.data.pipeline import DataConfig, PipelineState, SyntheticLM
-from repro.dist import pex
 from repro.ft.heartbeat import HeartbeatConfig, HeartbeatMonitor
 from repro.optim import adamw, grad_compress
 
@@ -50,14 +56,18 @@ class Trainer:
     def __init__(self, loss_fn: Callable, params, pex_spec: PexSpec,
                  opt_cfg: adamw.AdamWConfig, train_cfg: TrainConfig,
                  data_cfg: DataConfig, *, mesh=None, data_axes=("data",)):
-        """``mesh=None`` runs single-device; a mesh routes every
-        per-example transform through the data-parallel shard_map
-        pipeline (dist.pex) with gradients psum'd across ``data_axes``."""
+        """``loss_fn`` is the v2 canonical tap-collector loss
+        (``registry.make_loss_fn_v2``). ``mesh=None`` runs
+        single-device; a mesh routes every per-example transform
+        through the data-parallel shard_map pipeline (dist.pex) with
+        gradients psum'd across ``data_axes``."""
         self.loss_fn = loss_fn
-        self.pex = pex_spec
         self.cfg = train_cfg
         self.opt_cfg = opt_cfg
-        self.api = pex.api_for(mesh, data_axes)
+        spec = pex_spec if train_cfg.mode != "plain" else taps.DISABLED
+        self.engine = Engine(spec, mesh=mesh, data_axes=data_axes,
+                             clip_norm=train_cfg.clip_norm,
+                             noise_std=train_cfg.noise_std)
         self.data = SyntheticLM(data_cfg)
         self.params = params
         self.opt_state = adamw.init(params)
@@ -72,48 +82,38 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _build_step(self):
-        cfg, pex_spec, loss_fn, opt_cfg = (self.cfg, self.pex, self.loss_fn,
-                                           self.opt_cfg)
-        papi = self.api   # core.api or the mesh-bound dist.pex facade
+        cfg, loss_fn, opt_cfg = self.cfg, self.loss_fn, self.opt_cfg
+        eng = self.engine
 
-        @partial(jax.jit, static_argnames=("batch_size",))
-        def plain_or_norms(params, opt_state, err, batch, batch_size):
-            if cfg.mode == "norms":
-                res = papi.value_grads_and_norms(loss_fn, params, batch,
-                                                 pex_spec, batch_size)
-            else:
-                res = papi.value_grads_and_norms(loss_fn, params, batch,
-                                                 taps.DISABLED, batch_size)
+        @jax.jit
+        def plain_or_norms(params, opt_state, err, batch):
+            res = eng.value_grads_and_norms(loss_fn, params, batch)
             grads = res.grads
             if err is not None:
                 grads, err = grad_compress.compress_decompress(grads, err)
             params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
             return params, opt_state, err, res.loss, res.sq_norms
 
-        @partial(jax.jit, static_argnames=("batch_size",))
-        def clip_step(params, opt_state, err, batch, rng, batch_size):
-            res = papi.clipped_value_and_grads(
-                loss_fn, params, batch, pex_spec, batch_size, cfg.clip_norm,
-                noise_std=cfg.noise_std, noise_rng=rng)
+        @jax.jit
+        def clip_step(params, opt_state, err, batch, rng):
+            res = eng.clipped_step(loss_fn, params, batch, rng=rng)
             grads = res.grads
             if err is not None:
                 grads, err = grad_compress.compress_decompress(grads, err)
             params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
             return params, opt_state, err, res.loss, res.sq_norms
 
-        @partial(jax.jit, static_argnames=("pool", "take"))
-        def importance_select(params, batch, rng, pool, take):
-            res = papi.value_and_norms(loss_fn, params, batch, pex_spec, pool)
+        @partial(jax.jit, static_argnames=("take",))
+        def importance_select(params, batch, rng, take):
+            res = eng.value_and_norms(loss_fn, params, batch)
             samp = importance.sample(rng, res.sq_norms, take,
                                      smoothing=cfg.importance_smoothing)
             return samp.indices, samp.weights, res.sq_norms
 
-        @partial(jax.jit, static_argnames=("batch_size",))
-        def weighted_step(params, opt_state, err, batch, weights, batch_size):
-            acc0 = taps.init_acc(batch_size, taps.DISABLED)
-
+        @jax.jit
+        def weighted_step(params, opt_state, err, batch, weights):
             def f(p):
-                lv, _, _ = loss_fn(p, acc0, batch)
+                lv, _ = loss_fn(p, batch, taps.NULL)
                 return jnp.sum(weights * lv), lv
 
             (loss, lv), grads = jax.value_and_grad(f, has_aux=True)(params)
@@ -133,21 +133,21 @@ class Trainer:
         if self.cfg.mode in ("plain", "norms"):
             (self.params, self.opt_state, self.err, loss,
              sq) = self._step_fn(self.params, self.opt_state, self.err,
-                                 batch, b)
+                                 batch)
         elif self.cfg.mode == "clip":
             self.rng, sub = jax.random.split(self.rng)
             (self.params, self.opt_state, self.err, loss,
              sq) = self._step_fn(self.params, self.opt_state, self.err,
-                                 batch, sub, b)
+                                 batch, sub)
         else:  # importance
             select, wstep = self._step_fn
             self.rng, sub = jax.random.split(self.rng)
             take = b // self.cfg.candidate_factor
-            idx, w, sq = select(self.params, batch, sub, b, take)
+            idx, w, sq = select(self.params, batch, sub, take)
             sub_batch = importance.gather_batch(batch, idx)
             (self.params, self.opt_state, self.err,
              loss) = wstep(self.params, self.opt_state, self.err,
-                           sub_batch, w, take)
+                           sub_batch, w)
         jax.block_until_ready(loss)
         dt = time.perf_counter() - t0
         m = {"step": self.step, "loss": float(loss), "time_s": dt}

@@ -1,0 +1,63 @@
+"""The zero-overhead claim, pinned by HLO cost: an instrumented model
+whose taps are disabled — or enabled but with norms not requested —
+must lower to the same flop/byte cost as the plain model, so the DCE
+property (taps docstring / DESIGN.md §1) can't silently regress."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.taps import DISABLED, ExampleLayout, PexSpec, Tap, NULL
+from repro.models import registry
+from repro.roofline.hlo import compiled_cost
+
+
+def _setup():
+    from repro.configs.common import ShapeSpec
+    from repro.nn.param import unbox
+    aspec = registry.get("llama3.2-1b")
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    batch = registry.make_train_batch(aspec, cfg,
+                                      ShapeSpec("dce", "train", 8, 2))
+    loss_v2 = registry.make_loss_fn_v2(aspec, cfg)
+    return params, batch, loss_v2
+
+
+def _grad_cost(loss_v2, params, batch, spec):
+    """Compile grad-wrt-params of the (possibly instrumented) total
+    loss; the accumulator gradient is never requested."""
+    def total(p):
+        if spec is None:
+            lv, _ = loss_v2(p, batch, NULL)
+        else:
+            tap = Tap(spec, acc=ExampleLayout(spec.n_groups).init(
+                batch["ids"].shape[0]))
+            lv, _ = loss_v2(p, batch, tap)
+        return jnp.sum(lv)
+
+    compiled = jax.jit(jax.grad(total)).lower(params).compile()
+    return compiled_cost(compiled)
+
+
+def test_disabled_spec_compiles_to_plain_model():
+    params, batch, loss_v2 = _setup()
+    flops_plain, bytes_plain = _grad_cost(loss_v2, params, batch, None)
+    flops_off, bytes_off = _grad_cost(loss_v2, params, batch, DISABLED)
+    assert flops_off == pytest.approx(flops_plain, rel=1e-6)
+    assert bytes_off == pytest.approx(bytes_plain, rel=1e-6)
+
+
+def test_unrequested_norms_are_dce_dead():
+    """Taps ENABLED, but grad taken w.r.t. params only: every stat
+    chain must be dead code — no flop/byte cost over the plain model.
+    (The instrumented program may lower marginally *cheaper*: the
+    custom_vjp backward rules emit slightly different HLO under remat
+    than autodiff transpose of the plain einsum; what must never
+    appear is the O(B·S²)/O(mnp) stat work.)"""
+    params, batch, loss_v2 = _setup()
+    flops_plain, bytes_plain = _grad_cost(loss_v2, params, batch, None)
+    flops_on, bytes_on = _grad_cost(loss_v2, params, batch,
+                                    PexSpec(enabled=True, method="gram"))
+    assert flops_on <= flops_plain * (1 + 1e-6)
+    assert bytes_on <= bytes_plain * (1 + 1e-6)

@@ -270,10 +270,12 @@ def test_per_group_norm_columns():
 
 
 def test_per_token_norms_exact():
-    """Per-token §4: s_{j,t} = ||h_t||²||z̄_t||² exactly equals the
-    Frobenius norm of token t's rank-1 gradient contribution, and the
-    contributions reconstruct the full dW."""
-    from repro.core import token_norms
+    """Per-token §4 via the unified tap registry (TokenLayout):
+    s_{j,t} = ||h_t||²||z̄_t||² exactly equals the Frobenius norm of
+    token t's rank-1 gradient contribution, and the contributions
+    reconstruct the full dW."""
+    from repro.core.engine import Engine
+    from repro.core.taps import NULL
     rng = np.random.default_rng(9)
     B, S, D, H = 3, 7, 6, 10
     params = {"w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * .4,
@@ -281,13 +283,15 @@ def test_per_token_norms_exact():
     batch = {"x": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32),
              "y": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)}
 
-    def loss_fn(p, acc, b):
-        z1, acc = token_norms.token_dense(b["x"], p["w1"], acc)
+    def loss_fn(p, b, tap):
+        z1 = tap.dense(b["x"], p["w1"])
         h1 = jnp.tanh(z1)
-        z2, acc = token_norms.token_dense(h1, p["w2"], acc)
-        return jnp.sum(jnp.square(z2 - b["y"]), axis=(1, 2)), acc, {}
+        z2 = tap.dense(h1, p["w2"])
+        return jnp.sum(jnp.square(z2 - b["y"]), axis=(1, 2)), {}
 
-    res = token_norms.value_and_token_norms(loss_fn, params, batch, B, S)
+    eng = Engine(PexSpec(enabled=True, method="factorized"),
+                 granularity="token")
+    res = eng.value_and_norms(loss_fn, params, batch)
     assert res.sq_norms.shape == (B, S)
 
     # oracle: materialize z̄ via perturbation taps
@@ -308,6 +312,5 @@ def test_per_token_norms_exact():
 
     # rank-1 reconstruction: Σ_{j,t} h z̄ᵀ == dW
     dw1 = jnp.einsum("bsi,bso->io", batch["x"], zb["t1"])
-    g = jax.grad(lambda p: jnp.sum(loss_fn(
-        p, token_norms.init_token_acc(B, S), batch)[0]))(params)
+    g = jax.grad(lambda p: jnp.sum(loss_fn(p, batch, NULL)[0]))(params)
     np.testing.assert_allclose(dw1, g["w1"], rtol=1e-5)

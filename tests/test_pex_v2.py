@@ -1,0 +1,317 @@
+"""pex v2: the Tap collector + Engine facade vs the paper-§3 naive
+oracle — all four norm passes (norms-only, grads+norms, clipped,
+sharded), the scan/checkpoint carry contract, accumulator layouts,
+and the trace-time validation satellites."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import pex
+from repro.core import naive
+from repro.core.engine import Engine, infer_batch_size
+from repro.core.taps import NULL, PexSpec, Tap
+from repro.dist import sharding as shd
+
+B, S, D, H, V = 4, 6, 8, 10, 12
+
+
+def _toy(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {
+        "emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * 0.3,
+        "w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * 0.3,
+        "b1": jnp.asarray(rng.normal(size=(H,)), jnp.float32) * 0.1,
+        "g": jnp.asarray(rng.normal(size=(H,)), jnp.float32) * 0.5 + 1.0,
+        "w2": jnp.asarray(rng.normal(size=(H, V)), jnp.float32) * 0.3,
+    }
+    batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
+             "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
+    return params, batch
+
+
+def _loss_v2(p, b, tap):
+    """v2 canonical loss: every op registers with the tap collector."""
+    h = tap.embedding(p["emb"], b["ids"])
+    z = tap.dense(h, p["w1"])
+    z = tap.bias_add(z, p["b1"])
+    h = jax.nn.gelu(z)
+    h = tap.scale(h, p["g"])
+    logits = tap.dense(h, p["w2"])
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
+    return -jnp.sum(ll, axis=-1), {}
+
+
+def _oracle(params, batch, param_filter=None):
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return _loss_v2(p, b1, NULL)[0][0]
+    return naive.per_example_sq_norms(single, params, batch, param_filter)
+
+
+def _one_device_mesh():
+    return shd.make_mesh((1, 1), ("data", "model"))
+
+
+# --- the four norm passes --------------------------------------------------
+
+@pytest.mark.parametrize("method", ["gram", "direct", "auto"])
+def test_engine_norms_only_exact(method):
+    params, batch = _toy()
+    eng = Engine(PexSpec(method=method))
+    res = eng.value_and_norms(_loss_v2, params, batch)
+    np.testing.assert_allclose(jnp.sum(res.sq_norms, -1),
+                               _oracle(params, batch), rtol=2e-5)
+
+
+def test_engine_grads_and_norms_exact():
+    params, batch = _toy()
+    eng = Engine(PexSpec(method="gram"))
+    res = jax.jit(lambda p, b: eng.value_grads_and_norms(_loss_v2, p, b))(
+        params, batch)
+    np.testing.assert_allclose(jnp.sum(res.sq_norms, -1),
+                               _oracle(params, batch), rtol=2e-5)
+    g = jax.grad(lambda p: jnp.sum(_loss_v2(p, batch, NULL)[0]))(params)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], g[k], rtol=1e-5, atol=1e-6)
+
+
+def test_engine_clipped_step_exact():
+    params, batch = _toy()
+    clip = 0.5
+    eng = Engine(PexSpec(method="gram"), clip_norm=clip)
+    res = eng.clipped_step(_loss_v2, params, batch)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return _loss_v2(p, b1, NULL)[0][0]
+
+    oracle = _oracle(params, batch)
+    pex_g = naive.per_example_grads(single, params, batch)
+    c = jnp.minimum(1.0, clip / (jnp.sqrt(oracle) + 1e-6))
+    for k in params:
+        want = jnp.einsum("b,b...->...", c, pex_g[k])
+        np.testing.assert_allclose(res.grads[k], want, rtol=1e-4, atol=1e-6)
+
+
+def test_engine_sharded_matches_local():
+    """Engine(mesh=...) must agree with Engine() on a trivial mesh for
+    every pass (multi-way extents run in the selfcheck subprocess)."""
+    params, batch = _toy()
+    local = Engine(PexSpec(method="gram"), clip_norm=1.0)
+    mesh = Engine(PexSpec(method="gram"), clip_norm=1.0,
+                  mesh=_one_device_mesh())
+    ref = local.value_grads_and_norms(_loss_v2, params, batch)
+    got = mesh.value_grads_and_norms(_loss_v2, params, batch)
+    np.testing.assert_allclose(ref.loss, got.loss, rtol=1e-6)
+    np.testing.assert_allclose(ref.sq_norms, got.sq_norms, rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(ref.grads[k], got.grads[k], rtol=1e-6)
+    ref_n = local.value_and_norms(_loss_v2, params, batch)
+    got_n = mesh.value_and_norms(_loss_v2, params, batch)
+    np.testing.assert_allclose(ref_n.sq_norms, got_n.sq_norms, rtol=1e-6)
+    ref_c = local.clipped_step(_loss_v2, params, batch)
+    got_c = mesh.clipped_step(_loss_v2, params, batch)
+    for k in params:
+        np.testing.assert_allclose(ref_c.grads[k], got_c.grads[k], rtol=1e-6)
+
+
+# --- scan / checkpoint carry contract --------------------------------------
+
+def test_tap_under_jit_scan_remat():
+    """pex.scan(remat=True) threads the collector's accumulator through
+    the scan carry and jax.checkpoint; norms stay exact under jit."""
+    rng = np.random.default_rng(2)
+    params = {"emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * .3,
+              "ws": jnp.asarray(rng.normal(size=(3, D, D)), jnp.float32) * .3,
+              "wo": jnp.asarray(rng.normal(size=(D, V)), jnp.float32) * .3}
+    batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
+             "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
+
+    def loss_fn(p, b, tap):
+        h = tap.embedding(p["emb"], b["ids"])
+
+        def blk(h, w):
+            z = tap.dense(h, w)
+            return jnp.tanh(z) + h, None
+
+        h, _ = pex.scan(blk, h, p["ws"], tap=tap, remat=True)
+        logits = tap.dense(h, p["wo"])
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
+        return -jnp.sum(ll, -1), {}
+
+    eng = Engine(PexSpec(method="gram"))
+    sq = jax.jit(lambda p, b: eng.value_and_norms(loss_fn, p, b).sq_norms)(
+        params, batch)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return loss_fn(p, b1, NULL)[0][0]
+
+    oracle = naive.per_example_sq_norms(single, params, batch)
+    np.testing.assert_allclose(jnp.sum(sq, -1), oracle, rtol=2e-5)
+
+
+def test_tap_checkpoint_helper():
+    """pex.checkpoint makes the accumulator explicit across a remat
+    boundary in straight-line (unrolled) code."""
+    rng = np.random.default_rng(3)
+    params = {"w1": jnp.asarray(rng.normal(size=(D, D)), jnp.float32) * .4,
+              "w2": jnp.asarray(rng.normal(size=(D, D)), jnp.float32) * .4}
+    batch = {"x": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)}
+
+    def loss_fn(p, b, tap):
+        def block(h, w):
+            return jnp.tanh(tap.dense(h, w)), None
+
+        h = b["x"]
+        for k in ("w1", "w2"):
+            fn = pex.checkpoint(block, tap=tap)
+            h, _ = fn(h, p[k])
+        return jnp.sum(jnp.square(h - b["y"]), axis=(1, 2)), {}
+
+    eng = Engine(PexSpec(method="gram"))
+    res = jax.jit(lambda p, b: eng.value_grads_and_norms(loss_fn, p, b))(
+        params, batch)
+
+    def single(p, ex):
+        b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+        return loss_fn(p, b1, NULL)[0][0]
+
+    oracle = naive.per_example_sq_norms(single, params, batch)
+    np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), oracle, rtol=2e-5)
+    g = jax.grad(lambda p: jnp.sum(loss_fn(p, batch, NULL)[0]))(params)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], g[k], rtol=1e-5, atol=1e-6)
+
+
+# --- layouts ----------------------------------------------------------------
+
+def test_token_granularity_sums_bias_scale_embed():
+    """TokenLayout covers bias/scale/embedding taps too: summing the
+    (B, S) map over groups of ops equals the per-token contribution
+    norms from perturbation-tap oracles."""
+    rng = np.random.default_rng(7)
+    params = {"emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * .5,
+              "b": jnp.asarray(rng.normal(size=(D,)), jnp.float32) * .2,
+              "g": jnp.asarray(rng.normal(size=(D,)), jnp.float32) + 1.0,
+              "w": jnp.asarray(rng.normal(size=(D, V)), jnp.float32) * .4}
+    batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
+             "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
+
+    def loss_fn(p, b, tap):
+        h = tap.embedding(p["emb"], b["ids"])
+        h = tap.bias_add(h, p["b"])
+        h = tap.scale(jnp.tanh(h), p["g"])
+        logits = tap.dense(h, p["w"])
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
+        return -jnp.sum(ll, -1), {}
+
+    eng = Engine(PexSpec(), granularity="token")
+    res = eng.value_and_norms(loss_fn, params, batch)
+    assert res.sq_norms.shape == (B, S)
+
+    # oracle: z̄ of every tapped op's output via perturbation taps
+    def f(tp):
+        h = params["emb"][batch["ids"]] + tp["emb"]
+        h = h + params["b"] + tp["bias"]
+        h = jnp.tanh(h) * params["g"] + tp["scale"]
+        logits = h @ params["w"] + tp["dense"]
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                                 -1)[..., 0]
+        return -jnp.sum(ll)
+
+    tp0 = {"emb": jnp.zeros((B, S, D)), "bias": jnp.zeros((B, S, D)),
+           "scale": jnp.zeros((B, S, D)), "dense": jnp.zeros((B, S, V))}
+    zb = jax.grad(f)(tp0)
+    h_in = jnp.tanh(params["emb"][batch["ids"]] + params["b"])  # scale input
+    h_sc = h_in * params["g"]                                   # dense input
+    want = (np.sum(np.square(np.asarray(zb["emb"])), -1)        # ‖h‖²=1
+            + np.sum(np.square(np.asarray(zb["bias"])), -1)
+            + np.sum(np.square(np.asarray(zb["scale"]) *
+                               np.asarray(h_in)), -1)
+            + np.sum(np.square(np.asarray(h_sc)), -1) *
+            np.sum(np.square(np.asarray(zb["dense"])), -1))
+    np.testing.assert_allclose(np.asarray(res.sq_norms), want, rtol=1e-4)
+
+
+def test_token_layout_rejects_expert_taps():
+    tap = Tap(PexSpec(), acc=pex.TokenLayout(4).init(2),
+              layout=pex.TokenLayout(4))
+    x = jnp.zeros((2, 4, 3))
+    w = jnp.zeros((2, 3, 5))
+    seg = jnp.zeros((2, 4), jnp.int32)
+    with pytest.raises(NotImplementedError):
+        jax.grad(lambda acc: jnp.sum(
+            Tap(PexSpec(), acc=acc, layout=pex.TokenLayout(4))
+            .dense_expert(x, w, seg)))(pex.TokenLayout(4).init(2))
+
+
+# --- validation satellites --------------------------------------------------
+
+def test_unknown_group_raises_at_trace_time():
+    """A typo'd group must not silently corrupt column 0 when the spec
+    has dedicated (non-catch-all) columns."""
+    spec = PexSpec(groups=("attn", "mlp"))
+    tap = Tap(spec, acc=pex.ExampleLayout(2).init(B))
+    h = jnp.ones((B, D))
+    w = jnp.ones((D, H))
+    with pytest.raises(ValueError, match="unknown pex group"):
+        tap.dense(h, w, group="mpl")
+    # exact names and catch-alls still resolve
+    assert spec.group_index("mlp") == 1
+    assert PexSpec(groups=("all",)).group_index("mpl") == 0
+    assert PexSpec(groups=("attn", "other")).group_index("mpl") == 1
+
+
+def test_noise_without_rng_raises():
+    params, batch = _toy()
+    eng = Engine(PexSpec(), clip_norm=1.0, noise_std=0.5)
+    with pytest.raises(ValueError, match="noise_std"):
+        eng.clipped_step(_loss_v2, params, batch)
+    from repro.core import api
+
+    def v1_loss(p, acc, b):
+        tap = Tap(PexSpec(), acc=acc)
+        lv, aux = _loss_v2(p, b, tap)
+        return lv, tap.carry(), aux
+
+    with pytest.raises(ValueError, match="noise_std"):
+        api.clipped_value_and_grads(v1_loss, params, batch, PexSpec(), B,
+                                    1.0, noise_std=0.5, noise_rng=None)
+
+
+def test_infer_batch_size():
+    assert infer_batch_size({"a": jnp.zeros((5, 2))}) == 5
+    with pytest.raises(ValueError):
+        infer_batch_size({"a": jnp.zeros((5, 2)), "b": jnp.zeros((3,))})
+
+
+def test_engine_granularity_validation():
+    with pytest.raises(ValueError):
+        Engine(PexSpec(), granularity="word")
+    params, batch = _toy()
+    eng = Engine(PexSpec(), granularity="token", clip_norm=1.0)
+    with pytest.raises(NotImplementedError):
+        eng.clipped_step(_loss_v2, params, batch)
+    with pytest.raises(NotImplementedError):
+        eng.gradient_noise_scale(_loss_v2, params, batch)
+
+
+def test_engine_gradient_noise_scale_runs():
+    params, batch = _toy()
+    eng = Engine(PexSpec(method="gram"))
+    gns = eng.gradient_noise_scale(_loss_v2, params, batch)
+    assert np.isfinite(float(gns))
+
+
+def test_null_tap_is_plain():
+    params, batch = _toy()
+    lv, aux = _loss_v2(params, batch, NULL)
+    assert lv.shape == (B,)
+    assert NULL.carry() is None

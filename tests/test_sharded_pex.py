@@ -96,7 +96,7 @@ def test_trainer_runs_on_mesh():
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     spec = PexSpec(enabled=True, method="gram")
-    loss_fn = registry.make_loss_fn(aspec, cfg, spec)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     dcfg = DataConfig(vocab=cfg.vocab, seq=8, global_batch=4)
     ocfg = adamw.AdamWConfig(lr=1e-3)
     tcfg = TrainConfig(mode="norms", steps=2, log_every=0,

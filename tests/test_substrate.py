@@ -123,7 +123,7 @@ def test_checkpoint_resume_is_bit_deterministic(tmp_path):
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     pex = PexSpec(enabled=True, method="gram")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     dcfg = DataConfig(vocab=cfg.vocab, seq=8, global_batch=4)
     ocfg = adamw.AdamWConfig(lr=1e-3)
 

@@ -26,7 +26,7 @@ def _trainer(mode, steps=6, arch="llama3.2-1b", **kw):
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     pex = PexSpec(enabled=True, method="gram")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     return Trainer(loss_fn, params, pex, adamw.AdamWConfig(lr=1e-3),
                    TrainConfig(mode=mode, steps=steps, log_every=0, **kw),
                    DataConfig(vocab=cfg.vocab, seq=16, global_batch=8))
@@ -118,8 +118,7 @@ def test_moe_capacity_drops_tokens_not_nans():
     p = unbox(init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8, 16)),
                     jnp.float32)
-    y, _ = moe(p, x, taps.init_acc(2, taps.DISABLED), cfg=cfg,
-               spec=taps.DISABLED)
+    y = moe(p, x, tap=taps.NULL, cfg=cfg)
     assert np.all(np.isfinite(np.asarray(y)))
 
 
