@@ -4,8 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, naive, taps
-from repro.core.taps import PexSpec
+from repro.core import naive
+from repro.core.engine import Engine
+from repro.core.taps import NULL, PexSpec
 from repro.models import registry
 from repro.nn.param import unbox
 from repro.configs.common import ShapeSpec
@@ -19,27 +20,24 @@ def run(arch="llama3.2-1b", b=8, s=64):
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     batch = registry.make_train_batch(aspec, cfg, ShapeSpec("t", "train", s, b))
-    pex = PexSpec(enabled=True, method="gram")
-    loss_on = registry.make_loss_fn(aspec, cfg, pex)
-    loss_off = registry.make_loss_fn(aspec, cfg, taps.DISABLED)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    eng = Engine(PexSpec(enabled=True, method="gram"), clip_norm=1.0)
 
     @jax.jit
     def grads_only(p):
         def f(p):
-            lv, _, _ = loss_off(p, taps.init_acc(b, taps.DISABLED), batch)
-            return jnp.sum(lv)
+            return jnp.sum(loss_fn(p, batch, NULL)[0])
         return jax.grad(f)(p)
 
     @jax.jit
     def twopass_clip(p):
-        return api.clipped_value_and_grads(loss_on, p, batch, pex, b, 1.0).grads
+        return eng.clipped_step(loss_fn, p, batch).grads
 
     @jax.jit
     def naive_clip(p):
         def single(p, ex):
             b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-            lv, _, _ = loss_off(p, taps.init_acc(1, taps.DISABLED), b1)
-            return lv[0]
+            return loss_fn(p, b1, NULL)[0][0]
         pg = naive.per_example_grads(single, p, batch)
         sq = naive.per_example_grad_pytree_norms(pg)
         c = jnp.minimum(1.0, 1.0 / (jnp.sqrt(sq) + 1e-6))

@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, naive, taps
-from repro.core.taps import PexSpec
+from repro.core import naive
+from repro.core.engine import Engine
+from repro.core.taps import NULL, PexSpec
 
 from benchmarks.common import row, time_fn
 
@@ -33,47 +34,40 @@ def _mlp_setup(m=64, d=256, depth=3, seed=0):
     batch = {"x": jnp.asarray(rng.normal(size=(m, d)), jnp.float32),
              "y": jnp.asarray(rng.normal(size=(m, d)), jnp.float32)}
 
-    def make_loss(spec):
-        def loss_fn(p, acc, b):
-            h = b["x"]
-            for i in range(depth):
-                z, acc = taps.dense(h, p[f"w{i}"], acc, spec=spec,
-                                    method="factorized")
-                h = jnp.tanh(z) if i < depth - 1 else z
-            return jnp.sum(jnp.square(h - b["y"]), -1), acc, {}
-        return loss_fn
+    def loss_fn(p, b, tap):
+        h = b["x"]
+        for i in range(depth):
+            z = tap.dense(h, p[f"w{i}"], method="factorized")
+            h = jnp.tanh(z) if i < depth - 1 else z
+        return jnp.sum(jnp.square(h - b["y"]), -1), {}
 
-    return params, batch, make_loss
+    return params, batch, loss_fn
 
 
 def run(m=64, d=256, depth=3):
-    params, batch, make_loss = _mlp_setup(m, d, depth)
-    spec = PexSpec(enabled=True, method="factorized")
-    loss_on = make_loss(spec)
-    loss_off = make_loss(taps.DISABLED)
+    params, batch, loss_fn = _mlp_setup(m, d, depth)
+    eng = Engine(PexSpec(enabled=True, method="factorized"))
 
     @jax.jit
     def grads_only(p, b):
         def f(p):
-            lv, _, _ = loss_off(p, taps.init_acc(m, taps.DISABLED), b)
-            return jnp.sum(lv)
+            return jnp.sum(loss_fn(p, b, NULL)[0])
         return jax.grad(f)(p)
 
     @jax.jit
     def pex_norms(p, b):
-        return api.value_and_norms(loss_on, p, b, spec, m).sq_norms
+        return eng.value_and_norms(loss_fn, p, b).sq_norms
 
     @jax.jit
     def pex_combined(p, b):
-        r = api.value_grads_and_norms(loss_on, p, b, spec, m)
+        r = eng.value_grads_and_norms(loss_fn, p, b)
         return r.grads, r.sq_norms
 
     @jax.jit
     def naive_vmap(p, b):
         def single(p, ex):
             b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-            lv, _, _ = loss_off(p, taps.init_acc(1, taps.DISABLED), b1)
-            return lv[0]
+            return loss_fn(p, b1, NULL)[0][0]
         return naive.per_example_sq_norms(single, p, b)
 
     def naive_loop(p, b):
@@ -89,8 +83,7 @@ def run(m=64, d=256, depth=3):
     @jax.jit
     def _loop_grad(p, ex):
         def f(p):
-            lv, _, _ = loss_off(p, taps.init_acc(1, taps.DISABLED), ex)
-            return jnp.sum(lv)
+            return jnp.sum(loss_fn(p, ex, NULL)[0])
         return jax.grad(f)(p)
 
     # correctness cross-check before timing

@@ -1,0 +1,120 @@
+"""Segmented direct-norm sweep: XLA scan/segment_sum vs the Pallas
+sort-based kernel, plus validation of the two-sided segmented dispatch
+model (core.norms.pick_segmented).
+
+Times both backends of ``stat_direct_segmented`` across the
+(T, p_in, p_out, n_seg) plane — long-T/few-segment points where the
+kernel should win, many-tiny-segment points where the run-table padding
+prices it out — re-derives the XLA↔Pallas crossover T under the cost
+model, measures the actual crossover from a T sweep, and **asserts**
+the auto pick is within ``TOL`` of the measured best wherever the
+timings are meaningful on this host (both backends: real TPU only —
+interpret mode's grid loop is an emulation, not a measurement; the
+measured-crossover rows are still recorded on CPU, flagged
+``interpret_mode``, for trend eyeballing).
+
+``main(smoke=True)`` is the CI job: tiny shapes, the kernel still
+executed (interpret mode) so a regression fails fast, no timing asserts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import norms as N
+
+from benchmarks.common import row, time_fn
+
+TOL = 0.15  # picked backend may be at most 15% off the measured best
+
+
+def _fns(n):
+    return {
+        "xla": jax.jit(lambda h, z, s: N.stat_direct_segmented(
+            h, z, s, n, method="xla")),
+        "pallas": jax.jit(lambda h, z, s: N.stat_direct_segmented(
+            h, z, s, n, method="pallas")),
+    }
+
+
+def _data(t, pi, po, n, seed=0, drop_frac=0.15):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(t, pi)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(t, po)), jnp.float32)
+    seg = rng.integers(0, n, size=(t,))
+    seg = np.where(rng.random(t) < drop_frac, n, seg)
+    return h, z, jnp.asarray(seg, jnp.int32)
+
+
+def run(t=2048, pi=256, po=256, n=8, check=True):
+    h, z, seg = _data(t, pi, po, n)
+    tag = f"t={t},p={pi}x{po},n={n}"
+    on_tpu = jax.default_backend() == "tpu"
+    picked = N.pick_segmented(t, pi, po, n, use_pallas=True)
+    times = {}
+    for name, fn in _fns(n).items():
+        times[name] = time_fn(fn, h, z, seg)
+        note = f"cost_model_pick={picked}" if name == picked else ""
+        row(f"seg.{name}[{tag}]", times[name], note)
+    best = min(times.values())
+    if check and on_tpu:
+        assert times[picked] <= (1 + TOL) * best, (
+            f"{tag}: segmented cost model picked {picked} "
+            f"({times[picked]:.0f}us) but best is {best:.0f}us "
+            f"(> {TOL:.0%} off)")
+
+
+def measured_crossover(pi=128, po=128, n=8, ts=(64, 128, 256, 512, 1024,
+                                                2048, 4096)):
+    """Sweep T at fixed (p, n): record both backends' timings, the first
+    measured T where the kernel wins, and the cost model's prediction.
+    On CPU the Pallas timings come from interpret mode (flagged)."""
+    on_tpu = jax.default_backend() == "tpu"
+    fns = _fns(n)
+    first_win = None
+    for t in ts:
+        h, z, seg = _data(t, pi, po, n)
+        tx = time_fn(fns["xla"], h, z, seg)
+        tp = time_fn(fns["pallas"], h, z, seg)
+        row(f"seg.sweep_xla[t={t},p={pi}x{po},n={n}]", tx, "")
+        row(f"seg.sweep_pallas[t={t},p={pi}x{po},n={n}]", tp,
+            "" if on_tpu else "interpret_mode")
+        if first_win is None and tp < tx:
+            first_win = t
+    model_t = N.crossover_t(pi, po, n)
+    row(f"seg.crossover[p={pi}x{po},n={n}]", 0.0,
+        f"model_t={model_t};measured_t={first_win}"
+        + ("" if on_tpu else ";interpret_mode"))
+
+
+def crossover_report():
+    """Cost-model crossover T across (p, n_seg): the kernel needs more
+    tokens to win as segments multiply (each extra present segment is
+    one more work item per feature block); at many tiny segments it
+    never wins and the scan keeps the stat."""
+    for pi, po, n in ((128, 128, 8), (256, 256, 8), (512, 512, 64),
+                      (1536, 5120, 1440)):
+        ct = N.crossover_t(pi, po, n)
+        row(f"seg.crossover_model[p={pi}x{po},n={n}]", 0.0,
+            f"t={ct}" if ct < (1 << 20) else "never")
+
+
+def main(smoke=False):
+    if smoke:
+        # CI: exercise both backends in each dispatch regime at
+        # interpreter-friendly shapes; numbers recorded for trend only.
+        run(t=256, pi=64, po=64, n=4, check=False)      # kernel regime
+        run(t=64, pi=32, po=32, n=48, check=False)      # scan regime
+        measured_crossover(pi=32, po=32, n=4, ts=(32, 128, 512))
+        crossover_report()
+        return
+    run(t=2048, pi=256, po=256, n=8)       # kernel regime (long T)
+    run(t=4096, pi=512, po=512, n=16)      # deep kernel regime
+    run(t=128, pi=64, po=64, n=96)         # many tiny segments → scan
+    run(t=1024, pi=1536, po=512, n=64)     # MoE-expert-like geometry
+    measured_crossover()
+    crossover_report()
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

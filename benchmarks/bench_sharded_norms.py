@@ -37,9 +37,8 @@ def main():
     args = ap.parse_args()
 
     from repro.configs.common import ShapeSpec
-    from repro.core import api
+    from repro.core.engine import Engine
     from repro.core.taps import PexSpec
-    from repro.dist import pex
     from repro.launch.mesh import make_host_mesh
     from repro.models import registry
     from repro.nn.param import unbox
@@ -49,7 +48,7 @@ def main():
     mod = registry.family_module(aspec)
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     spec = PexSpec(enabled=True, method=args.method)
-    loss_fn = registry.make_loss_fn(aspec, cfg, spec)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     batch = registry.make_train_batch(
         aspec, cfg, ShapeSpec("bench", "train", args.seq, args.batch))
     mesh = make_host_mesh(model_parallel=1)
@@ -59,15 +58,17 @@ def main():
           f"{n_shards}-way data mesh vs single device")
     print("variant,us,examples_per_s")
 
+    local = Engine(spec)
+    sharded = Engine(spec, mesh=mesh)
     cases = {
-        "norms_single": jax.jit(lambda p, d: api.value_and_norms(
-            loss_fn, p, d, spec, b).sq_norms),
-        "norms_sharded": jax.jit(lambda p, d: pex.value_and_norms(
-            loss_fn, p, d, spec, b, mesh=mesh).sq_norms),
-        "grads_norms_single": jax.jit(lambda p, d: api.value_grads_and_norms(
-            loss_fn, p, d, spec, b).grads),
-        "grads_norms_sharded": jax.jit(lambda p, d: pex.value_grads_and_norms(
-            loss_fn, p, d, spec, b, mesh=mesh).grads),
+        "norms_single": jax.jit(lambda p, d: local.value_and_norms(
+            loss_fn, p, d).sq_norms),
+        "norms_sharded": jax.jit(lambda p, d: sharded.value_and_norms(
+            loss_fn, p, d).sq_norms),
+        "grads_norms_single": jax.jit(lambda p, d: local.value_grads_and_norms(
+            loss_fn, p, d).grads),
+        "grads_norms_sharded": jax.jit(lambda p, d: sharded.value_grads_and_norms(
+            loss_fn, p, d).grads),
     }
     for name, fn in cases.items():
         us = time_fn(fn, params, batch)

@@ -2,16 +2,17 @@
 
 The Engine facade (trace-time Tap collector + v2 loss adapter) must be
 pure sugar: the train-step program it traces has to compile to HLO of
-the same flop/byte cost as the v1 explicit-accumulator path. This
-module lowers both paths for a smoke llama config, asserts cost
-equality, and emits the numbers as benchmark rows so BENCH_PR3.json
-records the (lack of) tax across PRs.
+the same flop/byte cost as a hand-adapted explicit-accumulator call
+into the underlying pass layer (core.passes — what the v1 public API
+used to expose). This module lowers both paths for a smoke llama
+config, asserts cost equality, and emits the numbers as benchmark rows
+so the BENCH json records the (lack of) tax across PRs.
 """
 import jax
 import jax.numpy as jnp
 
 from repro.configs.common import ShapeSpec
-from repro.core import api
+from repro.core import passes
 from repro.core.engine import Engine
 from repro.core.taps import PexSpec, Tap
 from repro.models import registry
@@ -34,13 +35,13 @@ def run(b=4, s=16, check=True):
     loss_v2 = registry.make_loss_fn_v2(aspec, cfg)
     eng = Engine(spec)
 
-    def v1_loss(p, acc, bt):
+    def acc_loss(p, acc, bt):
         tap = Tap(spec, acc=acc)
         lv, aux = loss_v2(p, bt, tap)
         return lv, tap.carry(), aux
 
     def step_v1(p, bt):
-        r = api.value_grads_and_norms(v1_loss, p, bt, spec, b)
+        r = passes.value_grads_and_norms(acc_loss, p, bt, spec, b)
         return r.loss, r.sq_norms, r.grads
 
     def step_v2(p, bt):

@@ -1,32 +1,36 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows; ``--json`` additionally
-writes the machine-readable ``BENCH_PR3.json`` (name → us_per_call) so
+writes the machine-readable ``BENCH_PR4.json`` (name → us_per_call) so
 the perf trajectory is diffable across PRs. ``--smoke`` runs the
-tiny-shape estimator/kernel sweep plus the v2-facade guard (the CI
+tiny-shape estimator/kernel sweeps plus the v2-facade guard (the CI
 interpret-mode job).
 
   paper5.*     — the paper's §5 cost comparison (its only table)
   methods.*    — norm-estimator sweep validating the two-sided
                  (backend-aware) dispatch model + crossover derivation
+  seg.*        — segmented direct-norm sweep (MoE expert buffers):
+                 XLA scan vs the Pallas sort-based kernel, with the
+                 measured and cost-model XLA↔Pallas crossover
   clip.*       — §6 clipping: two-pass ghost vs naive
   importance.* — §1 application: importance sampling vs uniform
   v2.*         — Engine-facade guard: the v2 path must compile to HLO
-                 of the same flop/byte cost as the v1 path (no
+                 of the same flop/byte cost as the raw pass layer (no
                  abstraction tax; asserted)
 """
 import argparse
 
 from benchmarks import (bench_clipping, bench_importance, bench_methods,
-                        bench_paper_table, bench_v2_facade, common)
+                        bench_paper_table, bench_segmented,
+                        bench_v2_facade, common)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", nargs="?", const="BENCH_PR3.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR4.json", default=None,
                     metavar="PATH",
                     help="write results as {name: us_per_call} JSON "
-                         "(default path: BENCH_PR3.json)")
+                         "(default path: BENCH_PR4.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, kernels in interpret mode, no "
                          "timing asserts (the CI job)")
@@ -36,10 +40,12 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     if args.smoke:
         bench_methods.main(smoke=True)
+        bench_segmented.main(smoke=True)
         bench_v2_facade.main(smoke=True)
     else:
         bench_paper_table.main()
         bench_methods.main()
+        bench_segmented.main()
         bench_clipping.main()
         bench_importance.main()
         bench_v2_facade.main()

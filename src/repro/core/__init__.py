@@ -5,22 +5,20 @@ JAX transform family.
                collector and accumulator layouts (example / token)
   engine     — pex v2 Engine: one entry point for local, sharded, and
                token-level runs (see also the repro.pex namespace)
-  norms      — the estimator zoo (factorized = paper §4, gram, direct, ...)
-  api        — v1 explicit-acc transforms (Engine builds on these)
+  norms      — the estimator zoo (factorized = paper §4, gram, direct,
+               segmented-direct for MoE expert buffers, ...)
+  passes     — internal explicit-acc transforms the Engine builds on
   clipping   — one-pass §6 (perturbation taps; faithful MLP form)
   importance — Zhao & Zhang importance sampling on top of the norms
   naive      — paper §3 oracle (vmap-of-grad), used by tests & benchmarks
 """
 from repro.core.taps import (PexSpec, DISABLED, NULL, Tap, ExampleLayout,
-                             TokenLayout, init_acc, scan, checkpoint,
-                             dense, bias_add, scale, embedding)
-from repro.core.api import (PexResult, value_and_norms, value_grads_and_norms,
-                            clip_coefficients, clipped_value_and_grads)
+                             TokenLayout, scan, checkpoint)
+from repro.core.passes import PexResult, clip_coefficients
 from repro.core.engine import Engine, plain_engine
 
 __all__ = [
     "PexSpec", "DISABLED", "NULL", "Tap", "ExampleLayout", "TokenLayout",
-    "init_acc", "scan", "checkpoint", "dense", "bias_add", "scale",
-    "embedding", "PexResult", "value_and_norms", "value_grads_and_norms",
-    "clip_coefficients", "clipped_value_and_grads", "Engine", "plain_engine",
+    "scan", "checkpoint", "PexResult", "clip_coefficients", "Engine",
+    "plain_engine",
 ]

@@ -5,7 +5,7 @@ norms are known, each example's Z̄ rows are rescaled in place and the
 final backprop step  W̄⁽ⁱ⁾' = X⁽ⁱ⁾ᵀ Z̄⁽ⁱ⁾'  is recomputed — no second
 backward pass. It requires materializing every (H, Z̄) pair, which is
 exactly what the paper's MLP setting affords; the production path for
-deep scanned LMs is the two-pass form in ``core.api`` (same result,
+deep scanned LMs is the two-pass form in ``core.passes`` (same result,
 O(batch) memory — see DESIGN.md §2).
 
 Mechanism: "perturbation taps". The model forward is written as
@@ -25,7 +25,7 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import clip_coefficients
+from repro.core.passes import clip_coefficients
 from repro.dist.sharding import shard
 
 
@@ -72,7 +72,7 @@ def onepass_clipped_weight_grads_seq(forward: Callable, params, batch,
     W̄⁽ⁱ⁾' = Σ_t X_tᵀ (c ⊙ Z̄_t). One backward pass; the re-run is only
     the dW einsums (cheaper than the two-pass form, at the cost of
     storing every (H, Z̄) — the memory/compute trade both forms of §6
-    offer; core.api.clipped_value_and_grads is the O(batch)-memory
+    offer; core.passes.clipped_value_and_grads is the O(batch)-memory
     alternative)."""
     taps = zero_taps(tap_shapes)
 

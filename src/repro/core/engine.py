@@ -1,9 +1,10 @@
 """pex v2 ``Engine`` — one entry point for local, sharded, and
 token-level per-example-gradient runs (DESIGN.md §7).
 
-The Engine replaces the ``core.api`` functions + ``dist.pex.api_for``
-split: it is constructed once with the instrumentation policy and the
-execution context, and every pass takes a **tap-collector loss**
+The Engine is the one public entry point (the old ``core.api`` +
+``dist.pex.api_for`` split is gone): it is constructed once with the
+instrumentation policy and the execution context, and every pass takes
+a **tap-collector loss**
 
     loss_fn(params, batch, tap) -> (loss_vec, aux)
 
@@ -29,8 +30,8 @@ from typing import Callable, Optional, Sequence
 
 import jax
 
-from repro.core import api
-from repro.core.api import PexResult
+from repro.core import passes
+from repro.core.passes import PexResult
 from repro.core.taps import DISABLED, ExampleLayout, PexSpec, Tap, TokenLayout
 from repro.dist import pex as _dpex
 
@@ -104,8 +105,9 @@ class Engine:
         return ExampleLayout(self.spec.n_groups)
 
     def _adapt(self, loss_fn: Callable, layout) -> Callable:
-        """v2 tap-collector loss → v1 explicit-acc loss (the Tap is
-        created inside the traced function, per trace)."""
+        """Tap-collector loss → the explicit-acc loss the pass layer
+        (core.passes) consumes; the Tap is created inside the traced
+        function, per trace."""
         def v1_loss(params, acc, batch):
             tap = Tap(self.spec, acc=acc, layout=layout)
             loss_vec, aux = loss_fn(params, batch, tap)
@@ -117,8 +119,8 @@ class Engine:
         layout = self._layout(batch, seq)
         v1_loss = self._adapt(loss_fn, layout)
         if self.mesh is None:
-            return getattr(api, fn)(v1_loss, params, batch, self.spec, b,
-                                    layout=layout, **kw)
+            return getattr(passes, fn)(v1_loss, params, batch, self.spec, b,
+                                       layout=layout, **kw)
         return getattr(_dpex, fn)(v1_loss, params, batch, self.spec, b,
                                   mesh=self.mesh, data_axes=self.data_axes,
                                   layout=layout, **kw)
@@ -155,7 +157,7 @@ class Engine:
             raise ValueError("clipped_step needs clip_norm: set it on the "
                              "Engine or pass clip_norm= per call")
         sigma = noise_std if noise_std is not None else self.noise_std
-        api.check_noise_args(sigma, rng)
+        passes.check_noise_args(sigma, rng)
         return self._run("clipped_value_and_grads", loss_fn, params, batch,
                          batch_size, None, clip_norm=c, noise_std=sigma,
                          noise_rng=rng)

@@ -213,21 +213,127 @@ def stat_elementwise(h: jax.Array, zbar: jax.Array) -> jax.Array:
     return jnp.sum(jnp.square(prod), axis=-1)
 
 
+def segmented_flops(t: int, p_in: int, p_out: int, n_seg: int,
+                    token_block: int = 1024) -> float:
+    """XLA segmented-direct cost: outer products + segment-sum scatter
+    over the token blocks, the dense (n_seg, p_in, p_out) carry add per
+    block, and the final square-reduce. The carry term is what makes
+    many-segment stats expensive on this backend — the scan keeps the
+    whole per-segment partial-gradient tensor live across every block."""
+    n_tb = max(1, math.ceil(t / token_block))
+    return float(2.0 * t * p_in * p_out
+                 + n_tb * n_seg * p_in * p_out
+                 + 2.0 * n_seg * p_in * p_out)
+
+
+#: Effective-throughput weight on the XLA segmented formulation. Unlike
+#: the dense gram/direct comparison — einsum vs kernel, both MXU matmuls
+#: priced at par — the scan/segment_sum path never touches the MXU: its
+#: outer products, scatter-adds and dense carry adds are all VPU work
+#: (8×128 lanes vs the 128×128 systolic array, a 16× per-element gap on
+#: TPU; halved here as a fusion allowance). The Pallas side stays in raw
+#: MXU flops, so the crossover lands where the padded kernel launch
+#: stops being cheaper than VPU-rate scatter work.
+XLA_SEGMENTED_VPU_WEIGHT = 8.0
+
+
+def segmented_cost(t: int, p_in: int, p_out: int, n_seg: int, *,
+                   use_pallas: bool = False,
+                   token_block: int = 1024) -> float:
+    """Two-sided cost of one segmented stat, same contract as
+    ``dense_cost``: the Pallas side is priced at the padded launch tiles
+    of the sort-based kernel (static work-item grid, dummy items and
+    chunk padding included), the XLA side at the scan/segment_sum
+    formulation's flops weighted by ``XLA_SEGMENTED_VPU_WEIGHT`` (that
+    path runs on the VPU, not the MXU)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.segmented_cost(t, p_in, p_out, n_seg)
+    return XLA_SEGMENTED_VPU_WEIGHT * segmented_flops(t, p_in, p_out, n_seg,
+                                                      token_block)
+
+
+def pick_segmented(t: int, p_in: int, p_out: int, n_seg: int, *,
+                   use_pallas: bool = False,
+                   token_block: int = 1024) -> str:
+    """'pallas' | 'xla' — the backend the cost model would run a
+    segmented stat on (the segmented analogue of ``pick_method``).
+    Without ``use_pallas`` the kernel is not on the table."""
+    if not use_pallas:
+        return "xla"
+    c_pl = segmented_cost(t, p_in, p_out, n_seg, use_pallas=True)
+    c_xla = segmented_cost(t, p_in, p_out, n_seg, token_block=token_block)
+    return "pallas" if c_pl <= c_xla else "xla"
+
+
+def crossover_t(p_in: int, p_out: int, n_seg: int, *,
+                t_max: int = 1 << 20, token_block: int = 1024) -> int:
+    """Smallest token count at which the Pallas segmented kernel beats
+    the XLA scan under the two-sided cost model (binary search; the
+    ratio is monotone in t once the fixed run-table overhead — the
+    min(n_seg+1, t) work items — is amortized). Returns ``t_max`` when
+    the kernel never wins (many tiny segments)."""
+    def pl_wins(t):
+        return pick_segmented(t, p_in, p_out, n_seg, use_pallas=True,
+                              token_block=token_block) == "pallas"
+    lo, hi = 1, t_max
+    if not pl_wins(hi):
+        return t_max
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if pl_wins(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
 def stat_direct_segmented(h: jax.Array, zbar: jax.Array, seg_ids: jax.Array,
                           n_examples: int, chunk_in: int = 128,
-                          token_block: int = 1024) -> jax.Array:
+                          token_block: int = 1024,
+                          method: str = "auto",
+                          use_pallas: bool = False) -> jax.Array:
     """Exact per-example norms for token-major layers (MoE expert buffers).
 
     h: (T, p_in), zbar: (T, p_out), seg_ids: (T,) example id per row
     (rows with seg_id >= n_examples — padding / dropped tokens — are
-    discarded). Computes s_j = ||Σ_{t: seg=j} h_t z̄_tᵀ||²; the per-chunk
-    per-example partial gradient (B, chunk_in, p_out) persists across
-    token blocks (cross-block terms must complete before squaring) while
-    the (tokens × chunk_in × p_out) outer product is built one token
-    block at a time. FLOPs ≈ T·p_in·p_out — the cost of one dW einsum.
+    discarded; ids are clamped into the drop bucket up front, so callers
+    may pass any sentinel ≥ n_examples). Computes
+    s_j = ||Σ_{t: seg=j} h_t z̄_tᵀ||². FLOPs ≈ T·p_in·p_out — the cost
+    of one dW einsum.
+
+    ``method`` picks the backend: ``"xla"`` is the scan/segment_sum
+    formulation below (the regression oracle and CPU fallback);
+    ``"pallas"`` the sort-based kernel (kernels/segmented_norm.py);
+    ``"auto"`` consults ``pick_segmented`` — with ``use_pallas=False``
+    it always resolves to the XLA path.
+
+    Edge cases are handled explicitly rather than leaning on scatter
+    out-of-bounds semantics: n_examples < 1 and T == 0 return empty /
+    zero stats, all-dropped rows (every seg_id ≥ n_examples — e.g. a
+    fully capacity-dropped token block) contribute nothing on either
+    backend, and n_examples == 1 exercises the same clamped path as any
+    other batch (regression-tested in tests/test_segmented.py).
     """
     t, p_in = h.shape
     p_out = zbar.shape[-1]
+    if n_examples < 1:
+        return jnp.zeros((max(n_examples, 0),), _ACC_DTYPE)
+    if t == 0:
+        return jnp.zeros((n_examples,), _ACC_DTYPE)
+    # explicit drop bucket: every invalid row lands in segment n_examples
+    seg_ids = jnp.minimum(seg_ids.astype(jnp.int32), n_examples)
+    if method == "auto":
+        method = pick_segmented(t, p_in, p_out, n_examples,
+                                use_pallas=use_pallas,
+                                token_block=token_block)
+    if method == "pallas":
+        from repro.kernels import ops as kops
+        return kops.segmented_norm(h.astype(_ACC_DTYPE),
+                                   zbar.astype(_ACC_DTYPE),
+                                   seg_ids, n_examples)
+    if method != "xla":
+        raise ValueError(f"unknown segmented method {method!r}")
     h = h.astype(_ACC_DTYPE)
     zbar = zbar.astype(_ACC_DTYPE)
 
@@ -249,7 +355,8 @@ def stat_direct_segmented(h: jax.Array, zbar: jax.Array, seg_ids: jax.Array,
         def per_block(g_acc, xs):
             h_b, z_b, s_b = xs
             outer = h_b[:, :, None] * z_b[:, None, :]
-            # one extra segment catches padding/dropped rows
+            # one extra segment catches padding/dropped rows (ids are
+            # pre-clamped, so n_examples+1 segments is exhaustive)
             g = jax.ops.segment_sum(outer, s_b, num_segments=n_examples + 1)
             return g_acc + g[:n_examples], None
 

@@ -1,19 +1,18 @@
-"""Per-example transform layer (v1 surface; Engine builds on this).
+"""Per-example transform passes — the layer ``Engine`` builds on.
 
-Canonical v1 instrumented-loss signature used across the framework:
+Internal (the v1 public ``core.api`` surface these passes used to be is
+gone; user code goes through ``repro.pex.Engine``). Each pass consumes
+an explicit-accumulator loss
 
     loss_fn(params, acc, batch) -> (loss_vec, acc_out, aux)
 
 where ``loss_vec`` is the (B,) vector of per-example losses L^(j)
-(paper §2: C = Σ_j L^(j)), ``acc_out`` is the threaded accumulator
-(must be returned so the tap chain stays live), and ``aux`` is any
-extra pytree (metrics).
-
-pex v2 callers should use ``repro.core.engine.Engine`` (or the
-``repro.pex`` namespace), which adapts tap-collector losses
-(``loss_fn(params, batch, tap) -> (loss_vec, aux)``) onto these
-transforms and picks the local vs. mesh path. These functions accept an
-optional accumulator ``layout`` so the same passes serve per-example
+(paper §2: C = Σ_j L^(j)) and ``acc_out`` is the threaded accumulator
+(must be returned so the tap chain stays live). The Engine adapts
+tap-collector losses (``loss_fn(params, batch, tap) -> (loss_vec,
+aux)``) onto this signature per trace and picks the local vs. mesh
+path (``dist.pex`` wraps the same passes in ``shard_map``). The
+``layout`` argument makes one set of passes serve per-example
 ``(B, G)`` and per-token ``(B, S)`` granularities.
 """
 from __future__ import annotations

@@ -43,13 +43,12 @@ Key properties (unchanged from v1):
     activation-backprop + O(mnp), as in paper §5.
 
 The v1 explicit-accumulator functions (``dense(h, w, acc, *, spec)``
-etc.) remain as thin deprecation shims for one release; new code goes
+etc.) and their one-release deprecation shims are gone; all code goes
 through ``Tap`` / ``repro.pex``.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Optional, Tuple
 
@@ -75,7 +74,14 @@ class PexSpec:
     use_pallas:  route dense stats through the Pallas kernels — the
                  triangular tile-pair gram kernel or the blocked HᵀZ̄
                  direct kernel, whichever the backend-aware cost model
-                 picks (``method='auto'`` covers both regimes).
+                 picks (``method='auto'`` covers both regimes). Expert
+                 taps consult the same flag: their segmented-direct stat
+                 runs the sort-based Pallas kernel when the segmented
+                 cost model favours it.
+    seg_method:  'auto' | 'xla' | 'pallas' for the MoE expert taps'
+                 segmented-direct stat. 'auto' (default) defers to the
+                 two-sided segmented cost model under ``use_pallas``;
+                 the explicit values pin a backend (regression tests).
     groups:      acc column names; per-group norms (e.g. attn/mlp/embed).
                  ``"all"`` / ``"other"`` act as catch-all columns; an op
                  tapping a group not in ``groups`` (and with no catch-all
@@ -87,6 +93,7 @@ class PexSpec:
     enabled: bool = True
     method: str = "auto"
     use_pallas: bool = False
+    seg_method: str = "auto"
     groups: Tuple[str, ...] = ("all",)
     tap_embeddings: bool = True
     tap_head: bool = True
@@ -149,8 +156,71 @@ class ExampleLayout:
         return acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
 
     def add_example_stat(self, acc_bar, stat, group):
-        """Scatter an already-(B,)-shaped stat (MoE expert taps)."""
+        """Scatter an already-(B,)-shaped stat into a group column."""
         return acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
+
+    def add_expert(self, acc_bar, x, zbar, seg, tok, group, n_examples,
+                   method, use_pallas):
+        """MoE expert-buffer stat: x (E,C,d), zbar (E,C,f), seg (E,C)
+        example ids (≥ n_examples ⇒ dropped). Example j's gradient for
+        expert e is a separate d×f block of the stacked weight — cross-
+        expert outer products must NOT merge before squaring, hence the
+        (expert, example) composite segments. ``tok`` (slot → token
+        position) is not needed at example granularity."""
+        e, c, d = x.shape
+        composite = (jnp.arange(e, dtype=seg.dtype)[:, None]
+                     * (n_examples + 1) + jnp.minimum(seg, n_examples))
+        stat_ec = N.stat_direct_segmented(
+            x.reshape(e * c, d), zbar.reshape(e * c, -1),
+            composite.reshape(e * c), e * (n_examples + 1),
+            method=method, use_pallas=use_pallas)
+        stat = stat_ec.reshape(e, n_examples + 1)[:, :n_examples].sum(axis=0)
+        return self.add_example_stat(acc_bar, stat, group)
+
+    def add_expert_grouped(self, acc_bar, x, zbar, seg, tok, group, bg,
+                           method, use_pallas):
+        """Grouped (GShard-local) expert stat: x (G,E,C,d), seg (G,E,C)
+        GROUP-LOCAL example ids (≥ bg ⇒ padding row); group g's stats
+        land at acc rows [g·bg, (g+1)·bg). An example's rows live only
+        in its own group, so (group, expert, example) composite segments
+        are exact. The Pallas route flattens all groups into ONE kernel
+        launch (vmapping a scalar-prefetched pallas_call is not
+        supported); the XLA oracle keeps its per-group vmap form."""
+        ng, e, c, d = x.shape
+        f = zbar.shape[-1]
+        if method == "auto":
+            # price the candidates as they would actually launch: the
+            # Pallas route is ONE flattened kernel over all groups, the
+            # XLA route ng vmapped per-group scans
+            if not use_pallas:
+                method = "xla"
+            else:
+                c_pl = N.segmented_cost(ng * e * c, d, f,
+                                        ng * e * (bg + 1), use_pallas=True)
+                c_xla = ng * N.segmented_cost(e * c, d, f, e * (bg + 1))
+                method = "pallas" if c_pl <= c_xla else "xla"
+        if method == "pallas":
+            ge = (jnp.arange(ng, dtype=seg.dtype)[:, None, None] * e
+                  + jnp.arange(e, dtype=seg.dtype)[None, :, None])
+            composite = ge * (bg + 1) + jnp.minimum(seg, bg)
+            stat_all = N.stat_direct_segmented(
+                x.reshape(ng * e * c, d), zbar.reshape(ng * e * c, f),
+                composite.reshape(ng * e * c), ng * e * (bg + 1),
+                method="pallas")
+            stat = stat_all.reshape(ng, e, bg + 1)[:, :, :bg].sum(axis=1)
+            stat = stat.reshape(ng * bg)
+            return self.add_example_stat(acc_bar, stat, group)
+
+        def one_group(xg, zg, sg):
+            composite = (jnp.arange(e, dtype=sg.dtype)[:, None] * (bg + 1)
+                         + jnp.minimum(sg, bg))
+            stat_ec = N.stat_direct_segmented(
+                xg.reshape(e * c, d), zg.reshape(e * c, f),
+                composite.reshape(e * c), e * (bg + 1), method="xla")
+            return stat_ec.reshape(e, bg + 1)[:, :bg].sum(axis=0)  # (bg,)
+
+        stat = jax.vmap(one_group)(x, zbar, seg).reshape(ng * bg)
+        return self.add_example_stat(acc_bar, stat, group)
 
 
 def _sumsq_tail(x, keep: int = 2):
@@ -205,17 +275,45 @@ class TokenLayout:
                 f"shape {zbar.shape}; a rank-2 stat would silently "
                 f"broadcast into the (B, S) accumulator")
 
-    def add_example_stat(self, acc_bar, stat, group):
-        raise NotImplementedError(
-            "MoE expert taps produce per-example stats (capacity slots "
-            "lose token positions); token-granularity norms over expert "
-            "weights are not supported — exclude the MoE group or use "
-            "ExampleLayout")
+    def _scatter_slot_stats(self, acc_bar, stat, target, valid):
+        """Scatter per-slot stats into the flat (B·S) token map; invalid
+        slots (capacity padding) are masked AND redirected out of bounds
+        so ``mode="drop"`` discards them explicitly."""
+        b, s = acc_bar.shape
+        tgt = jnp.where(valid, target, b * s).reshape(-1)
+        upd = jnp.where(valid, stat, 0.0).reshape(-1)
+        flat = acc_bar.reshape(-1).at[tgt].add(upd.astype(acc_bar.dtype),
+                                               mode="drop")
+        return flat.reshape(b, s)
 
+    def add_expert(self, acc_bar, x, zbar, seg, tok, group, n_examples,
+                   method, use_pallas):
+        """Token-granularity expert stat. Every capacity slot holds ONE
+        token's row, so token t's contribution to the expert weight is
+        the rank-1 outer product x_slot z̄_slotᵀ — the §4 factorization
+        is *exact* per slot, and a token's slots land in distinct expert
+        matrices (top-k experts are distinct), so summing its slot stats
+        into the (B, S) map is exact too. ``tok`` is the slot → flat
+        token position table from the dispatch sort (tok ∈ [0, B·S);
+        out-of-range ⇒ padding slot); no segmented estimator needed —
+        per-token expert norms are O(T·p)."""
+        b, s = acc_bar.shape
+        stat = _sumsq_tail(x, 2) * _sumsq_tail(zbar, 2)          # (E, C)
+        valid = jnp.logical_and(tok >= 0, tok < b * s)
+        return self._scatter_slot_stats(acc_bar, stat, tok, valid)
 
-def init_acc(batch: int, spec: PexSpec) -> jax.Array:
-    """Fresh (B, n_groups) example-layout accumulator (v1 helper)."""
-    return ExampleLayout(spec.n_groups).init(batch)
+    def add_expert_grouped(self, acc_bar, x, zbar, seg, tok, group, bg,
+                           method, use_pallas):
+        """Grouped-dispatch variant: ``tok`` (G,E,C) carries GROUP-LOCAL
+        flat token ids (∈ [0, bg·S); ≥ bg·S ⇒ padding slot); group g
+        covers the flat tokens [g·bg·S, (g+1)·bg·S)."""
+        b, s = acc_bar.shape
+        ng = x.shape[0]
+        tg = bg * s
+        stat = _sumsq_tail(x, 3) * _sumsq_tail(zbar, 3)          # (G, E, C)
+        valid = jnp.logical_and(tok >= 0, tok < tg)
+        glob = jnp.arange(ng, dtype=jnp.int32)[:, None, None] * tg + tok
+        return self._scatter_slot_stats(acc_bar, stat, glob, valid)
 
 
 def _int_zero_cotangent(x):
@@ -253,37 +351,33 @@ _pex_dense.defvjp(_pex_dense_fwd, _pex_dense_bwd)
 # ---------------------------------------------------------------------------
 # dense_expert: z = einsum('ecd,edf->ecf')  (MoE expert matmuls; rows of the
 #   (E, C) capacity buffer belong to arbitrary examples, so stats use the
-#   segmented-direct estimator with per-row example ids)
+#   segmented-direct estimator with per-row example ids — or, at token
+#   granularity, the per-slot factorization scattered by token position)
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _pex_dense_expert(group: int, n_examples: int, layout,
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _pex_dense_expert(group: int, n_examples: int, method: str,
+                      use_pallas: bool, layout,
                       x: jax.Array, w: jax.Array, seg: jax.Array,
-                      acc: jax.Array):
+                      tok: jax.Array, acc: jax.Array):
     return jnp.einsum("ecd,edf->ecf", x, w), acc
 
 
-def _pex_dense_expert_fwd(group, n_examples, layout, x, w, seg, acc):
-    return (jnp.einsum("ecd,edf->ecf", x, w), acc), (x, w, seg)
+def _pex_dense_expert_fwd(group, n_examples, method, use_pallas, layout,
+                          x, w, seg, tok, acc):
+    return (jnp.einsum("ecd,edf->ecf", x, w), acc), (x, w, seg, tok)
 
 
-def _pex_dense_expert_bwd(group, n_examples, layout, res, cts):
-    x, w, seg = res
+def _pex_dense_expert_bwd(group, n_examples, method, use_pallas, layout,
+                          res, cts):
+    x, w, seg, tok = res
     zbar, acc_bar = cts
     dx = jnp.einsum("ecf,edf->ecd", zbar, w).astype(x.dtype)
     dw = jnp.einsum("ecd,ecf->edf", x, zbar).astype(w.dtype)
-    e, c, d = x.shape
-    # per-(expert, example) segments: example j's gradient for expert e is
-    # a separate d×f block of the stacked weight — cross-expert outer
-    # products must NOT merge before squaring
-    composite = (jnp.arange(e, dtype=seg.dtype)[:, None] * (n_examples + 1)
-                 + jnp.minimum(seg, n_examples))
-    stat_ec = N.stat_direct_segmented(
-        x.reshape(e * c, d), zbar.reshape(e * c, -1),
-        composite.reshape(e * c), e * (n_examples + 1))
-    stat = stat_ec.reshape(e, n_examples + 1)[:, :n_examples].sum(axis=0)
-    dacc = layout.add_example_stat(acc_bar, stat, group)
-    return dx, dw, _int_zero_cotangent(seg), dacc
+    dacc = layout.add_expert(acc_bar, x, zbar, seg, tok, group, n_examples,
+                             method, use_pallas)
+    return (dx, dw, _int_zero_cotangent(seg), _int_zero_cotangent(tok),
+            dacc)
 
 
 _pex_dense_expert.defvjp(_pex_dense_expert_fwd, _pex_dense_expert_bwd)
@@ -292,40 +386,33 @@ _pex_dense_expert.defvjp(_pex_dense_expert_fwd, _pex_dense_expert_bwd)
 # ---------------------------------------------------------------------------
 # dense_expert_grouped: z = einsum('gecd,edf->gecf') — grouped local MoE
 #   dispatch (groups aligned with data shards). seg holds GROUP-LOCAL
-#   example ids, so the stat segment-sums stay device-local; group g's
-#   stats land at acc rows [g·bg, (g+1)·bg).
+#   example ids (and tok group-local token ids), so the stats stay
+#   device-local; group g's stats land at acc rows [g·bg, (g+1)·bg).
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _pex_dense_expert_grouped(group: int, bg: int, layout,
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _pex_dense_expert_grouped(group: int, bg: int, method: str,
+                              use_pallas: bool, layout,
                               x: jax.Array, w: jax.Array, seg: jax.Array,
-                              acc: jax.Array):
+                              tok: jax.Array, acc: jax.Array):
     return jnp.einsum("gecd,edf->gecf", x, w), acc
 
 
-def _pex_dense_expert_grouped_fwd(group, bg, layout, x, w, seg, acc):
-    return (jnp.einsum("gecd,edf->gecf", x, w), acc), (x, w, seg)
+def _pex_dense_expert_grouped_fwd(group, bg, method, use_pallas, layout,
+                                  x, w, seg, tok, acc):
+    return (jnp.einsum("gecd,edf->gecf", x, w), acc), (x, w, seg, tok)
 
 
-def _pex_dense_expert_grouped_bwd(group, bg, layout, res, cts):
-    x, w, seg = res
+def _pex_dense_expert_grouped_bwd(group, bg, method, use_pallas, layout,
+                                  res, cts):
+    x, w, seg, tok = res
     zbar, acc_bar = cts
     dx = jnp.einsum("gecf,edf->gecd", zbar, w).astype(x.dtype)
     dw = jnp.einsum("gecd,gecf->edf", x, zbar).astype(w.dtype)
-    ng, e, c, d = x.shape
-    f = zbar.shape[-1]
-
-    def one_group(xg, zg, sg):
-        composite = (jnp.arange(e, dtype=sg.dtype)[:, None] * (bg + 1)
-                     + jnp.minimum(sg, bg))
-        stat_ec = N.stat_direct_segmented(
-            xg.reshape(e * c, d), zg.reshape(e * c, f),
-            composite.reshape(e * c), e * (bg + 1))
-        return stat_ec.reshape(e, bg + 1)[:, :bg].sum(axis=0)  # (bg,)
-
-    stat = jax.vmap(one_group)(x, zbar, seg).reshape(ng * bg)
-    dacc = layout.add_example_stat(acc_bar, stat, group)
-    return dx, dw, _int_zero_cotangent(seg), dacc
+    dacc = layout.add_expert_grouped(acc_bar, x, zbar, seg, tok, group, bg,
+                                     method, use_pallas)
+    return (dx, dw, _int_zero_cotangent(seg), _int_zero_cotangent(tok),
+            dacc)
 
 
 _pex_dense_expert_grouped.defvjp(_pex_dense_expert_grouped_fwd,
@@ -494,25 +581,50 @@ class Tap:
                                   table, ids, self._acc)
         return z
 
-    def dense_expert(self, x, w, seg, *, group: str = "moe") -> jax.Array:
+    def _expert_tok(self, seg, tok):
+        """Validate/default the slot→token-position table: required at
+        token granularity (the capacity shuffle loses positions without
+        it — nn.moe threads its dispatch sort's table automatically);
+        at example granularity an absent table becomes an inert
+        sentinel so legacy call sites keep working."""
+        if tok is not None:
+            return tok
+        if isinstance(self.layout, TokenLayout):
+            raise ValueError(
+                "granularity='token' expert taps need token positions: "
+                "pass tok= (slot → flat token id, as produced by "
+                "nn.moe's dispatch sort); without it the (B, S) map "
+                "cannot be scattered")
+        return jnp.full_like(seg, -1)
+
+    def dense_expert(self, x, w, seg, tok=None, *,
+                     group: str = "moe") -> jax.Array:
         """Instrumented per-expert matmul. x (E,C,d), w (E,d,f), seg (E,C)
-        int example ids (>= batch ⇒ padding row, excluded from stats)."""
+        int example ids (>= batch ⇒ padding row, excluded from stats);
+        tok (E,C) flat token positions (>= B·S ⇒ padding row), required
+        for TokenLayout."""
         if not self.live:
             return jnp.einsum("ecd,edf->ecf", x, w)
+        tok = self._expert_tok(seg, tok)
         z, self._acc = _pex_dense_expert(
-            self.spec.group_index(group), self._acc.shape[0], self.layout,
-            x, w, seg, self._acc)
+            self.spec.group_index(group), self._acc.shape[0],
+            self.spec.seg_method, self.spec.use_pallas, self.layout,
+            x, w, seg, tok, self._acc)
         return z
 
-    def dense_expert_grouped(self, x, w, seg, bg: int, *,
+    def dense_expert_grouped(self, x, w, seg, bg: int, tok=None, *,
                              group: str = "moe") -> jax.Array:
         """Grouped instrumented expert matmul. x (G,E,C,d), w (E,d,f),
-        seg (G,E,C) group-local example ids (>= bg ⇒ padding row)."""
+        seg (G,E,C) group-local example ids (>= bg ⇒ padding row); tok
+        (G,E,C) group-local flat token ids (>= bg·S ⇒ padding row),
+        required for TokenLayout."""
         if not self.live:
             return jnp.einsum("gecd,edf->gecf", x, w)
+        tok = self._expert_tok(seg, tok)
         z, self._acc = _pex_dense_expert_grouped(
-            self.spec.group_index(group), bg, self.layout,
-            x, w, seg, self._acc)
+            self.spec.group_index(group), bg,
+            self.spec.seg_method, self.spec.use_pallas, self.layout,
+            x, w, seg, tok, self._acc)
         return z
 
 
@@ -573,56 +685,3 @@ def checkpoint(fn, *, tap: Optional[Tap] = None, policy=None):
     return outer
 
 
-# ---------------------------------------------------------------------------
-# v1 explicit-accumulator shims (deprecated; one release)
-# ---------------------------------------------------------------------------
-
-def _v1_warn(name: str) -> None:
-    warnings.warn(
-        f"taps.{name}(..., acc, spec=...) is the deprecated v1 API; "
-        f"create a Tap (repro.pex) and call tap.{name}(...) instead",
-        DeprecationWarning, stacklevel=3)
-
-
-def dense(h, w, acc, *, spec: PexSpec, group: str = "all",
-          method: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
-    """Deprecated v1 op: instrumented matmul with explicit acc."""
-    _v1_warn("dense")
-    t = Tap(spec, acc=acc)
-    return t.dense(h, w, group=group, method=method), t.carry()
-
-
-def bias_add(x, b, acc, *, spec: PexSpec, group: str = "all"):
-    """Deprecated v1 op: instrumented bias add with explicit acc."""
-    _v1_warn("bias_add")
-    t = Tap(spec, acc=acc)
-    return t.bias_add(x, b, group=group), t.carry()
-
-
-def scale(h, g, acc, *, spec: PexSpec, group: str = "all"):
-    """Deprecated v1 op: instrumented elementwise scale with explicit acc."""
-    _v1_warn("scale")
-    t = Tap(spec, acc=acc)
-    return t.scale(h, g, group=group), t.carry()
-
-
-def embedding(table, ids, acc, *, spec: PexSpec, group: str = "embed"):
-    """Deprecated v1 op: instrumented embedding lookup with explicit acc."""
-    _v1_warn("embedding")
-    t = Tap(spec, acc=acc)
-    return t.embedding(table, ids, group=group), t.carry()
-
-
-def dense_expert(x, w, seg, acc, *, spec: PexSpec, group: str = "moe"):
-    """Deprecated v1 op: instrumented expert matmul with explicit acc."""
-    _v1_warn("dense_expert")
-    t = Tap(spec, acc=acc)
-    return t.dense_expert(x, w, seg, group=group), t.carry()
-
-
-def dense_expert_grouped(x, w, seg, acc, bg: int, *, spec: PexSpec,
-                         group: str = "moe"):
-    """Deprecated v1 op: grouped instrumented expert matmul."""
-    _v1_warn("dense_expert_grouped")
-    t = Tap(spec, acc=acc)
-    return t.dense_expert_grouped(x, w, seg, bg, group=group), t.carry()

@@ -2,12 +2,12 @@
 per-example-norm pipeline.
 
 ``repro.dist.sharding`` is the logical-axis layer every ``nn/`` module
-talks to; ``repro.dist.pex`` lifts the ``core.api`` per-example
+talks to; ``repro.dist.pex`` lifts the ``core.passes`` per-example
 transforms onto a device mesh with ``shard_map``. See DESIGN.md §4.
 
-``pex`` loads lazily: it imports ``core.api``, whose tap layer imports
-``dist.sharding`` — an eager import here would close that cycle while
-``core.api`` is still half-initialized.
+``pex`` loads lazily: it imports ``core.passes``, whose tap layer
+imports ``dist.sharding`` — an eager import here would close that cycle
+while ``core.passes`` is still half-initialized.
 """
 from repro.dist import sharding
 

@@ -1,6 +1,6 @@
 """Mesh-sharded per-example-norm pipeline (DESIGN.md §4).
 
-Lifts the ``core.api`` transforms onto a device mesh with
+Lifts the ``core.passes`` transforms onto a device mesh with
 ``shard_map``: the batch is split over the data axes, each shard runs
 the tap-instrumented model on its local examples, and only the
 *parameter gradients* (and scalar loss) cross devices via ``psum``.
@@ -32,8 +32,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import api
-from repro.core.api import PexResult
+from repro.core import passes as api
+from repro.core.passes import PexResult
 from repro.core.taps import PexSpec
 from repro.dist import sharding as shd
 
@@ -98,7 +98,7 @@ def value_and_norms(loss_fn: Callable, params, batch, spec: PexSpec,
                     layout=None) -> PexResult:
     """Sharded norms-only pass. Single-device semantics when mesh=None.
 
-    Returns the same PexResult as ``core.api.value_and_norms``; the
+    Returns the same PexResult as ``core.passes.value_and_norms``; the
     loss is the global scalar, ``loss_vec``/``sq_norms`` are the full
     (B,)/(B, G) arrays, laid out batch-sharded over ``data_axes``.
     ``aux`` is always {} on the mesh path (non-empty aux raises — see
@@ -180,50 +180,6 @@ def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
     if noise_std > 0.0:
         grads = api.add_grad_noise(grads, noise_std, clip_norm, noise_rng)
     return PexResult(loss, loss_vec, {}, sq, grads)
-
-
-# --- facade ----------------------------------------------------------------
-
-class ShardedPexAPI:
-    """``core.api``-shaped namespace bound to one (mesh, data_axes).
-
-    Lets call sites (trainer, dryrun) pick the single-device or the
-    mesh path with one assignment instead of branching at every call.
-    """
-
-    def __init__(self, mesh: Mesh, data_axes: Sequence[str] = ("data",)):
-        self.mesh = mesh
-        self.data_axes = _norm_axes(data_axes)
-
-    def value_and_norms(self, loss_fn, params, batch, spec, batch_size):
-        return value_and_norms(loss_fn, params, batch, spec, batch_size,
-                               mesh=self.mesh, data_axes=self.data_axes)
-
-    def value_grads_and_norms(self, loss_fn, params, batch, spec, batch_size):
-        return value_grads_and_norms(loss_fn, params, batch, spec,
-                                     batch_size, mesh=self.mesh,
-                                     data_axes=self.data_axes)
-
-    def clipped_value_and_grads(self, loss_fn, params, batch, spec,
-                                batch_size, clip_norm, noise_std=0.0,
-                                noise_rng=None):
-        return clipped_value_and_grads(loss_fn, params, batch, spec,
-                                       batch_size, clip_norm,
-                                       noise_std=noise_std,
-                                       noise_rng=noise_rng, mesh=self.mesh,
-                                       data_axes=self.data_axes)
-
-
-def api_for(mesh: Optional[Mesh] = None,
-            data_axes: Sequence[str] = ("data",)):
-    """``core.api`` when mesh is None, else a mesh-bound facade.
-
-    Deprecated (v1): ``core.engine.Engine(spec, mesh=...)`` is the one
-    entry point that subsumes this split; kept one release for
-    explicit-acc callers."""
-    if mesh is None:
-        return api
-    return ShardedPexAPI(mesh, data_axes)
 
 
 # --- diagnostics -----------------------------------------------------------

@@ -22,6 +22,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import gram_norm as _gn
 from repro.kernels import ref as _ref  # noqa: F401  (re-export for callers)
 from repro.kernels import rowsumsq as _rs
+from repro.kernels import segmented_norm as _sn
 
 
 def _interpret() -> bool:
@@ -118,6 +119,111 @@ def direct_cost(s: int, p_in: int, p_out: int) -> float:
     (padding waste included)."""
     _, _, _, s_pad, pi_pad, po_pad = _launch_tiles(s, p_in, p_out)
     return float(_dn.flop_estimate(1, s_pad, pi_pad, po_pad))
+
+
+def _seg_launch_tiles(t: int, p_in: int, p_out: int, n_seg: int):
+    """Launch geometry of the segmented kernel for a logical
+    (t, p_in)×(t, p_out) stat over ``n_seg`` segments: row tile, feature
+    chunks, padded dims, and the static work-item count ``n_work`` — the
+    grid the kernel launches regardless of how many (block × segment)
+    runs the data actually produces."""
+    tile_t = min(128, _round_up(max(t, 1), 8))
+    chunk_in = _chunk_for(p_in)
+    chunk_out = _chunk_for(p_out)
+    t_pad = _round_up(max(t, 1), tile_t)
+    n_tb = t_pad // tile_t
+    # sorted keys take values in [0, n_seg] (n_seg = the dropped-row
+    # bucket); runs per block boundary + one per key change bounds the
+    # (block × segment) work items
+    n_work = n_tb + min(n_seg + 1, t_pad)
+    return (tile_t, chunk_in, chunk_out, t_pad,
+            _round_up(p_in, chunk_in), _round_up(p_out, chunk_out),
+            n_tb, n_work, _round_up(max(n_seg, 1), 128))
+
+
+def _run_tables(key_s: jax.Array, t_pad: int, tile_t: int, n_seg: int,
+                n_work: int):
+    """Work-item tables for rows sorted by segment key.
+
+    ``key_s`` is the (t_pad,) sorted key vector with values in
+    [0, n_seg] (n_seg ⇒ dropped/padding row). A *run* is a maximal
+    stretch of equal keys inside one token block; runs are enumerated
+    in row order, scattered into ``n_work`` static slots (unused slots
+    and dropped-segment runs become inert: empty mask, no fold).
+    """
+    pos = jnp.arange(t_pad, dtype=jnp.int32)
+    prev = jnp.concatenate([jnp.full((1,), -1, key_s.dtype), key_s[:-1]])
+    is_start = jnp.logical_or(pos % tile_t == 0, key_s != prev)
+    run_id = jnp.cumsum(is_start.astype(jnp.int32)) - 1
+    count = jax.ops.segment_sum(jnp.ones_like(pos), run_id,
+                                num_segments=n_work)
+    starts = jax.ops.segment_min(pos, run_id, num_segments=n_work)
+    seg_of = jax.ops.segment_min(key_s.astype(jnp.int32), run_id,
+                                 num_segments=n_work)
+    active = jnp.logical_and(count > 0, seg_of < n_seg)
+    blk = jnp.where(active, starts // tile_t, 0)
+    r0 = jnp.where(active, starts % tile_t, 0)
+    r1 = jnp.where(active, r0 + count, 0)  # inert items: empty [0, 0)
+    prv = jnp.concatenate([jnp.full((1,), -2, jnp.int32), seg_of[:-1]])
+    nxt = jnp.concatenate([seg_of[1:], jnp.full((1,), -2, jnp.int32)])
+    first = jnp.logical_or(seg_of != prv, jnp.logical_not(active))
+    last = jnp.logical_and(active, seg_of != nxt)
+    seg_col = jnp.where(active, seg_of, 0)
+    return (blk.astype(jnp.int32), r0.astype(jnp.int32),
+            r1.astype(jnp.int32), seg_col.astype(jnp.int32),
+            first.astype(jnp.int32), last.astype(jnp.int32))
+
+
+def segmented_norm(h: jax.Array, zbar: jax.Array, seg_ids: jax.Array,
+                   n_seg: int) -> jax.Array:
+    """(T,p_in),(T,p_out),(T,) int → (n_seg,) ||Σ_{t:seg=j} h_t z̄_tᵀ||².
+
+    Rows with ``seg_ids >= n_seg`` (capacity-dropped tokens, padding)
+    are discarded. The segment scatter becomes a stable sort: rows are
+    reordered so each segment is contiguous, the run structure goes to
+    the kernel as scalar-prefetched index tables, and the per-segment
+    partial gradient lives only as a (chunk_in, chunk_out) f32 VMEM
+    scratch. Zero-padding of T and both feature dims is exact (zero
+    rows/columns add nothing to any HᵀZ̄)."""
+    t, p_in = h.shape
+    p_out = zbar.shape[-1]
+    if n_seg <= 0:
+        return jnp.zeros((max(n_seg, 0),), jnp.float32)
+    if t == 0:
+        return jnp.zeros((n_seg,), jnp.float32)
+    (tile_t, chunk_in, chunk_out, t_pad, pi_pad, po_pad,
+     _, n_work, n_seg_pad) = _seg_launch_tiles(t, p_in, p_out, n_seg)
+    key = jnp.minimum(seg_ids.astype(jnp.int32), n_seg)
+    if t_pad != t:
+        h = jnp.pad(h, ((0, t_pad - t), (0, 0)))
+        zbar = jnp.pad(zbar, ((0, t_pad - t), (0, 0)))
+        key = jnp.pad(key, (0, t_pad - t), constant_values=n_seg)
+    order = jnp.argsort(key, stable=True)
+    key_s = jnp.take(key, order)
+    h = jnp.take(h, order, axis=0)
+    zbar = jnp.take(zbar, order, axis=0)
+    if pi_pad != p_in:
+        h = jnp.pad(h, ((0, 0), (0, pi_pad - p_in)))
+    if po_pad != p_out:
+        zbar = jnp.pad(zbar, ((0, 0), (0, po_pad - p_out)))
+    tables = _run_tables(key_s, t_pad, tile_t, n_seg, n_work)
+    out = _sn.segmented_norm_sorted(*tables, h, zbar, n_seg_pad=n_seg_pad,
+                                    tile_t=tile_t, chunk_in=chunk_in,
+                                    chunk_out=chunk_out,
+                                    interpret=_interpret())
+    return out[:n_seg]
+
+
+def segmented_cost(t: int, p_in: int, p_out: int, n_seg: int) -> float:
+    """Flops the Pallas segmented path spends on a (t, p_in)×(t, p_out)
+    stat over ``n_seg`` segments, at the launch tiles it would actually
+    use — the *static* work-item grid (run splitting, dummy items, and
+    feature/row padding all charged), which is what makes this side of
+    the model honest about small-T / many-segment launches."""
+    (tile_t, _, _, _, pi_pad, po_pad,
+     _, n_work, n_seg_pad) = _seg_launch_tiles(t, p_in, p_out, n_seg)
+    return float(_sn.flop_estimate(n_work, tile_t, pi_pad, po_pad,
+                                   n_seg_pad))
 
 
 def rowsumsq(x: jax.Array) -> jax.Array:

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.common import SHAPES, ArchSpec, ShapeSpec, base_rules
-from repro.core.taps import PexSpec, Tap
 from repro.models import rwkv6, seamless, transformer, zamba2
 
 from repro.configs import (deepseek_v2_236b, gemma2_9b, llama3_2_1b,
@@ -56,19 +55,6 @@ def make_loss_fn_v2(spec: ArchSpec, cfg):
 
     def loss_fn(params, batch, tap):
         return mod.loss_fn(params, batch, tap, cfg=cfg)
-    return loss_fn
-
-
-def make_loss_fn(spec: ArchSpec, cfg, pex: PexSpec):
-    """v1-shaped loss (deprecation shim): ``loss(params, acc, batch) ->
-    (loss_vec, acc_out, aux)``. Wraps the arch's tap-collector loss; new
-    code should use ``make_loss_fn_v2`` with ``core.engine.Engine``."""
-    mod = family_module(spec)
-
-    def loss_fn(params, acc, batch):
-        tap = Tap(pex, acc=acc)
-        loss_vec, aux = mod.loss_fn(params, batch, tap, cfg=cfg)
-        return loss_vec, tap.carry(), aux
     return loss_fn
 
 

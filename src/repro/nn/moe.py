@@ -5,8 +5,10 @@ Token→expert routing is computed with a sort (no (T·K, E) one-hot):
 argsort by expert id gives each token its slot rank inside its expert;
 rows past the static capacity drop out via scatter ``mode="drop"``.
 Per-example gradient norms stay exact through the shuffle: every
-capacity slot carries its example id, and the expert matmuls use the
-segmented-direct tap (core.taps.dense_expert).
+capacity slot carries its example id AND its source token position, and
+the expert matmuls use the expert taps (``tap.dense_expert_grouped``) —
+segmented-direct stats at example granularity, per-slot factorized
+stats scattered by token position at token granularity.
 
 Covers deepseek-v2 (160 routed + 2 shared, top-6, softmax gate without
 renorm) and phi3.5-moe (16 experts, top-2, renormalized gate).
@@ -142,13 +144,17 @@ def moe(p, x, *, tap: Tap, cfg: MoeCfg, group: str = "moe",
         [rel_example, jnp.full((ng, 1), bg, jnp.int32)], axis=1)
     seg = jnp.take_along_axis(rel_pad, tok_for_slot, axis=1)
     seg = seg.reshape(ng, e_dim, cap)
+    # the dispatch sort already knows each slot's source token — carry it
+    # so TokenLayout taps can scatter slot stats back to (B, S) positions
+    # (tg ⇒ padding slot; group g covers flat tokens [g·tg, (g+1)·tg))
+    tok = tok_for_slot.reshape(ng, e_dim, cap)
     buf = shard(buf, "moe_groups", "experts", "capacity", None)
 
     # --- expert MLP (tapped; stats via group-local segmented-direct) --------
-    g = tap.dense_expert_grouped(buf, p["gate"], seg, bg, group=group)
-    u = tap.dense_expert_grouped(buf, p["up"], seg, bg, group=group)
+    g = tap.dense_expert_grouped(buf, p["gate"], seg, bg, tok, group=group)
+    u = tap.dense_expert_grouped(buf, p["up"], seg, bg, tok, group=group)
     h = (_act(cfg.act)(g) * u).astype(x.dtype)
-    y_buf = tap.dense_expert_grouped(h, p["down"], seg, bg, group=group)
+    y_buf = tap.dense_expert_grouped(h, p["down"], seg, bg, tok, group=group)
     y_buf = shard(y_buf, "moe_groups", "experts", "capacity", None)
 
     # --- combine: batched gather back (dropped slots → zero pad row) --------

@@ -19,7 +19,7 @@ with models written against the trace-time collector::
 through ``lax.scan`` / ``jax.checkpoint`` boundaries; ``pex.NULL`` is
 the inert tap for serving / oracle paths.
 """
-from repro.core.api import PexResult, clip_coefficients
+from repro.core.passes import PexResult, clip_coefficients
 from repro.core.engine import Engine, infer_batch_size, plain_engine
 from repro.core.taps import (DISABLED, NULL, ExampleLayout, PexSpec, Tap,
                              TokenLayout, checkpoint, scan)

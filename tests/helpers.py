@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.common import ShapeSpec
-from repro.core import api, naive, taps
+from repro.core import naive
+from repro.core.taps import NULL
 from repro.models import registry
 from repro.nn.param import unbox
 
@@ -33,11 +34,10 @@ def smoke_setup(arch_id, B=3, S=8, seed=0, cfg_edit=None):
 
 
 def oracle_sq_norms(aspec, cfg, params, batch, param_filter=None):
-    plain = registry.make_loss_fn(aspec, cfg, taps.DISABLED)
+    plain = registry.make_loss_fn_v2(aspec, cfg)
 
     def single(p, ex):
         b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-        lv, _, _ = plain(p, taps.init_acc(1, taps.DISABLED), b1)
-        return lv[0]
+        return plain(p, b1, NULL)[0][0]
 
     return naive.per_example_sq_norms(single, params, batch, param_filter)

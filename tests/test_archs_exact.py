@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api, taps
-from repro.core.taps import PexSpec
+from repro.core.engine import Engine
+from repro.core.taps import NULL, PexSpec
 from repro.models import registry
 
 from helpers import oracle_sq_norms, scope_filter, smoke_setup
@@ -28,9 +28,9 @@ def _nodrops(cfg):
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_norms_exact_vs_naive(arch):
     aspec, cfg, mod, params, batch = smoke_setup(arch, cfg_edit=_nodrops)
-    pex = PexSpec(enabled=True, method="gram")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
-    res = api.value_and_norms(loss_fn, params, batch, pex, 3)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    res = Engine(PexSpec(enabled=True, method="gram")).value_and_norms(
+        loss_fn, params, batch)
     oracle = oracle_sq_norms(aspec, cfg, params, batch, scope_filter(arch))
     ours = np.asarray(jnp.sum(res.sq_norms, -1))
     np.testing.assert_allclose(ours, np.asarray(oracle), rtol=5e-4)
@@ -39,9 +39,9 @@ def test_norms_exact_vs_naive(arch):
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-9b", "rwkv6-3b"])
 def test_norms_exact_direct_method(arch):
     aspec, cfg, mod, params, batch = smoke_setup(arch, cfg_edit=_nodrops)
-    pex = PexSpec(enabled=True, method="direct")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
-    res = api.value_and_norms(loss_fn, params, batch, pex, 3)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    res = Engine(PexSpec(enabled=True, method="direct")).value_and_norms(
+        loss_fn, params, batch)
     oracle = oracle_sq_norms(aspec, cfg, params, batch, scope_filter(arch))
     np.testing.assert_allclose(np.asarray(jnp.sum(res.sq_norms, -1)),
                                np.asarray(oracle), rtol=5e-4)
@@ -51,16 +51,14 @@ def test_norms_exact_direct_method(arch):
 def test_clipped_grads_exact(arch):
     from repro.core import naive
     aspec, cfg, mod, params, batch = smoke_setup(arch, cfg_edit=_nodrops)
-    pex = PexSpec(enabled=True, method="gram")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     clip = 5.0
-    res = api.clipped_value_and_grads(loss_fn, params, batch, pex, 3, clip)
-    plain = registry.make_loss_fn(aspec, cfg, taps.DISABLED)
+    res = Engine(PexSpec(enabled=True, method="gram"),
+                 clip_norm=clip).clipped_step(loss_fn, params, batch)
 
     def single(p, ex):
         b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-        lv, _, _ = plain(p, taps.init_acc(1, taps.DISABLED), b1)
-        return lv[0]
+        return loss_fn(p, b1, NULL)[0][0]
 
     pg = naive.per_example_grads(single, params, batch)
     # clip coefficients from the *scoped* norms our machinery computes

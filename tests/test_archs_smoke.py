@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api, taps
-from repro.core.taps import PexSpec
+from repro.core.engine import Engine
+from repro.core.taps import ExampleLayout, NULL, PexSpec, Tap
 from repro.models import registry
 
 from helpers import smoke_setup
@@ -17,9 +17,9 @@ ALL_ARCHS = sorted(registry.ARCHS)
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_train_step_smoke(arch):
     aspec, cfg, mod, params, batch = smoke_setup(arch)
-    pex = PexSpec(enabled=True, method="gram")
-    loss_fn = registry.make_loss_fn(aspec, cfg, pex)
-    res = api.value_grads_and_norms(loss_fn, params, batch, pex, 3)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    res = Engine(PexSpec(enabled=True, method="gram")).value_grads_and_norms(
+        loss_fn, params, batch)
     assert res.loss_vec.shape == (3,)
     assert res.sq_norms.shape == (3, 1)
     assert np.isfinite(float(res.loss))
@@ -68,9 +68,9 @@ def test_full_config_matches_assignment(arch):
 def test_instrumentation_off_matches_on_loss(arch):
     """Taps change nothing about the forward computation."""
     aspec, cfg, mod, params, batch = smoke_setup(arch)
-    pex = PexSpec(enabled=True, method="gram")
-    lv_on, _, _ = registry.make_loss_fn(aspec, cfg, pex)(
-        params, taps.init_acc(3, pex), batch)
-    lv_off, _, _ = registry.make_loss_fn(aspec, cfg, taps.DISABLED)(
-        params, taps.init_acc(3, taps.DISABLED), batch)
+    spec = PexSpec(enabled=True, method="gram")
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    tap = Tap(spec, acc=ExampleLayout(spec.n_groups).init(3))
+    lv_on, _ = loss_fn(params, batch, tap)
+    lv_off, _ = loss_fn(params, batch, NULL)
     np.testing.assert_allclose(lv_on, lv_off, rtol=1e-6)

@@ -86,20 +86,21 @@ def test_taps_auto_pallas_hits_direct_kernel():
     """End-to-end: a long-S dense tap with PexSpec(use_pallas, auto)
     reaches the Pallas direct kernel inside the custom_vjp backward,
     and the recovered norms match the hand-computed oracle."""
-    from repro.core import api, taps
+    from repro.core.engine import Engine
+    from repro.core.taps import PexSpec
 
     b, s, pi, po = 2, 512, 32, 48  # crossover ≈ 19 ⇒ direct regime
-    spec = taps.PexSpec(enabled=True, method="auto", use_pallas=True)
+    spec = PexSpec(enabled=True, method="auto", use_pallas=True)
     h = jnp.asarray(RNG.normal(size=(b, s, pi)), jnp.float32)
     w = jnp.asarray(RNG.normal(size=(pi, po)) / np.sqrt(pi), jnp.float32)
 
-    def loss_fn(p, acc, batch):
-        z, acc = taps.dense(batch["h"], p["w"], acc, spec=spec)
-        return jnp.sum(jnp.square(z), axis=(1, 2)), acc, {}
+    def loss_fn(p, batch, tap):
+        z = tap.dense(batch["h"], p["w"])
+        return jnp.sum(jnp.square(z), axis=(1, 2)), {}
 
     with mock.patch.object(ops, "direct_norm",
                            wraps=ops.direct_norm) as hit:
-        res = api.value_and_norms(loss_fn, {"w": w}, {"h": h}, spec, b)
+        res = Engine(spec).value_and_norms(loss_fn, {"w": w}, {"h": h})
         assert hit.call_count >= 1
 
     # oracle: z̄ = 2z per example, s_j = ||h_jᵀ z̄_j||²_F

@@ -1,15 +1,17 @@
 """Core machinery vs the paper-§3 naive oracle: every estimator, every
-tap op, under jit / scan / remat, plus both clipping forms."""
+tap op, under jit / scan / remat, plus both clipping forms — all
+through the v2 Tap collector (the v1 explicit-acc surface is gone)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api, clipping, naive, taps
-from repro.core.taps import PexSpec
+from repro.core import clipping, naive
+from repro.core.engine import Engine
+from repro.core.taps import DISABLED, NULL, PexSpec, Tap
 
 
-def _toy(spec, B=4, S=6, D=8, H=10, V=12, seed=0):
+def _toy(B=4, S=6, D=8, H=10, V=12, seed=0):
     rng = np.random.default_rng(seed)
     params = {
         "emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * 0.3,
@@ -21,48 +23,47 @@ def _toy(spec, B=4, S=6, D=8, H=10, V=12, seed=0):
     batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
              "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
 
-    def loss_fn(p, acc, b):
-        h, acc = taps.embedding(p["emb"], b["ids"], acc, spec=spec)
-        z, acc = taps.dense(h, p["w1"], acc, spec=spec)
-        z, acc = taps.bias_add(z, p["b1"], acc, spec=spec)
+    def loss_fn(p, b, tap):
+        h = tap.embedding(p["emb"], b["ids"])
+        z = tap.dense(h, p["w1"])
+        z = tap.bias_add(z, p["b1"])
         h = jax.nn.gelu(z)
-        h, acc = taps.scale(h, p["g"], acc, spec=spec)
-        logits, acc = taps.dense(h, p["w2"], acc, spec=spec)
+        h = tap.scale(h, p["g"])
+        logits = tap.dense(h, p["w2"])
         logp = jax.nn.log_softmax(logits)
         ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
-        return -jnp.sum(ll, axis=-1), acc, {}
+        return -jnp.sum(ll, axis=-1), {}
 
     return params, batch, loss_fn
 
 
-def _oracle(params, batch, loss_fn, B):
+def _oracle(params, batch, loss_fn):
     def single(p, ex):
         b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-        lv, _, _ = loss_fn(p, taps.init_acc(1, taps.DISABLED), b1)
-        return lv[0]
+        return loss_fn(p, b1, NULL)[0][0]
     return naive.per_example_sq_norms(single, params, batch)
 
 
 @pytest.mark.parametrize("method", ["gram", "direct", "auto"])
 def test_sequence_methods_exact(method):
-    spec = PexSpec(enabled=True, method=method)
-    params, batch, loss_fn = _toy(spec)
-    res = api.value_and_norms(loss_fn, params, batch, spec, 4)
-    oracle = _oracle(params, batch, loss_fn, 4)
+    params, batch, loss_fn = _toy()
+    res = Engine(PexSpec(enabled=True, method=method)).value_and_norms(
+        loss_fn, params, batch)
+    oracle = _oracle(params, batch, loss_fn)
     np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), oracle, rtol=2e-5)
 
 
 def test_gram_pallas_matches():
-    spec = PexSpec(enabled=True, method="gram", use_pallas=True)
-    params, batch, loss_fn = _toy(spec)
-    res = api.value_and_norms(loss_fn, params, batch, spec, 4)
-    oracle = _oracle(params, batch, loss_fn, 4)
+    params, batch, loss_fn = _toy()
+    res = Engine(PexSpec(enabled=True, method="gram",
+                         use_pallas=True)).value_and_norms(
+        loss_fn, params, batch)
+    oracle = _oracle(params, batch, loss_fn)
     np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), oracle, rtol=2e-5)
 
 
 def test_factorized_exact_for_mlp():
     """Paper §4 verbatim is exact in the paper's (rank-1 / MLP) setting."""
-    spec = PexSpec(enabled=True, method="factorized")
     rng = np.random.default_rng(1)
     B, D, H, O = 5, 7, 9, 4
     params = {"w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * 0.4,
@@ -70,24 +71,25 @@ def test_factorized_exact_for_mlp():
     batch = {"x": jnp.asarray(rng.normal(size=(B, D)), jnp.float32),
              "y": jnp.asarray(rng.normal(size=(B, O)), jnp.float32)}
 
-    def loss_fn(p, acc, b):
-        z, acc = taps.dense(b["x"], p["w1"], acc, spec=spec)
-        z2, acc = taps.dense(jnp.tanh(z), p["w2"], acc, spec=spec)
-        return jnp.sum(jnp.square(z2 - b["y"]), -1), acc, {}
+    def loss_fn(p, b, tap):
+        z = tap.dense(b["x"], p["w1"])
+        z2 = tap.dense(jnp.tanh(z), p["w2"])
+        return jnp.sum(jnp.square(z2 - b["y"]), -1), {}
 
-    res = api.value_and_norms(loss_fn, params, batch, spec, B)
-    oracle = _oracle(params, batch, loss_fn, B)
+    res = Engine(PexSpec(enabled=True,
+                         method="factorized")).value_and_norms(
+        loss_fn, params, batch)
+    oracle = _oracle(params, batch, loss_fn)
     np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), oracle, rtol=2e-5)
 
 
 def test_single_pass_grads_match_plain():
-    spec = PexSpec(enabled=True, method="gram")
-    params, batch, loss_fn = _toy(spec)
-    res = api.value_grads_and_norms(loss_fn, params, batch, spec, 4)
+    params, batch, loss_fn = _toy()
+    res = Engine(PexSpec(enabled=True, method="gram")).value_grads_and_norms(
+        loss_fn, params, batch)
 
     def total(p):
-        lv, _, _ = loss_fn(p, taps.init_acc(4, spec), batch)
-        return jnp.sum(lv)
+        return jnp.sum(loss_fn(p, batch, NULL)[0])
 
     g = jax.grad(total)(params)
     for k in params:
@@ -95,16 +97,15 @@ def test_single_pass_grads_match_plain():
 
 
 def test_twopass_clipping_matches_naive():
-    spec = PexSpec(enabled=True, method="gram")
-    params, batch, loss_fn = _toy(spec)
+    params, batch, loss_fn = _toy()
     clip = 0.5
-    res = api.clipped_value_and_grads(loss_fn, params, batch, spec, 4, clip)
-    oracle = _oracle(params, batch, loss_fn, 4)
+    res = Engine(PexSpec(enabled=True, method="gram"),
+                 clip_norm=clip).clipped_step(loss_fn, params, batch)
+    oracle = _oracle(params, batch, loss_fn)
 
     def single(p, ex):
         b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-        lv, _, _ = loss_fn(p, taps.init_acc(1, taps.DISABLED), b1)
-        return lv[0]
+        return loss_fn(p, b1, NULL)[0][0]
 
     pex_g = naive.per_example_grads(single, params, batch)
     c = jnp.minimum(1.0, clip / (jnp.sqrt(oracle) + 1e-6))
@@ -149,7 +150,7 @@ def test_onepass_paper_s6():
 
 
 def test_under_jit_scan_remat():
-    spec = PexSpec(enabled=True, method="gram")
+    from repro import pex as pexns
     rng = np.random.default_rng(2)
     B, S, D, V = 4, 6, 8, 12
     params = {"emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * .3,
@@ -158,42 +159,43 @@ def test_under_jit_scan_remat():
     batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
              "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
 
-    def loss_fn(p, acc, b):
-        h, acc = taps.embedding(p["emb"], b["ids"], acc, spec=spec)
+    def loss_fn(p, b, tap):
+        h = tap.embedding(p["emb"], b["ids"])
 
-        def blk(carry, w):
-            h, acc = carry
-            z, acc = taps.dense(h, w, acc, spec=spec)
-            return (jnp.tanh(z) + h, acc), None
+        def blk(h, w):
+            z = tap.dense(h, w)
+            return jnp.tanh(z) + h, None
 
-        (h, acc), _ = jax.lax.scan(jax.checkpoint(blk), (h, acc), p["ws"])
-        logits, acc = taps.dense(h, p["wo"], acc, spec=spec)
+        h, _ = pexns.scan(blk, h, p["ws"], tap=tap, remat=True)
+        logits = tap.dense(h, p["wo"])
         logp = jax.nn.log_softmax(logits)
         ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
-        return -jnp.sum(ll, -1), acc, {}
+        return -jnp.sum(ll, -1), {}
+
+    eng = Engine(PexSpec(enabled=True, method="gram"))
 
     @jax.jit
     def run(p, b):
-        return api.value_and_norms(loss_fn, p, b, spec, B).sq_norms
+        return eng.value_and_norms(loss_fn, p, b).sq_norms
 
     ours = jnp.sum(run(params, batch), -1)
-    oracle = _oracle(params, batch, loss_fn, B)
+    oracle = _oracle(params, batch, loss_fn)
     np.testing.assert_allclose(ours, oracle, rtol=2e-5)
 
 
 def test_disabled_spec_is_plain():
-    spec = taps.DISABLED
-    params, batch, loss_fn = _toy(spec)
-    lv, acc, _ = loss_fn(params, taps.init_acc(4, spec), batch)
+    params, batch, loss_fn = _toy()
+    lv, aux = loss_fn(params, batch, Tap(DISABLED))
     assert lv.shape == (4,)
-    np.testing.assert_array_equal(acc, jnp.zeros((4, 1)))
+    res = Engine(DISABLED).value_and_norms(loss_fn, params, batch)
+    np.testing.assert_array_equal(res.sq_norms, jnp.zeros((4, 1)))
 
 
 def test_norm_only_pass_value_matches():
-    spec = PexSpec(enabled=True, method="gram")
-    params, batch, loss_fn = _toy(spec)
-    res = api.value_and_norms(loss_fn, params, batch, spec, 4)
-    lv, _, _ = loss_fn(params, taps.init_acc(4, spec), batch)
+    params, batch, loss_fn = _toy()
+    res = Engine(PexSpec(enabled=True, method="gram")).value_and_norms(
+        loss_fn, params, batch)
+    lv, _ = loss_fn(params, batch, NULL)
     np.testing.assert_allclose(res.loss, jnp.sum(lv), rtol=1e-6)
     np.testing.assert_allclose(res.loss_vec, lv, rtol=1e-6)
 
@@ -247,22 +249,21 @@ def test_per_group_norm_columns():
     batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
              "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
 
-    def loss_fn(p, acc, b):
-        h, acc = taps.embedding(p["emb"], b["ids"], acc, spec=spec_g,
-                                group="embed")
-        h, acc = taps.scale(h, p["g"], acc, spec=spec_g, group="norm")
-        logits, acc = taps.dense(h, p["w"], acc, spec=spec_g, group="dense")
+    def loss_fn(p, b, tap):
+        h = tap.embedding(p["emb"], b["ids"], group="embed")
+        h = tap.scale(h, p["g"], group="norm")
+        logits = tap.dense(h, p["w"], group="dense")
         logp = jax.nn.log_softmax(logits)
         ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
-        return -jnp.sum(ll, -1), acc, {}
+        return -jnp.sum(ll, -1), {}
 
-    res = api.value_and_norms(loss_fn, params, batch, spec_g, B)
+    res = Engine(spec_g).value_and_norms(loss_fn, params, batch)
     assert res.sq_norms.shape == (B, 3)
+
     # column-wise oracle via param filters
     def single(p, ex):
         b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
-        lv, _, _ = loss_fn(p, taps.init_acc(1, taps.DISABLED), b1)
-        return lv[0]
+        return loss_fn(p, b1, NULL)[0][0]
     for col, key in [(0, "emb"), (1, "w"), (2, "g")]:
         want = naive.per_example_sq_norms(
             single, params, batch, lambda path, k=key: f"'{k}'" in str(path))
@@ -274,8 +275,6 @@ def test_per_token_norms_exact():
     s_{j,t} = ||h_t||²||z̄_t||² exactly equals the Frobenius norm of
     token t's rank-1 gradient contribution, and the contributions
     reconstruct the full dW."""
-    from repro.core.engine import Engine
-    from repro.core.taps import NULL
     rng = np.random.default_rng(9)
     B, S, D, H = 3, 7, 6, 10
     params = {"w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * .4,

@@ -240,16 +240,103 @@ def test_token_granularity_sums_bias_scale_embed():
     np.testing.assert_allclose(np.asarray(res.sq_norms), want, rtol=1e-4)
 
 
-def test_token_layout_rejects_expert_taps():
+def _ref_moe_token_stats(p, x, cfg):
+    """Dispatch-independent per-token oracle for an MoE layer: the
+    top-k reference forward (no capacity buffers — valid when nothing
+    is dropped) with additive perturbations at every tapped op output;
+    token t's stat is Σ_ops ‖h_t‖²·‖z̄_t‖² with z̄ from plain jax.grad
+    w.r.t. the perturbations. Loss: Σ_j ‖y_j‖²."""
+    from repro.nn.moe import _route
+    from repro.nn.mlp import _act
+    b, s, d = x.shape
+    f = cfg.d_ff
+    e = cfg.n_experts
+
+    def fwd(pert):
+        logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                            p["router"]["w"]) + pert["router"]
+        gates, idx = _route(cfg, logits.reshape(b * s, e))
+        gates = gates.reshape(b, s, cfg.top_k)
+        idx = idx.reshape(b, s, cfg.top_k)
+        y = jnp.zeros_like(x)
+        hs = []
+        for k in range(cfg.top_k):
+            ek = idx[..., k]
+            g = jnp.einsum("bsd,bsdf->bsf", x, p["gate"][ek]) + pert[f"g{k}"]
+            u = jnp.einsum("bsd,bsdf->bsf", x, p["up"][ek]) + pert[f"u{k}"]
+            h = (_act(cfg.act)(g) * u).astype(x.dtype)
+            hs.append(h)
+            yk = jnp.einsum("bsf,bsfd->bsd", h, p["down"][ek]) + pert[f"d{k}"]
+            y = y + gates[..., k, None].astype(x.dtype) * yk
+        return jnp.sum(jnp.square(y)), hs
+
+    pert0 = {"router": jnp.zeros((b, s, e), jnp.float32)}
+    for k in range(cfg.top_k):
+        pert0[f"g{k}"] = jnp.zeros((b, s, f), x.dtype)
+        pert0[f"u{k}"] = jnp.zeros((b, s, f), x.dtype)
+        pert0[f"d{k}"] = jnp.zeros((b, s, d), x.dtype)
+    (total, vjp_fn, hs) = jax.vjp(fwd, pert0, has_aux=True)
+    (zb,) = vjp_fn(jnp.ones(()))
+
+    def ssq(a):
+        return np.sum(np.square(np.asarray(a, np.float64)), -1)
+
+    want = ssq(x.astype(jnp.float32)) * ssq(zb["router"])
+    for k in range(cfg.top_k):
+        want = want + ssq(x) * (ssq(zb[f"g{k}"]) + ssq(zb[f"u{k}"]))
+        want = want + ssq(hs[k]) * ssq(zb[f"d{k}"])
+    return want
+
+
+@pytest.mark.parametrize("groups", [1, 2])
+def test_token_layout_expert_taps_exact(groups):
+    """Engine(granularity='token') over an MoE layer: the (B, S) map
+    must match the dispatch-independent top-k oracle exactly — the
+    capacity shuffle carries token positions through to the expert taps
+    (ROADMAP follow-up; formerly a trace-time rejection)."""
+    from repro.nn.moe import MoeCfg, init_moe, moe
+    from repro.nn.param import unbox
+
+    cfg = MoeCfg(d_model=8, d_ff=6, n_experts=4, top_k=2,
+                 capacity_factor=8.0,  # no drops ⇒ oracle computes the
+                 dispatch_groups=groups)  # same function
+    p = unbox(init_moe(jax.random.PRNGKey(3), cfg, dtype=jnp.float32))
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(B, 6, cfg.d_model)), jnp.float32)
+
+    def loss_fn(params, b, tap):
+        y = moe(params, b["x"], tap=tap, cfg=cfg)
+        return jnp.sum(jnp.square(y), axis=(1, 2)), {}
+
+    eng = Engine(PexSpec(), granularity="token")
+    res = jax.jit(lambda pp, bb: eng.value_and_norms(loss_fn, pp, bb)
+                  .sq_norms)(p, {"x": x})
+    want = _ref_moe_token_stats(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(res), want, rtol=1e-4)
+
+    # the per-example layout on the same model stays exact too (guards
+    # the composite-segment path against the tok threading change)
+    res_ex = Engine(PexSpec()).value_and_norms(loss_fn, p, {"x": x})
+
+    def single(pp, ex):
+        b1 = jax.tree_util.tree_map(lambda v: v[None], ex)
+        return loss_fn(pp, b1, NULL)[0][0]
+
+    oracle = naive.per_example_sq_norms(single, p, {"x": x})
+    np.testing.assert_allclose(np.asarray(jnp.sum(res_ex.sq_norms, -1)),
+                               np.asarray(oracle), rtol=2e-4)
+
+
+def test_token_layout_expert_taps_need_positions():
+    """An expert tap at token granularity without a slot→token table
+    must fail at trace time (the capacity shuffle loses positions)."""
     tap = Tap(PexSpec(), acc=pex.TokenLayout(4).init(2),
               layout=pex.TokenLayout(4))
     x = jnp.zeros((2, 4, 3))
     w = jnp.zeros((2, 3, 5))
     seg = jnp.zeros((2, 4), jnp.int32)
-    with pytest.raises(NotImplementedError):
-        jax.grad(lambda acc: jnp.sum(
-            Tap(PexSpec(), acc=acc, layout=pex.TokenLayout(4))
-            .dense_expert(x, w, seg)))(pex.TokenLayout(4).init(2))
+    with pytest.raises(ValueError, match="token positions"):
+        tap.dense_expert(x, w, seg)
 
 
 # --- validation satellites --------------------------------------------------
@@ -274,16 +361,16 @@ def test_noise_without_rng_raises():
     eng = Engine(PexSpec(), clip_norm=1.0, noise_std=0.5)
     with pytest.raises(ValueError, match="noise_std"):
         eng.clipped_step(_loss_v2, params, batch)
-    from repro.core import api
+    from repro.core import passes
 
-    def v1_loss(p, acc, b):
+    def acc_loss(p, acc, b):
         tap = Tap(PexSpec(), acc=acc)
         lv, aux = _loss_v2(p, b, tap)
         return lv, tap.carry(), aux
 
     with pytest.raises(ValueError, match="noise_std"):
-        api.clipped_value_and_grads(v1_loss, params, batch, PexSpec(), B,
-                                    1.0, noise_std=0.5, noise_rng=None)
+        passes.clipped_value_and_grads(acc_loss, params, batch, PexSpec(), B,
+                                       1.0, noise_std=0.5, noise_rng=None)
 
 
 def test_infer_batch_size():

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import api
+from repro.core.engine import Engine
 from repro.core.taps import PexSpec
 from repro.dist import pex, sharding as shd
 
@@ -32,12 +32,10 @@ def test_sharded_matches_single_device_subprocess():
     assert "PASS: 8-way data-parallel" in r.stdout, r.stdout
 
 
-def _toy_loss(params, acc, batch):
-    from repro.core import taps
-    z, acc = taps.dense(batch["x"], params["w"], acc,
-                        spec=PexSpec(enabled=True), group="all")
+def _toy_loss(params, batch, tap):
+    z = tap.dense(batch["x"], params["w"], group="all")
     loss_vec = jnp.sum(jnp.square(z), axis=tuple(range(1, z.ndim)))
-    return loss_vec, acc, {}
+    return loss_vec, {}
 
 
 def _one_device_mesh():
@@ -46,29 +44,23 @@ def _one_device_mesh():
 
 def test_pex_one_shard_identity():
     """The shard_map path must be exact on a trivial mesh (the in-suite
-    single CPU device), including through the api_for facade."""
+    single CPU device), through the one Engine entry point."""
     rng = np.random.default_rng(0)
     params = {"w": jnp.asarray(rng.normal(size=(6, 4)), jnp.float32)}
     batch = {"x": jnp.asarray(rng.normal(size=(8, 3, 6)), jnp.float32)}
     spec = PexSpec(enabled=True)
-    mesh = _one_device_mesh()
-    ref = api.value_grads_and_norms(_toy_loss, params, batch, spec, 8)
-    papi = pex.api_for(mesh)
-    got = papi.value_grads_and_norms(_toy_loss, params, batch, spec, 8)
+    local = Engine(spec, clip_norm=1.0)
+    sharded = Engine(spec, clip_norm=1.0, mesh=_one_device_mesh())
+    ref = local.value_grads_and_norms(_toy_loss, params, batch)
+    got = sharded.value_grads_and_norms(_toy_loss, params, batch)
     np.testing.assert_allclose(ref.loss, got.loss, rtol=1e-6)
     np.testing.assert_allclose(ref.sq_norms, got.sq_norms, rtol=1e-6)
     np.testing.assert_allclose(ref.grads["w"], got.grads["w"], rtol=1e-6)
 
-    ref_c = api.clipped_value_and_grads(_toy_loss, params, batch, spec,
-                                        8, 1.0)
-    got_c = papi.clipped_value_and_grads(_toy_loss, params, batch, spec,
-                                         8, 1.0)
+    ref_c = local.clipped_step(_toy_loss, params, batch)
+    got_c = sharded.clipped_step(_toy_loss, params, batch)
     np.testing.assert_allclose(ref_c.grads["w"], got_c.grads["w"],
                                rtol=1e-6)
-
-
-def test_api_for_defaults_to_core_api():
-    assert pex.api_for(None) is api
 
 
 def test_local_batch_divisibility():

@@ -139,7 +139,7 @@ def test_elastic_restore_reshard(tmp_path):
 
 def test_flash_attention_wiring_matches_plain():
     """flash=True must not change loss, grads, or per-example norms."""
-    from repro.core import api
+    from repro.core.engine import Engine
     aspec = registry.get("llama3.2-1b")
     cfg = aspec.smoke()
     cfg_f = dataclasses.replace(
@@ -148,10 +148,10 @@ def test_flash_attention_wiring_matches_plain():
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     batch = registry.make_train_batch(aspec, cfg,
                                       ShapeSpec("t", "train", 128, 2))
-    pex = PexSpec(enabled=True, method="gram")
-    r1 = api.value_grads_and_norms(
-        registry.make_loss_fn(aspec, cfg, pex), params, batch, pex, 2)
-    r2 = api.value_grads_and_norms(
-        registry.make_loss_fn(aspec, cfg_f, pex), params, batch, pex, 2)
+    eng = Engine(PexSpec(enabled=True, method="gram"))
+    r1 = eng.value_grads_and_norms(
+        registry.make_loss_fn_v2(aspec, cfg), params, batch)
+    r2 = eng.value_grads_and_norms(
+        registry.make_loss_fn_v2(aspec, cfg_f), params, batch)
     np.testing.assert_allclose(r1.loss, r2.loss, rtol=1e-4)
     np.testing.assert_allclose(r1.sq_norms, r2.sq_norms, rtol=1e-3)
