@@ -10,7 +10,8 @@ from repro.data.pipeline import DataConfig
 from repro.models import registry
 from repro.nn.param import unbox
 from repro.optim import adamw
-from repro.train.trainer import TrainConfig, Trainer
+from repro.train.trainer import (TrainConfig, Trainer,
+                                 consumers_for_mode)
 
 from benchmarks.common import row
 
@@ -26,9 +27,10 @@ def run(steps=30):
     ocfg = adamw.AdamWConfig(lr=3e-3)
 
     def train(mode):
+        cons = consumers_for_mode(mode, 32, candidate_factor=4)
         t = Trainer(loss_fn, params, pex, ocfg,
-                    TrainConfig(mode=mode, steps=steps, log_every=0,
-                                candidate_factor=4), dcfg)
+                    TrainConfig(consumers=cons, steps=steps, log_every=0),
+                    dcfg)
         ms = t.train()
         # per-token loss, averaged over last 5 steps
         return np.mean([m["loss"] for m in ms[-5:]]) / (32 * 32)

@@ -1,0 +1,113 @@
+"""Fused-consumer-plan guard (DESIGN.md §9), pinned by HLO cost.
+
+Asserts the structural claims of the plan layer on compiled programs:
+
+  * ``step(consumers=[])`` lowers to EXACTLY the plain forward — plan
+    analysis with nothing demanded never creates taps;
+  * ``step([Grads()])`` costs no more than plain ``value_and_grad``;
+  * ``step([Clip(C)])`` fits the one-forward budget
+    ``cost(norms pass) + (cost(plain grad) − cost(plain forward))`` —
+    i.e. one tapped forward + one activation backward + ONE reweighted
+    backward, with no second forward (the pre-plan clipped path traced
+    the forward twice);
+  * ``step([Clip, Noise, GNS])`` costs strictly less than the
+    sequential fixed-function calls it replaces (clipped_step +
+    grads+norms pass for GNS), and only ε more than the Clip plan
+    alone — Noise adds O(n_params) normals, GNS O(n_params)
+    reductions, neither a new pass.
+
+Rows are emitted for the BENCH json so the fused/sequential ratio is
+diffable across PRs.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import pex
+from repro.configs.common import ShapeSpec
+from repro.core.engine import Engine
+from repro.core.taps import NULL, PexSpec
+from repro.models import registry
+from repro.nn.param import unbox
+from repro.roofline.hlo import compiled_cost
+
+from benchmarks.common import row, time_fn
+
+EQ_TOL = 1e-6     # "the same program" modulo float accounting noise
+BUDGET_TOL = 0.02  # clip-plan headroom over the 1F+1aB+1wB budget
+EPS_TOL = 0.25    # Noise+GNS epsilon over the Clip plan (O(n_params))
+
+
+def run(b=8, s=64, check=True):
+    aspec = registry.get("llama3.2-1b")
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    batch = registry.make_train_batch(aspec, cfg,
+                                      ShapeSpec("plan", "train", s, b))
+    spec = PexSpec(enabled=True, method="gram")
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    eng = Engine(spec, clip_norm=1.0)
+    key = jax.random.PRNGKey(1)
+    tag = f"b={b},s={s}"
+
+    def cost(fn):
+        return compiled_cost(jax.jit(fn).lower(params).compile())
+
+    def plain_fwd(p):
+        return jnp.sum(loss_fn(p, batch, NULL)[0])
+
+    f_fwd, _ = cost(plain_fwd)
+    f_grad, _ = cost(lambda p: jax.value_and_grad(plain_fwd)(p))
+    f_empty, _ = cost(lambda p: eng.step(loss_fn, p, batch, []).loss)
+    f_gonly, _ = cost(lambda p: eng.step(loss_fn, p, batch,
+                                         [pex.Grads()]).grads)
+    f_norms, _ = cost(lambda p: eng.step(loss_fn, p, batch,
+                                         [pex.Norms()]).sq_norms)
+    f_clip, _ = cost(lambda p: eng.step(loss_fn, p, batch,
+                                        [pex.Clip(1.0)]).grads)
+
+    def fused(p):
+        r = eng.step(loss_fn, p, batch,
+                     consumers=[pex.Clip(1.0), pex.Noise(0.1, key),
+                                pex.GNS()])
+        return r.grads, r.sq_norms, r.gns
+
+    f_fused, _ = cost(fused)
+
+    def sequential(p):
+        r1 = eng.clipped_step(loss_fn, p, batch, rng=key, noise_std=0.1)
+        r2 = eng.value_grads_and_norms(loss_fn, p, batch)
+        return r1.grads, r1.sq_norms, pex.gradient_noise_scale(r2.sq_norms,
+                                                               r2.grads)
+
+    f_seq, _ = cost(sequential)
+
+    budget = f_norms + (f_grad - f_fwd)
+    row(f"plan.fused_step[{tag}]", time_fn(jax.jit(fused), params),
+        f"flops={f_fused:.4g}")
+    row(f"plan.sequential[{tag}]", time_fn(jax.jit(sequential), params),
+        f"flops={f_seq:.4g}")
+    row(f"plan.empty_vs_plain_fwd[{tag}]", 0.0, f"{f_empty / f_fwd:.8f}")
+    row(f"plan.grads_vs_plain_grad[{tag}]", 0.0, f"{f_gonly / f_grad:.8f}")
+    row(f"plan.clip_vs_budget[{tag}]", 0.0, f"{f_clip / budget:.6f}")
+    row(f"plan.fused_vs_sequential[{tag}]", 0.0, f"{f_fused / f_seq:.6f}")
+    if not check or f_fwd <= 0.0:
+        return
+    assert abs(f_empty - f_fwd) <= EQ_TOL * f_fwd, (
+        f"step([]) is not the plain forward: {f_empty} vs {f_fwd}")
+    assert f_gonly <= f_grad * (1 + EQ_TOL), (
+        f"step([Grads()]) exceeds plain value_and_grad: "
+        f"{f_gonly} vs {f_grad}")
+    assert f_clip <= budget * (1 + BUDGET_TOL), (
+        f"Clip plan exceeds the one-forward budget (a second forward "
+        f"crept in?): {f_clip} vs budget {budget}")
+    assert f_fused <= f_clip * (1 + EPS_TOL), (
+        f"Noise+GNS are not folding into the Clip plan: "
+        f"{f_fused} vs {f_clip}")
+    assert f_fused < f_seq, (
+        f"fused plan not cheaper than the sequential calls it replaces: "
+        f"{f_fused} vs {f_seq}")
+
+
+def main(smoke: bool = False):
+    run(b=4, s=16) if smoke else run(b=8, s=64)

@@ -17,20 +17,24 @@ interpret-mode job).
   v2.*         — Engine-facade guard: the v2 path must compile to HLO
                  of the same flop/byte cost as the raw pass layer (no
                  abstraction tax; asserted)
+  plan.*       — fused-consumer-plan guard: one fused step([Clip,
+                 Noise, GNS]) must cost ≤ the sum of the separate-call
+                 passes it replaces, fit the one-forward budget, and
+                 == the plain program with consumers=[] (asserted)
 """
 import argparse
 
 from benchmarks import (bench_clipping, bench_importance, bench_methods,
-                        bench_paper_table, bench_segmented,
+                        bench_paper_table, bench_plan, bench_segmented,
                         bench_v2_facade, common)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", nargs="?", const="BENCH_PR4.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
                     metavar="PATH",
                     help="write results as {name: us_per_call} JSON "
-                         "(default path: BENCH_PR4.json)")
+                         "(default path: BENCH_PR5.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, kernels in interpret mode, no "
                          "timing asserts (the CI job)")
@@ -42,6 +46,7 @@ def main(argv=None) -> None:
         bench_methods.main(smoke=True)
         bench_segmented.main(smoke=True)
         bench_v2_facade.main(smoke=True)
+        bench_plan.main(smoke=True)
     else:
         bench_paper_table.main()
         bench_methods.main()
@@ -49,6 +54,7 @@ def main(argv=None) -> None:
         bench_clipping.main()
         bench_importance.main()
         bench_v2_facade.main()
+        bench_plan.main()
     if args.json:
         common.write_json(args.json)
         print(f"# wrote {args.json}")

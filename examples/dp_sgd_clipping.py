@@ -1,8 +1,9 @@
 """Per-example gradient clipping (paper §6) as DP-SGD: clip every
-example's gradient to C, add Gaussian noise σ·C, train. The clipping
-costs one norms pass + one weighted backward — never materializing a
-single per-example gradient. Everything routes through the pex v2
-``Engine``.
+example's gradient to C, add Gaussian noise σ·C, train — declared as a
+consumer plan that the Engine fuses into one tapped forward, one
+activation backward, and one reweighted backward, with
+gradient-noise-scale telemetry riding along for free (DESIGN.md §9).
+No per-example gradient is ever materialized.
 
     PYTHONPATH=src python examples/dp_sgd_clipping.py
 """
@@ -25,24 +26,37 @@ def main():
     spec = pex.PexSpec(method="auto")
     loss_fn = registry.make_loss_fn_v2(aspec, cfg)
 
+    # the step IS the consumer list: clipping, DP noise, and GNS
+    # telemetry off one fused pass (the trainer injects step rngs)
+    consumers = (pex.Norms(), pex.Clip(0.5), pex.Noise(0.1), pex.GNS())
     t = Trainer(loss_fn, params, spec,
                 adamw.AdamWConfig(lr=1e-3),
-                TrainConfig(mode="clip", clip_norm=0.5, noise_std=0.1,
-                            steps=50, log_every=10),
+                TrainConfig(consumers=consumers, steps=50, log_every=10),
                 DataConfig(vocab=cfg.vocab, seq=64, global_batch=16))
     ms = t.train()
     print(f"\nfinal loss {ms[-1]['loss']:.2f}; "
           f"max per-example norm seen {max(m['norm_max'] for m in ms):.2f} "
-          f"(every example's contribution clipped to 0.5)")
+          f"(every example's contribution clipped to 0.5); "
+          f"B_simple last step {ms[-1]['gns']:.3g}")
 
     # show the §6 semantics directly: post-clip per-example influence
-    eng = pex.Engine(spec, clip_norm=0.5, noise_std=0.1)
+    eng = pex.Engine(spec)
     batch = t.data.batch_at(0)
-    res = eng.clipped_step(loss_fn, t.params, batch,
-                           rng=jax.random.PRNGKey(1))
-    c = pex.clip_coefficients(res.sq_norms, 0.5)
+    res = eng.step(loss_fn, t.params, batch,
+                   consumers=[pex.Clip(0.5),
+                              pex.Noise(0.1, jax.random.PRNGKey(1))])
     print("clip coefficients c_j:",
-          np.array2string(np.asarray(c), precision=3))
+          np.array2string(np.asarray(res.clip_coef), precision=3))
+
+    # per-TOKEN clipping is the same consumer at token granularity:
+    # each token's loss term is reweighted by its own (B, S)
+    # contribution norm — exact through every tap (DESIGN.md §9)
+    res_t = eng.step(loss_fn, t.params, batch,
+                     consumers=[pex.Clip(0.5, granularity="token"),
+                                pex.Grads()])
+    c = np.asarray(res_t.token_weights)
+    print(f"per-token clip: {np.mean(c < 1.0) * 100:.0f}% of tokens "
+          f"clipped (coefficient map shape {c.shape})")
 
 
 if __name__ == "__main__":

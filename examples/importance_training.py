@@ -11,6 +11,7 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro import pex
 from repro.core.taps import PexSpec
 from repro.data.pipeline import DataConfig
 from repro.models import registry
@@ -46,26 +47,36 @@ def main():
     params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
     print(f"params: {count_params(params) / 1e6:.1f}M")
 
-    pex = PexSpec(enabled=True, method="auto")
+    spec = PexSpec(enabled=True, method="auto")
     loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     dcfg = DataConfig(vocab=cfg.vocab, seq=args.seq,
                       global_batch=args.batch, seed=11)
     ocfg = adamw.AdamWConfig(
         lr=1e-3, schedule=linear_warmup_cosine(20, args.steps))
 
+    # consumer plans (DESIGN.md §9): Importance = norms on the 4x pool
+    # → sample ∝ ‖∇L_j‖ → ONE weighted backward on the sub-batch, with
+    # the pool norms reported alongside. The uniform baseline is the
+    # classic grads+norms fused step.
+    plans = {
+        "importance": (pex.Importance(args.batch // 4, smoothing=0.2),
+                       pex.Grads()),
+        "norms": (pex.Norms(), pex.Grads()),
+    }
     results = {}
-    for mode in ("importance", "norms"):
-        t = Trainer(loss_fn, params, pex, ocfg,
-                    TrainConfig(mode=mode, steps=args.steps, log_every=25,
-                                candidate_factor=4,
+    for mode, consumers in plans.items():
+        t = Trainer(loss_fn, params, spec, ocfg,
+                    TrainConfig(consumers=consumers, steps=args.steps,
+                                log_every=25,
                                 ckpt_dir=f"{args.ckpt}_{mode}",
                                 ckpt_every=100),
                     dcfg)
         print(f"\n=== mode={mode} "
               f"({'pool=4x, sample ∝ ‖∇L_j‖' if mode == 'importance' else 'uniform'}) ===")
         ms = t.train()
-        # the importance-weighted loss is an unbiased estimator of the
-        # candidate-POOL sum, so both modes normalize by pool tokens
+        # the fused importance plan reports the exact candidate-POOL
+        # loss (its norms pass computes it), so both modes normalize by
+        # pool tokens
         tok = args.batch * args.seq
         final = np.mean([m["loss"] for m in ms[-10:]]) / tok
         results[mode] = final

@@ -31,9 +31,11 @@ def main():
     eng = pex.Engine(pex.PexSpec(method="auto"))
     loss_fn = registry.make_loss_fn_v2(arch, cfg)
 
-    # ONE backward pass → grads + all per-example squared norms (§4–§5).
-    res = jax.jit(lambda p, b: eng.value_grads_and_norms(
-        loss_fn, p, b))(params, batch)
+    # Consumers declare WHAT you want; the Engine fuses them into the
+    # minimal program — here ONE backward pass yields grads + all
+    # per-example squared norms (§4–§5; DESIGN.md §9).
+    res = jax.jit(lambda p, b: eng.step(
+        loss_fn, p, b, consumers=[pex.Norms(), pex.Grads()]))(params, batch)
     norms = jnp.sqrt(jnp.sum(res.sq_norms, -1))
     print(f"loss = {float(res.loss):.3f}")
     print("per-example ‖∇L_j‖ :", np.array2string(np.asarray(norms),

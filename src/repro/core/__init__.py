@@ -3,22 +3,27 @@ JAX transform family.
 
   taps       — custom_vjp cotangent-accumulator ops + the pex v2 Tap
                collector and accumulator layouts (example / token)
-  engine     — pex v2 Engine: one entry point for local, sharded, and
-               token-level runs (see also the repro.pex namespace)
+  plan       — declarative consumer plans (Norms/Grads/Clip/Noise/
+               Importance/GNS) fused into one pass (DESIGN.md §9)
+  engine     — pex v2 Engine: `step(consumers=[...])` for local,
+               sharded, and token-level runs (see also repro.pex)
   norms      — the estimator zoo (factorized = paper §4, gram, direct,
                segmented-direct for MoE expert buffers, ...)
-  passes     — internal explicit-acc transforms the Engine builds on
-  clipping   — one-pass §6 (perturbation taps; faithful MLP form)
-  importance — Zhao & Zhang importance sampling on top of the norms
+  passes     — internal explicit-acc transforms the plan layer builds on
+  clipping   — Clip-consumer coefficient math + one-pass §6 oracle
+  importance — Zhao & Zhang sampling math behind the Importance consumer
   naive      — paper §3 oracle (vmap-of-grad), used by tests & benchmarks
 """
 from repro.core.taps import (PexSpec, DISABLED, NULL, Tap, ExampleLayout,
                              TokenLayout, scan, checkpoint)
 from repro.core.passes import PexResult, clip_coefficients
+from repro.core.plan import (GNS, Clip, Grads, Importance, Noise, Norms,
+                             StepResult)
 from repro.core.engine import Engine, plain_engine
 
 __all__ = [
     "PexSpec", "DISABLED", "NULL", "Tap", "ExampleLayout", "TokenLayout",
     "scan", "checkpoint", "PexResult", "clip_coefficients", "Engine",
-    "plain_engine",
+    "plain_engine", "Norms", "Grads", "Clip", "Noise", "Importance", "GNS",
+    "StepResult",
 ]

@@ -1,12 +1,24 @@
-"""Paper §6, one-pass form: modify Z̄ and re-run only the last step.
+"""Clipping — the coefficient math behind the ``Clip`` consumer, plus
+the paper's §6 one-pass form kept as the faithful MLP-era oracle.
 
-This is the *faithful* rendering of the paper's extension: after the
-norms are known, each example's Z̄ rows are rescaled in place and the
-final backprop step  W̄⁽ⁱ⁾' = X⁽ⁱ⁾ᵀ Z̄⁽ⁱ⁾'  is recomputed — no second
-backward pass. It requires materializing every (H, Z̄) pair, which is
-exactly what the paper's MLP setting affords; the production path for
-deep scanned LMs is the two-pass form in ``core.passes`` (same result,
-O(batch) memory — see DESIGN.md §2).
+Production clipping is the ``Clip`` consumer of the plan layer
+(``core.plan``): per-example coefficients ``min(1, C/‖g_j‖)`` — or
+per-token coefficients from the (B, S) ``TokenLayout`` map — become
+cotangent seeds of ONE reweighted backward shared with every other
+gradient-demanding consumer (DESIGN.md §9). This module holds the
+coefficient helpers that consumer folds into the weight product
+(``core.passes.clip_coefficients`` for the example form,
+``token_clip_coefficients`` below for the token form).
+
+The rest of the file is paper §6's *one-pass* form: modify Z̄ and
+re-run only the last step. This is the faithful rendering of the
+paper's extension: after the norms are known, each example's Z̄ rows
+are rescaled in place and the final backprop step
+W̄⁽ⁱ⁾' = X⁽ⁱ⁾ᵀ Z̄⁽ⁱ⁾'  is recomputed — no second backward pass. It
+requires materializing every (H, Z̄) pair, which is exactly what the
+paper's MLP setting affords; the production path for deep scanned LMs
+is the two-pass plan form (same result, O(batch) memory — see
+DESIGN.md §2).
 
 Mechanism: "perturbation taps". The model forward is written as
 
@@ -27,6 +39,16 @@ import jax.numpy as jnp
 
 from repro.core.passes import clip_coefficients
 from repro.dist.sharding import shard
+
+
+def token_clip_coefficients(sq_norms: jax.Array, clip_norm: float,
+                            eps: float = 1e-6) -> jax.Array:
+    """c_{j,t} = min(1, C / ‖g_{j,t}‖) elementwise on the (B, S)
+    ``TokenLayout`` norm map — the per-token analogue of
+    ``passes.clip_coefficients`` (which sums group columns; the token
+    map has none to sum)."""
+    return jnp.minimum(1.0, clip_norm /
+                       (jnp.sqrt(sq_norms.astype(jnp.float32)) + eps))
 
 
 def zero_taps(shapes: Dict[str, Tuple[int, ...]], dtype=jnp.float32):

@@ -1,28 +1,34 @@
 """pex v2 ``Engine`` — one entry point for local, sharded, and
-token-level per-example-gradient runs (DESIGN.md §7).
+token-level per-example-gradient runs (DESIGN.md §7, §9).
 
-The Engine is the one public entry point (the old ``core.api`` +
-``dist.pex.api_for`` split is gone): it is constructed once with the
-instrumentation policy and the execution context, and every pass takes
-a **tap-collector loss**
+The Engine is constructed once with the instrumentation policy and the
+execution context, and every pass takes a **tap-collector loss**
 
     loss_fn(params, batch, tap) -> (loss_vec, aux)
 
 (the v2 canonical signature; ``registry.make_loss_fn_v2`` builds one
-for any registered arch). The Engine creates the ``Tap`` inside the
-traced function, infers the batch size from the batch pytree, and
-dispatches the local path (``mesh=None``) or the ``shard_map``
-pipeline (``dist.pex``) — per-example quantities stay batch-sharded,
-only gradients/loss cross devices.
+for any registered arch). The consumer surface is declarative
+(``core.plan``): ``step`` compiles a list of consumers into one fused
+execution plan — a single tapped forward, an activation backward for
+the norms every consumer shares, and at most one reweighted backward
+whose per-example (or per-token) weights are the product of clip
+coefficients, importance weights, and user loss weights:
 
-    eng = Engine(PexSpec(method="auto"), mesh=mesh, clip_norm=1.0)
-    res = eng.value_grads_and_norms(loss_fn, params, batch)
-    res = eng.clipped_step(loss_fn, params, batch, rng=key)   # DP-SGD
-    bs  = eng.gradient_noise_scale(loss_fn, params, batch)    # B_simple
+    eng = Engine(PexSpec(method="auto"), mesh=mesh)
+    res = eng.step(loss_fn, params, batch,
+                   consumers=[pex.Clip(1.0), pex.Noise(0.5, rng),
+                              pex.GNS()])
+    res.grads, res.sq_norms, res.gns   # one compiled program
+
+The four fixed-function methods (``value_and_norms``,
+``value_grads_and_norms``, ``clipped_step``,
+``gradient_noise_scale``) remain as one-line sugar over ``step``.
 
 ``granularity="token"`` swaps the accumulator layout to the per-token
 ``(B, S)`` map (``TokenLayout``) — same taps, same passes, token-level
-norms — replacing the old parallel ``core.token_norms`` stack.
+norms; with a loss that registers its token map (``tap.token_loss``),
+``Clip(C, granularity="token")`` reweights every token's loss term by
+its own contribution norm in the same fused pass.
 """
 from __future__ import annotations
 
@@ -30,8 +36,9 @@ from typing import Callable, Optional, Sequence
 
 import jax
 
-from repro.core import passes
+from repro.core import plan as plan_mod
 from repro.core.passes import PexResult
+from repro.core.plan import StepResult
 from repro.core.taps import DISABLED, ExampleLayout, PexSpec, Tap, TokenLayout
 from repro.dist import pex as _dpex
 
@@ -98,90 +105,105 @@ class Engine:
         self.granularity = granularity
 
     # ------------------------------------------------------------------
-    def _layout(self, batch, seq: Optional[int]):
-        if self.granularity == "token":
-            return TokenLayout(seq if seq is not None
-                               else infer_seq_len(batch))
-        return ExampleLayout(self.spec.n_groups)
-
-    def _adapt(self, loss_fn: Callable, layout) -> Callable:
-        """Tap-collector loss → the explicit-acc loss the pass layer
-        (core.passes) consumes; the Tap is created inside the traced
-        function, per trace."""
-        def v1_loss(params, acc, batch):
+    def _adapt(self, loss_fn: Callable, layout,
+               want_token_map: bool = False) -> Callable:
+        """Tap-collector loss → the explicit-acc loss the plan layer
+        consumes; the Tap is created inside the traced function, per
+        trace. Signature of the result:
+        ``acc_loss(params, acc, batch) -> (loss_vec, token_map|None,
+        acc_out, aux)`` (acc=None ⇒ inert tap ⇒ the plain model)."""
+        def acc_loss(params, acc, batch):
             tap = Tap(self.spec, acc=acc, layout=layout)
             loss_vec, aux = loss_fn(params, batch, tap)
-            return loss_vec, tap.carry(), aux
-        return v1_loss
-
-    def _run(self, fn, loss_fn, params, batch, batch_size, seq, **kw):
-        b = batch_size if batch_size is not None else infer_batch_size(batch)
-        layout = self._layout(batch, seq)
-        v1_loss = self._adapt(loss_fn, layout)
-        if self.mesh is None:
-            return getattr(passes, fn)(v1_loss, params, batch, self.spec, b,
-                                       layout=layout, **kw)
-        return getattr(_dpex, fn)(v1_loss, params, batch, self.spec, b,
-                                  mesh=self.mesh, data_axes=self.data_axes,
-                                  layout=layout, **kw)
+            tok = tap.token_losses() if want_token_map else None
+            return loss_vec, tok, tap.carry(), aux
+        return acc_loss
 
     # ------------------------------------------------------------------
+    def step(self, loss_fn: Callable, params, batch,
+             consumers: Sequence = (), *,
+             loss_weights: Optional[jax.Array] = None,
+             batch_size: Optional[int] = None,
+             seq: Optional[int] = None) -> StepResult:
+        """Compile a consumer list into one fused pass and run it.
+
+        ``consumers`` is any subset of ``{pex.Norms(), pex.Grads(),
+        pex.Clip(C, granularity=...), pex.Noise(σ, rng),
+        pex.Importance(k, ...), pex.GNS()}`` — each a ~30-line
+        declarative object; composition and weight semantics are
+        DESIGN.md §9. ``loss_weights`` is an optional (B,) user weight
+        vector folded into the same reweighted backward. With
+        ``consumers=()`` the program is the plain forward."""
+        plan = plan_mod.analyze(consumers,
+                                engine_granularity=self.granularity)
+        b = batch_size if batch_size is not None else infer_batch_size(batch)
+        if plan.token_norms:
+            layout = TokenLayout(seq if seq is not None
+                                 else infer_seq_len(batch))
+        else:
+            layout = ExampleLayout(self.spec.n_groups)
+        acc_loss = self._adapt(loss_fn, layout,
+                               want_token_map=plan.token_weighted)
+        if self.mesh is None:
+            return plan_mod.execute(plan, acc_loss, params, batch, b,
+                                    layout, loss_weights=loss_weights)
+        return _dpex.plan_step(plan, acc_loss, params, batch, b,
+                               mesh=self.mesh, data_axes=self.data_axes,
+                               layout=layout, loss_weights=loss_weights)
+
+    # -- fixed-function sugar (one line each over `step`) ---------------
     def value_and_norms(self, loss_fn: Callable, params, batch, *,
                         batch_size: Optional[int] = None,
                         seq: Optional[int] = None) -> PexResult:
         """Norms-only pass (paper §5 cheap pass): no ``dW`` chains."""
-        return self._run("value_and_norms", loss_fn, params, batch,
-                         batch_size, seq)
+        r = self.step(loss_fn, params, batch, [plan_mod.Norms()],
+                      batch_size=batch_size, seq=seq)
+        return PexResult(r.loss, r.loss_vec, r.aux, r.sq_norms)
 
     def value_grads_and_norms(self, loss_fn: Callable, params, batch, *,
                               batch_size: Optional[int] = None,
                               seq: Optional[int] = None) -> PexResult:
         """Summed gradients AND all per-example norms in one backward."""
-        return self._run("value_grads_and_norms", loss_fn, params, batch,
-                         batch_size, seq)
+        r = self.step(loss_fn, params, batch,
+                      [plan_mod.Norms(), plan_mod.Grads()],
+                      batch_size=batch_size, seq=seq)
+        return PexResult(r.loss, r.loss_vec, r.aux, r.sq_norms, r.grads)
 
     def clipped_step(self, loss_fn: Callable, params, batch, *,
                      rng: Optional[jax.Array] = None,
                      clip_norm: Optional[float] = None,
                      noise_std: Optional[float] = None,
-                     batch_size: Optional[int] = None) -> PexResult:
+                     batch_size: Optional[int] = None,
+                     seq: Optional[int] = None) -> PexResult:
         """Per-example clipping (paper §6 two-pass ghost form), plus
-        DP-SGD noise when ``noise_std > 0`` (needs ``rng``)."""
-        if self.granularity == "token":
-            raise NotImplementedError(
-                "clipped_step reweights the (B,) per-example losses; "
-                "per-token clip coefficients have no loss to reweight — "
-                "use granularity='example'")
+        DP-SGD noise when ``noise_std > 0`` (needs ``rng``). On a
+        token-granularity engine this is per-token clipping."""
         c = clip_norm if clip_norm is not None else self.clip_norm
         if c is None:
             raise ValueError("clipped_step needs clip_norm: set it on the "
                              "Engine or pass clip_norm= per call")
         sigma = noise_std if noise_std is not None else self.noise_std
-        passes.check_noise_args(sigma, rng)
-        return self._run("clipped_value_and_grads", loss_fn, params, batch,
-                         batch_size, None, clip_norm=c, noise_std=sigma,
-                         noise_rng=rng)
+        consumers = [plan_mod.Clip(c, granularity=self.granularity)]
+        if sigma and sigma > 0.0:
+            # on a token engine, analyze() rejects the defaulted scale
+            # (per-token C is not a per-example sensitivity)
+            consumers.append(plan_mod.Noise(sigma, rng))
+        r = self.step(loss_fn, params, batch, consumers,
+                      batch_size=batch_size, seq=seq)
+        return PexResult(r.loss, r.loss_vec, r.aux, r.sq_norms, r.grads)
 
     def gradient_noise_scale(self, loss_fn: Callable, params, batch, *,
                              batch_size: Optional[int] = None) -> jax.Array:
         """Critical-batch diagnostic B_simple = tr(Σ)/||G||² from one
         grads+norms pass (Gray et al. 2024 / McCandlish et al. 2018)."""
-        if self.granularity == "token":
-            raise NotImplementedError(
-                "gradient_noise_scale needs per-example ||g_j||²; "
-                "per-token norms do not sum to them (cross-token terms) — "
-                "use granularity='example'")
-        b = batch_size if batch_size is not None else infer_batch_size(batch)
-        res = self.value_grads_and_norms(loss_fn, params, batch,
-                                         batch_size=b)
-        return _dpex.gradient_noise_scale(res.sq_norms, res.grads,
-                                          batch_size=b)
+        return self.step(loss_fn, params, batch, [plan_mod.GNS()],
+                         batch_size=batch_size).gns
 
     # ------------------------------------------------------------------
     def tap(self, batch_size: int, *, seq: Optional[int] = None) -> Tap:
         """Standalone live Tap for hand-rolled transforms (the Engine
         passes above create their own)."""
-        layout = self._layout(None, seq) if self.granularity == "token" \
+        layout = TokenLayout(seq) if self.granularity == "token" \
             else ExampleLayout(self.spec.n_groups)
         return Tap(self.spec, acc=layout.init(batch_size), layout=layout)
 

@@ -6,10 +6,17 @@ p_j ∝ ||∇L^(j)||. With the accumulator taps, those norms cost a
 forward + activation-backprop over the candidate pool — no per-example
 gradient materialization — after which we sample a minibatch and apply
 unbiased importance weights 1/(N·p_j).
+
+This module is the sampling math; the fused execution lives in the
+``Importance(k, ...)`` consumer of the plan layer (``core.plan``):
+norms-on-pool → ``sample`` → ``gather_batch`` → the same plan continues
+on the sub-batch, with the importance weights folded into the one
+reweighted backward (DESIGN.md §9).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,18 +28,47 @@ class ImportanceSample(NamedTuple):
     probs: jax.Array       # (N,) the sampling distribution used
 
 
+_DEGENERATE_MSG = ("importance.sampling_distribution: norm pool is "
+                   "all-zero or non-finite; falling back to the uniform "
+                   "distribution")
+
+
 def sampling_distribution(sq_norms: jax.Array, smoothing: float = 0.0,
                           eps: float = 1e-12) -> jax.Array:
     """p_j ∝ ||g_j|| with optional uniform smoothing (stability knob:
-    p ← (1-λ)p + λ/N, keeps weights bounded)."""
+    p ← (1-λ)p + λ/N, keeps weights bounded).
+
+    A degenerate pool — all-zero norms (e.g. a freshly-zeroed model or
+    a fully-masked batch) or any non-finite entry (NaN/inf poisoning) —
+    would yield a zero/NaN distribution that ``jax.random.choice``
+    mishandles; it falls back to the uniform distribution with a
+    warning instead.
+    """
     if sq_norms.ndim == 2:
         sq_norms = jnp.sum(sq_norms, axis=-1)
-    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
-    p = norms / (jnp.sum(norms) + eps)
+    norms = jnp.sqrt(jnp.maximum(sq_norms.astype(jnp.float32), 0.0))
+    total = jnp.sum(norms)
+    n = norms.shape[0]
+    degenerate = jnp.logical_or(jnp.logical_not(jnp.isfinite(total)),
+                                total <= eps)
+    _warn_degenerate(degenerate)
+    p = jnp.where(degenerate, jnp.full_like(norms, 1.0 / n),
+                  norms / jnp.where(degenerate, 1.0, total + eps))
     if smoothing > 0.0:
-        n = sq_norms.shape[0]
         p = (1.0 - smoothing) * p + smoothing / n
     return p
+
+
+def _warn_degenerate(degenerate) -> None:
+    """Python warning on concrete values; a traced debug print (fires
+    only when the predicate is true) under jit."""
+    if not isinstance(degenerate, jax.core.Tracer):
+        if bool(degenerate):
+            warnings.warn(_DEGENERATE_MSG, RuntimeWarning, stacklevel=3)
+        return
+    jax.lax.cond(degenerate,
+                 lambda: jax.debug.print(_DEGENERATE_MSG),
+                 lambda: None)
 
 
 def sample(rng: jax.Array, sq_norms: jax.Array, k: int,
@@ -47,9 +83,36 @@ def sample(rng: jax.Array, sq_norms: jax.Array, k: int,
     return ImportanceSample(idx, w, p)
 
 
-def gather_batch(batch, indices):
-    """Select rows `indices` from every leaf of a batch pytree."""
-    return jax.tree_util.tree_map(lambda x: jnp.take(x, indices, axis=0), batch)
+def gather_batch(batch, indices, batch_size: Optional[int] = None):
+    """Select rows ``indices`` from the leaves of a batch pytree that
+    actually carry the batch axis.
+
+    Scalar and static leaves (mask flags, step counters, python
+    numbers) pass through untouched — blindly ``jnp.take``-ing them
+    crashes or silently corrupts. A leaf is indexed iff it has rank
+    ≥ 1 and its leading extent equals the batch size; when
+    ``batch_size`` is not given it is inferred from the array leaves
+    and must be unambiguous.
+    """
+    def is_arr(x):
+        return hasattr(x, "ndim") and hasattr(x, "shape")
+
+    if batch_size is None:
+        sizes = {x.shape[0] for x in jax.tree_util.tree_leaves(batch)
+                 if is_arr(x) and x.ndim >= 1}
+        if len(sizes) > 1:
+            raise ValueError(
+                f"batch leaves carry different leading extents "
+                f"{sorted(sizes)}; pass batch_size= to pick which leaves "
+                f"hold the example axis")
+        batch_size = sizes.pop() if sizes else None
+
+    def take(x):
+        if is_arr(x) and x.ndim >= 1 and x.shape[0] == batch_size:
+            return jnp.take(x, indices, axis=0)
+        return x
+
+    return jax.tree_util.tree_map(take, batch)
 
 
 def effective_sample_size(weights: jax.Array) -> jax.Array:

@@ -525,7 +525,7 @@ class Tap:
     op is its plain counterpart (``NULL`` is the shared inert tap), so
     the same model code serves uninstrumented.
     """
-    __slots__ = ("spec", "layout", "_acc")
+    __slots__ = ("spec", "layout", "_acc", "_token_losses")
 
     def __init__(self, spec: PexSpec, acc: Optional[jax.Array] = None,
                  layout=None):
@@ -533,6 +533,7 @@ class Tap:
         self.layout = layout if layout is not None \
             else ExampleLayout(spec.n_groups)
         self._acc = acc
+        self._token_losses = None
 
     @property
     def live(self) -> bool:
@@ -547,6 +548,24 @@ class Tap:
     def set_carry(self, acc) -> None:
         """Rebind the accumulator (entering a scan body / after a scan)."""
         self._acc = acc
+
+    # -- per-token loss registration (plan layer) ------------------------
+    def token_loss(self, token_losses: jax.Array) -> jax.Array:
+        """Register the per-token loss map ℓ_{j,t} (shape (B, S, ...))
+        — an identity op. Canonical losses call this on the token
+        losses *before* reducing them to the (B,) loss vector; the
+        plan layer (``core.plan``) then seeds its token-weighted
+        reweighting backward through this output, which is what makes
+        ``Clip(C, granularity="token")`` one fused pass. Inert taps
+        record nothing (``NULL`` stays stateless across traces)."""
+        if self.live:
+            self._token_losses = token_losses if self._token_losses is None \
+                else self._token_losses + token_losses
+        return token_losses
+
+    def token_losses(self) -> Optional[jax.Array]:
+        """The registered per-token loss map for this trace (or None)."""
+        return self._token_losses
 
     # -- ops -------------------------------------------------------------
     def dense(self, h, w, *, group: str = "all",

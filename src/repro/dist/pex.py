@@ -13,7 +13,10 @@ Clipping composes for free: the clip coefficient c_j depends only on
 example j's own norm, so it is computed shard-locally and the clipped
 gradients allreduce exactly like plain ones. DP-SGD noise is added
 once, *after* the psum — adding it per-shard would inflate the noise
-variance by the shard count.
+variance by the shard count. ``plan_step`` extends the same rules to
+whole consumer plans (DESIGN.md §9): the fused norms→weights→
+reweighted-backward core runs per shard inside one region, with only
+the gradient psum crossing devices.
 
 Mesh axes not named in ``data_axes`` (e.g. "model") are left in auto
 mode, so the standard ``("data", "model")`` mesh from ``launch.mesh``
@@ -33,6 +36,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import passes as api
+from repro.core import plan as plan_mod
 from repro.core.passes import PexResult
 from repro.core.taps import PexSpec
 from repro.dist import sharding as shd
@@ -182,30 +186,96 @@ def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,
     return PexResult(loss, loss_vec, {}, sq, grads)
 
 
+# --- consumer plans (DESIGN.md §9) -----------------------------------------
+
+def plan_step(plan, acc_loss: Callable, params, batch, batch_size: int, *,
+              mesh: Optional[Mesh], data_axes: Sequence[str] = ("data",),
+              layout=None, loss_weights=None) -> plan_mod.StepResult:
+    """Run a fused consumer plan under ``shard_map``.
+
+    The single-region core (``plan.run_fused``) executes inside one
+    shard_map body per fused stage: per-example losses, norms, and
+    weights stay batch-sharded (a clip coefficient depends only on its
+    own example's norm), gradients cross devices in ONE psum, and
+    DP-SGD noise / GNS telemetry are applied by the shared driver
+    *after* the region — noise once on the reduced gradient, GNS on
+    the global arrays. ``Importance`` plans run two regions
+    (norms-on-pool, reweighted grads on the gathered sub-batch) with
+    the sampling and the gather on the global arrays between them —
+    both the pool size and ``k`` must divide the data-shard count
+    (``shd.local_batch`` raises otherwise).
+    """
+    if mesh is None:
+        return plan_mod.execute(plan, acc_loss, params, batch, batch_size,
+                                layout, loss_weights=loss_weights)
+    data_axes = _norm_axes(data_axes)
+    dp = P(data_axes)
+    rest = frozenset(mesh.axis_names) - frozenset(data_axes)
+    big_rest = [a for a in rest if mesh.shape[a] > 1]
+    if big_rest:
+        raise NotImplementedError(
+            f"mesh axes {big_rest} (extent > 1) outside data_axes="
+            f"{data_axes}: jax 0.4.x shard_map auto-subgroups crash "
+            f"XLA's SPMD partitioner; run per-example sharding "
+            f"data-parallel-only, or include the axis in data_axes")
+
+    def fused_fn(sub, b, bs, lw):
+        local_b = shd.local_batch(bs, data_axes, mesh)
+        # presence of each optional output is static per sub-plan, so
+        # the shard_map out_specs can be built up front
+        # one sharded output slot per quantity the sub-plan produces
+        # (static per plan): loss_vec, norms, the per-example weight
+        # product, and the clip coefficients — which for a token clip
+        # ARE the token weights, so they share a slot
+        has_sq = sub.needs_norms
+        has_w = lw is not None or (sub.clip is not None and
+                                   sub.clip.granularity == "example")
+        has_cc = sub.clip is not None
+        has_grads = sub.needs_grads
+
+        def run(p, bb, *maybe_lw):
+            with shd.use_rules(None, {}):
+                lv, aux, sq, grads, w, tw, cc = plan_mod.run_fused(
+                    sub, acc_loss, p, bb, local_b, layout,
+                    loss_weights=maybe_lw[0] if maybe_lw else None)
+            _reject_aux(aux)
+            outs = [lv]
+            if has_sq:
+                outs.append(sq)
+            if has_w:
+                outs.append(w)
+            if has_cc:
+                outs.append(cc)
+            if has_grads:
+                outs.append(jax.lax.psum(grads, data_axes))
+            return tuple(outs)
+
+        n_sharded = 1 + has_sq + has_w + has_cc
+        out_specs = tuple([dp] * n_sharded + [P()] * int(has_grads))
+        in_specs = (P(), dp) + ((dp,) if lw is not None else ())
+        args = (params, b) + ((lw,) if lw is not None else ())
+        res = list(shard_map(run, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)(*args))
+
+        lv = res.pop(0)
+        sq = res.pop(0) if has_sq else None
+        w = res.pop(0) if has_w else None
+        cc = res.pop(0) if has_cc else None
+        tw = cc if sub.token_weighted else None
+        grads = res.pop(0) if has_grads else None
+        return lv, {}, sq, grads, w, tw, cc
+
+    return plan_mod.execute(plan, acc_loss, params, batch, batch_size,
+                            layout, loss_weights=loss_weights,
+                            fused_fn=fused_fn)
+
+
 # --- diagnostics -----------------------------------------------------------
 
 def gradient_noise_scale(sq_norms: jax.Array, grads,
                          batch_size: Optional[int] = None) -> jax.Array:
-    """Critical-batch diagnostic B_simple = tr(Σ) / ||G||² from the
-    per-example squared norms the pipeline already computes.
-
-    With s̄ = mean_j ||g_j||² and the batch gradient G_B (= mean of the
-    per-example gradients): E[s̄] = tr(Σ) + ||G||² and
-    E[||G_B||²] = ||G||² + tr(Σ)/B, so both moments are recovered
-    unbiasedly from one step — the large-batch monitoring quantity of
-    Gray et al. (2024) / McCandlish et al. (2018). ``grads`` is the
-    *summed* gradient pytree (what ``value_grads_and_norms`` returns);
-    pass ``batch_size`` when it differs from ``len(sq_norms)``.
-    """
-    if sq_norms.ndim == 2:
-        sq_norms = jnp.sum(sq_norms, axis=-1)
-    b = batch_size if batch_size is not None else sq_norms.shape[0]
-    if b < 2:
-        raise ValueError(f"gradient_noise_scale needs batch >= 2 to "
-                         f"separate the two moments (got {b})")
-    s_bar = jnp.mean(sq_norms.astype(jnp.float32))
-    g_mean_sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                    for g in jax.tree_util.tree_leaves(grads)) / (b * b)
-    tr_sigma = (s_bar - g_mean_sq) * b / (b - 1)
-    norm_g_sq = (b * g_mean_sq - s_bar) / (b - 1)
-    return tr_sigma / jnp.maximum(norm_g_sq, 1e-20)
+    """B_simple = tr(Σ) / ||G||² — see ``core.plan.gradient_noise_scale``
+    (the formula moved there with the plan layer; this re-export keeps
+    the established dist-level entry point)."""
+    return plan_mod.gradient_noise_scale(sq_norms, grads,
+                                         batch_size=batch_size)

@@ -7,8 +7,10 @@ _DOC = """Mesh-sharded per-example pipeline self-check.
 
 Runs the tap-instrumented smoke model through a local ``Engine`` and
 again through a mesh-bound ``Engine`` (the dist.pex shard_map pipeline)
-on a ≥2-way data-parallel host mesh, and asserts the two agree: scalar loss, (B,) per-example losses, (B, G) squared norms,
-summed gradients, and clipped gradients (f32 allclose). This is the
+on a ≥2-way data-parallel host mesh, and asserts the two agree: scalar
+loss, (B,) per-example losses, (B, G) squared norms, summed gradients,
+clipped gradients, and a fused consumer plan (Clip + GNS — DESIGN.md
+§9) (f32 allclose). This is the
 repo's executable proof that the per-example-norm math composes with
 batch sharding — run it on any box:
 
@@ -103,6 +105,22 @@ def run(arch: str = "llama3.2-1b", batch: int = 8, seq: int = 8,
             jax.tree_util.tree_leaves_with_path(ref_c.grads),
             jax.tree_util.tree_leaves_with_path(got_c.grads)):
         check("clipped" + jax.tree_util.keystr(pa), a, b, rtol=1e-4,
+              atol=1e-5)
+
+    # fused consumer plan (DESIGN.md §9): clip + GNS in one pass must
+    # also agree across the shard boundary
+    from repro.core import plan as plan_mod
+    cons = [plan_mod.Clip(clip), plan_mod.GNS()]
+    ref_p = jax.jit(lambda p, b: eng_local.step(
+        loss_fn, p, b, consumers=cons))(params, batch_data)
+    got_p = jax.jit(lambda p, b: eng_mesh.step(
+        loss_fn, p, b, consumers=cons))(params, batch_data)
+    check("plan gns", ref_p.gns, got_p.gns, rtol=1e-4)
+    check("plan weights", ref_p.weights, got_p.weights, rtol=1e-4)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(ref_p.grads),
+            jax.tree_util.tree_leaves_with_path(got_p.grads)):
+        check("plan" + jax.tree_util.keystr(pa), a, b, rtol=1e-4,
               atol=1e-5)
 
     gns = pex.gradient_noise_scale(got.sq_norms, got.grads)

@@ -31,6 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.common import SHAPES, ShapeSpec
 from repro.core.engine import Engine
+from repro.core.plan import Grads, Norms
 from repro.core.taps import PexSpec
 from repro.dist import sharding as shd
 from repro.launch.mesh import make_production_mesh
@@ -223,10 +224,16 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
             # accumulated program's total
             n_micro = aspec.train_microbatches if cfg_override is None else 1
 
+            # the train cell lowers the fused consumer plan (norms +
+            # grads in one backward); pex_on=False disables the spec,
+            # so the norms land as zeros and the program is the plain
+            # step (the DCE property)
+            consumers = [Norms(), Grads()]
+
             def train_step(params, opt_state, batch):
                 if pex_spmd or n_micro == 1:
-                    r = eng.value_grads_and_norms(loss_fn, params, batch,
-                                                  batch_size=b)
+                    r = eng.step(loss_fn, params, batch,
+                                 consumers=consumers, batch_size=b)
                     grads, loss, sq = r.grads, r.loss, r.sq_norms
                 else:
                     mb = b // n_micro
@@ -237,8 +244,8 @@ def lower_cell(arch_id: str, shape_name: str, mesh, multi_pod: bool, *,
                         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
                     def micro(gsum, mbatch):
-                        r = eng.value_grads_and_norms(loss_fn, params,
-                                                      mbatch, batch_size=mb)
+                        r = eng.step(loss_fn, params, mbatch,
+                                     consumers=consumers, batch_size=mb)
                         gsum = jax.tree_util.tree_map(
                             lambda a, g: a + g.astype(jnp.float32),
                             gsum, r.grads)

@@ -19,7 +19,7 @@ from repro.models import registry
 from repro.nn.param import count_params, unbox
 from repro.optim import adamw
 from repro.optim.schedule import linear_warmup_cosine
-from repro.train.trainer import TrainConfig, Trainer
+from repro.train.trainer import TrainConfig, Trainer, consumers_for_mode
 
 
 def main():
@@ -33,6 +33,8 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--clip-norm", type=float, default=1.0)
+    ap.add_argument("--noise-std", type=float, default=0.0,
+                    help="DP-SGD noise multiplier for --mode clip")
     ap.add_argument("--pex-method", default="auto")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -56,11 +58,16 @@ def main():
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(model_parallel=1)
         print(f"data-parallel over {mesh.shape['data']} devices")
+    # the CLI still speaks the legacy mode names; the trainer itself
+    # runs declarative consumer plans (DESIGN.md §9)
+    consumers = consumers_for_mode(args.mode, args.batch,
+                                   clip_norm=args.clip_norm,
+                                   noise_std=args.noise_std)
     trainer = Trainer(
         loss_fn, params, pex,
         adamw.AdamWConfig(lr=args.lr,
                           schedule=linear_warmup_cosine(10, args.steps)),
-        TrainConfig(mode=args.mode, clip_norm=args.clip_norm,
+        TrainConfig(consumers=consumers,
                     steps=args.steps, ckpt_dir=args.ckpt_dir, seed=args.seed),
         DataConfig(vocab=cfg.vocab, seq=args.seq, global_batch=args.batch,
                    seed=args.seed),

@@ -116,7 +116,7 @@ def loss_fn(params, batch, tap: Tap, *, cfg: Rwkv6Config):
     x = layernorm(params["ln_f"], x, tap=tap)
     logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     loss_vec = per_example_xent(logits, batch["labels"],
-                                batch.get("label_mask"))
+                                batch.get("label_mask"), tap=tap)
     return loss_vec, {}
 
 

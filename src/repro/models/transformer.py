@@ -238,7 +238,7 @@ def loss_fn(params, batch, tap: Tap, *, cfg: LMConfig):
                 plus_one=cfg.rms_plus_one)
     logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     loss_vec = per_example_xent(logits, batch["labels"],
-                                batch.get("label_mask"))
+                                batch.get("label_mask"), tap=tap)
     return loss_vec, {}
 
 

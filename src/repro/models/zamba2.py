@@ -195,7 +195,7 @@ def loss_fn(params, batch, tap: Tap, *, cfg: Zamba2Config):
     x = rmsnorm(params["ln_f"], x, tap=tap, eps=cfg.rms_eps)
     logits = lm_head(params["head"], x, tap=tap, cfg=cfg.vocab_cfg)
     loss_vec = per_example_xent(logits, batch["labels"],
-                                batch.get("label_mask"))
+                                batch.get("label_mask"), tap=tap)
     return loss_vec, {}
 
 

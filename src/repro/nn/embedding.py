@@ -69,10 +69,20 @@ def lm_head(p, x, *, tap: Tap, cfg: VocabCfg,
 
 
 def per_example_xent(logits: jax.Array, labels: jax.Array,
-                     label_mask: Optional[jax.Array] = None) -> jax.Array:
-    """Σ_t CE per example (paper §2: L^(j) over example j's targets)."""
+                     label_mask: Optional[jax.Array] = None,
+                     tap: Optional[Tap] = None) -> jax.Array:
+    """Σ_t CE per example (paper §2: L^(j) over example j's targets).
+
+    With a ``tap``, the (B, S) per-token loss map is registered via
+    ``tap.token_loss`` before the reduction — an identity op that lets
+    the plan layer seed its token-weighted reweighting backward
+    (``Clip(C, granularity="token")``, DESIGN.md §9) through it.
+    """
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     if label_mask is not None:
         ll = ll * label_mask
-    return -jnp.sum(ll, axis=tuple(range(1, ll.ndim)))
+    token_losses = -ll
+    if tap is not None:
+        token_losses = tap.token_loss(token_losses)
+    return jnp.sum(token_losses, axis=tuple(range(1, token_losses.ndim)))

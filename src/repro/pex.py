@@ -1,11 +1,13 @@
-"""``repro.pex`` — the pex v2 public namespace (DESIGN.md §7).
+"""``repro.pex`` — the pex v2 public namespace (DESIGN.md §7, §9).
 
 Declare instrumentation once, tap anywhere:
 
     from repro import pex
 
     eng = pex.Engine(pex.PexSpec(method="auto"), mesh=mesh)
-    res = eng.value_grads_and_norms(loss_fn, params, batch)
+    res = eng.step(loss_fn, params, batch,
+                   consumers=[pex.Clip(1.0), pex.Noise(0.5, rng),
+                              pex.GNS()])
 
 with models written against the trace-time collector::
 
@@ -13,19 +15,32 @@ with models written against the trace-time collector::
         h = tap.embedding(params["emb"], batch["ids"])
         z = tap.dense(h, params["w"], group="mlp")
         ...
-        return loss_vec, {}
+        token_losses = tap.token_loss(token_losses)   # (B, S) map
+        return jnp.sum(token_losses, -1), {}
+
+Consumers (``pex.Norms`` / ``Grads`` / ``Clip`` / ``Noise`` /
+``Importance`` / ``GNS``) compose declaratively: ``Engine.step``
+compiles any subset into one fused pass — a single tapped forward, one
+activation backward for the shared norms, and at most one reweighted
+backward (DESIGN.md §9). The fixed-function methods
+(``value_and_norms`` et al.) remain as sugar.
 
 ``pex.scan`` / ``pex.checkpoint`` thread the collector's accumulator
 through ``lax.scan`` / ``jax.checkpoint`` boundaries; ``pex.NULL`` is
 the inert tap for serving / oracle paths.
 """
 from repro.core.passes import PexResult, clip_coefficients
+from repro.core.clipping import token_clip_coefficients
 from repro.core.engine import Engine, infer_batch_size, plain_engine
+from repro.core.plan import (GNS, Clip, Grads, Importance, Noise, Norms,
+                             StepResult, gradient_noise_scale)
 from repro.core.taps import (DISABLED, NULL, ExampleLayout, PexSpec, Tap,
                              TokenLayout, checkpoint, scan)
 
 __all__ = [
     "Engine", "PexResult", "PexSpec", "Tap", "TokenLayout", "ExampleLayout",
     "DISABLED", "NULL", "scan", "checkpoint", "clip_coefficients",
-    "infer_batch_size", "plain_engine",
+    "token_clip_coefficients", "infer_batch_size", "plain_engine",
+    "Norms", "Grads", "Clip", "Noise", "Importance", "GNS", "StepResult",
+    "gradient_noise_scale",
 ]

@@ -1,14 +1,19 @@
-"""Training loop with the paper's machinery as first-class step modes.
+"""Training loop over declarative consumer plans (DESIGN.md §9).
 
-Step modes:
-  plain       — standard grads (taps DCE'd away; zero overhead)
-  norms       — grads + per-example norms in one backward (paper §4/§5)
-  clip        — per-example clipping, two-pass ghost form (paper §6)
-  importance  — norms on a candidate pool → sample ∝ norm → weighted
-                step on the subsample (Zhao & Zhang; paper §1)
+The old fixed step modes (plain / norms / clip / importance) are gone
+as trainer concepts: a step is described by a **consumer list** and the
+pex v2 ``Engine.step`` compiles it into one fused pass —
 
-Every per-example pass routes through one pex v2 ``Engine``
-(``core.engine``): the Trainer takes the v2 canonical loss
+    TrainConfig(consumers=(pex.Clip(1.0), pex.Noise(0.1), pex.GNS()))
+
+runs DP-SGD clipping, noise, and gradient-noise-scale telemetry off a
+single tapped forward + activation backward + one reweighted backward.
+``Noise``/``Importance`` entries may leave ``rng=None``; the trainer
+splits its step key into them. ``consumers_for_mode`` maps the legacy
+mode names (the launcher CLI still speaks them) onto consumer lists.
+
+Every per-example pass routes through one ``Engine`` (``core.engine``):
+the Trainer takes the v2 canonical loss
 ``loss_fn(params, batch, tap) -> (loss_vec, aux)`` and the Engine
 dispatches single-device vs. the data-parallel shard_map pipeline from
 its mesh.
@@ -21,14 +26,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.core import importance, taps
+from repro.core import plan as plan_mod
 from repro.core.engine import Engine
 from repro.core.taps import PexSpec
 from repro.data.pipeline import DataConfig, PipelineState, SyntheticLM
@@ -38,11 +42,9 @@ from repro.optim import adamw, grad_compress
 
 @dataclasses.dataclass
 class TrainConfig:
-    mode: str = "norms"          # plain | norms | clip | importance
-    clip_norm: float = 1.0
-    noise_std: float = 0.0       # >0 + clip ⇒ DP-SGD
-    candidate_factor: int = 4    # importance: pool = factor × batch
-    importance_smoothing: float = 0.2
+    #: the consumer plan for every step; None ⇒ (Norms(), Grads()) —
+    #: the classic grads+norms-in-one-backward step
+    consumers: Optional[Sequence] = None
     microbatches: int = 1
     compress_grads: bool = False
     steps: int = 100
@@ -50,6 +52,48 @@ class TrainConfig:
     ckpt_every: int = 50
     ckpt_dir: Optional[str] = None
     seed: int = 0
+
+
+def consumers_for_mode(mode: str, batch_size: int, *,
+                       clip_norm: float = 1.0, noise_std: float = 0.0,
+                       candidate_factor: int = 4,
+                       importance_smoothing: float = 0.2) -> Tuple:
+    """Legacy mode names → consumer lists (the launcher CLI contract).
+
+    plain       — gradient only (no instrumentation traced at all)
+    norms       — grads + per-example norms in one backward (§4/§5)
+    clip        — per-example clipping (§6); + Noise when noise_std>0
+    importance  — norms on the pool → sample batch/candidate_factor
+                  examples ∝ norm → weighted step on the sub-batch
+    """
+    if mode == "plain":
+        return (plan_mod.Grads(),)
+    if mode == "norms":
+        return (plan_mod.Norms(), plan_mod.Grads())
+    if mode == "clip":
+        cons = [plan_mod.Norms(), plan_mod.Clip(clip_norm)]
+        if noise_std > 0.0:
+            cons.append(plan_mod.Noise(noise_std))
+        return tuple(cons)
+    if mode == "importance":
+        return (plan_mod.Importance(batch_size // candidate_factor,
+                                    smoothing=importance_smoothing),
+                plan_mod.Grads())
+    raise ValueError(f"unknown mode {mode!r}; have plain/norms/clip/"
+                     f"importance (or pass TrainConfig(consumers=...))")
+
+
+def _inject_rngs(consumers: Sequence, rng: jax.Array):
+    """Fill rng=None slots of Noise/Importance consumers from the step
+    key (one split per slot, order-stable)."""
+    need = [c for c in consumers
+            if isinstance(c, (plan_mod.Noise, plan_mod.Importance))
+            and c.rng is None]
+    if not need:
+        return tuple(consumers)
+    keys = iter(jax.random.split(rng, len(need)))
+    return tuple(dataclasses.replace(c, rng=next(keys)) if c in need else c
+                 for c in consumers)
 
 
 class Trainer:
@@ -64,10 +108,16 @@ class Trainer:
         self.loss_fn = loss_fn
         self.cfg = train_cfg
         self.opt_cfg = opt_cfg
-        spec = pex_spec if train_cfg.mode != "plain" else taps.DISABLED
-        self.engine = Engine(spec, mesh=mesh, data_axes=data_axes,
-                             clip_norm=train_cfg.clip_norm,
-                             noise_std=train_cfg.noise_std)
+        self.consumers = tuple(train_cfg.consumers) \
+            if train_cfg.consumers is not None \
+            else (plan_mod.Norms(), plan_mod.Grads())
+        if not any(isinstance(c, (plan_mod.Grads, plan_mod.Clip,
+                                  plan_mod.Noise, plan_mod.GNS))
+                   for c in self.consumers):
+            raise ValueError(
+                f"training needs a gradient-producing consumer "
+                f"(Grads/Clip/Noise/GNS); got {self.consumers}")
+        self.engine = Engine(pex_spec, mesh=mesh, data_axes=data_axes)
         self.data = SyntheticLM(data_cfg)
         self.params = params
         self.opt_state = adamw.init(params)
@@ -82,79 +132,38 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _build_step(self):
-        cfg, loss_fn, opt_cfg = self.cfg, self.loss_fn, self.opt_cfg
-        eng = self.engine
+        loss_fn, opt_cfg = self.loss_fn, self.opt_cfg
+        consumers, eng = self.consumers, self.engine
 
         @jax.jit
-        def plain_or_norms(params, opt_state, err, batch):
-            res = eng.value_grads_and_norms(loss_fn, params, batch)
+        def step_fn(params, opt_state, err, batch, rng):
+            res = eng.step(loss_fn, params, batch,
+                           consumers=_inject_rngs(consumers, rng))
             grads = res.grads
             if err is not None:
                 grads, err = grad_compress.compress_decompress(grads, err)
-            params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
-            return params, opt_state, err, res.loss, res.sq_norms
+            params, opt_state = adamw.update(opt_cfg, opt_state, params,
+                                             grads)
+            return params, opt_state, err, res
 
-        @jax.jit
-        def clip_step(params, opt_state, err, batch, rng):
-            res = eng.clipped_step(loss_fn, params, batch, rng=rng)
-            grads = res.grads
-            if err is not None:
-                grads, err = grad_compress.compress_decompress(grads, err)
-            params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
-            return params, opt_state, err, res.loss, res.sq_norms
-
-        @partial(jax.jit, static_argnames=("take",))
-        def importance_select(params, batch, rng, take):
-            res = eng.value_and_norms(loss_fn, params, batch)
-            samp = importance.sample(rng, res.sq_norms, take,
-                                     smoothing=cfg.importance_smoothing)
-            return samp.indices, samp.weights, res.sq_norms
-
-        @jax.jit
-        def weighted_step(params, opt_state, err, batch, weights):
-            def f(p):
-                lv, _ = loss_fn(p, batch, taps.NULL)
-                return jnp.sum(weights * lv), lv
-
-            (loss, lv), grads = jax.value_and_grad(f, has_aux=True)(params)
-            if err is not None:
-                grads, err = grad_compress.compress_decompress(grads, err)
-            params, opt_state = adamw.update(opt_cfg, opt_state, params, grads)
-            return params, opt_state, err, loss
-
-        return {"plain": plain_or_norms, "norms": plain_or_norms,
-                "clip": clip_step, "importance":
-                (importance_select, weighted_step)}[cfg.mode]
+        return step_fn
 
     # ------------------------------------------------------------------
     def run_step(self, batch) -> Dict:
-        b = batch["ids"].shape[0]
         t0 = time.perf_counter()
-        if self.cfg.mode in ("plain", "norms"):
-            (self.params, self.opt_state, self.err, loss,
-             sq) = self._step_fn(self.params, self.opt_state, self.err,
-                                 batch)
-        elif self.cfg.mode == "clip":
-            self.rng, sub = jax.random.split(self.rng)
-            (self.params, self.opt_state, self.err, loss,
-             sq) = self._step_fn(self.params, self.opt_state, self.err,
-                                 batch, sub)
-        else:  # importance
-            select, wstep = self._step_fn
-            self.rng, sub = jax.random.split(self.rng)
-            take = b // self.cfg.candidate_factor
-            idx, w, sq = select(self.params, batch, sub, take)
-            sub_batch = importance.gather_batch(batch, idx)
-            (self.params, self.opt_state, self.err,
-             loss) = wstep(self.params, self.opt_state, self.err,
-                           sub_batch, w)
-        jax.block_until_ready(loss)
+        self.rng, sub = jax.random.split(self.rng)
+        (self.params, self.opt_state, self.err,
+         res) = self._step_fn(self.params, self.opt_state, self.err,
+                              batch, sub)
+        jax.block_until_ready(res.loss)
         dt = time.perf_counter() - t0
-        m = {"step": self.step, "loss": float(loss), "time_s": dt}
-        if self.cfg.mode in ("norms", "clip"):
-            sqs = jnp.sum(sq, -1)
+        m = {"step": self.step, "loss": float(res.loss), "time_s": dt}
+        if res.sq_norms is not None:
+            sqs = jnp.sum(res.sq_norms, -1)
             m["norm_mean"] = float(jnp.mean(jnp.sqrt(sqs)))
             m["norm_max"] = float(jnp.max(jnp.sqrt(sqs)))
+        if res.gns is not None:
+            m["gns"] = float(res.gns)
         self.metrics.append(m)
         return m
 

@@ -31,7 +31,8 @@ def _toy(seed=0):
 
 
 def _loss_v2(p, b, tap):
-    """v2 canonical loss: every op registers with the tap collector."""
+    """v2 canonical loss: every op registers with the tap collector,
+    and the per-token loss map with ``tap.token_loss`` (plan layer)."""
     h = tap.embedding(p["emb"], b["ids"])
     z = tap.dense(h, p["w1"])
     z = tap.bias_add(z, p["b1"])
@@ -40,7 +41,8 @@ def _loss_v2(p, b, tap):
     logits = tap.dense(h, p["w2"])
     logp = jax.nn.log_softmax(logits)
     ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
-    return -jnp.sum(ll, axis=-1), {}
+    token_losses = tap.token_loss(-ll)
+    return jnp.sum(token_losses, axis=-1), {}
 
 
 def _oracle(params, batch, param_filter=None):
@@ -384,8 +386,10 @@ def test_engine_granularity_validation():
         Engine(PexSpec(), granularity="word")
     params, batch = _toy()
     eng = Engine(PexSpec(), granularity="token", clip_norm=1.0)
-    with pytest.raises(NotImplementedError):
-        eng.clipped_step(_loss_v2, params, batch)
+    # clipped_step on a token engine IS per-token clipping now
+    # (tests/test_plan.py checks it against the per-token oracle)
+    res = eng.clipped_step(_loss_v2, params, batch)
+    assert res.sq_norms.shape == (B, S)
     with pytest.raises(NotImplementedError):
         eng.gradient_noise_scale(_loss_v2, params, batch)
 

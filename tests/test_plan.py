@@ -1,0 +1,512 @@
+"""Consumer plans (core.plan / Engine.step, DESIGN.md §9): the fused
+pass vs the naive per-example oracle and vs sequential Engine calls;
+per-token Clip vs a naive per-token oracle (transformer-style toy and
+MoE expert taps), local and under shard_map; plan-analysis validation;
+and the importance satellites (degenerate pools, scalar-leaf gather)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import pex
+from repro.core import importance, naive
+from repro.core import plan as plan_mod
+from repro.core.engine import Engine
+from repro.core.passes import add_grad_noise
+from repro.core.taps import NULL, PexSpec
+from repro.dist import sharding as shd
+
+B, S, D, H, V = 4, 6, 8, 10, 12
+
+
+def _toy(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {
+        "emb": jnp.asarray(rng.normal(size=(V, D)), jnp.float32) * 0.3,
+        "w1": jnp.asarray(rng.normal(size=(D, H)), jnp.float32) * 0.3,
+        "b1": jnp.asarray(rng.normal(size=(H,)), jnp.float32) * 0.1,
+        "g": jnp.asarray(rng.normal(size=(H,)), jnp.float32) * 0.5 + 1.0,
+        "w2": jnp.asarray(rng.normal(size=(H, V)), jnp.float32) * 0.3,
+    }
+    batch = {"ids": jnp.asarray(rng.integers(0, V, size=(B, S))),
+             "labels": jnp.asarray(rng.integers(0, V, size=(B, S)))}
+    return params, batch
+
+
+def _loss_v2(p, b, tap):
+    """Canonical v2 loss incl. the per-token loss-map registration.
+    The cumsum mixes tokens (a stand-in for attention), so per-token
+    loss reweighting is NOT per-token gradient scaling — the oracle
+    must differentiate the reweighted loss like the plan does."""
+    h = tap.embedding(p["emb"], b["ids"])
+    z = tap.dense(h, p["w1"])
+    z = tap.bias_add(z, p["b1"])
+    h = jax.nn.gelu(jnp.cumsum(z, axis=1))
+    h = tap.scale(h, p["g"])
+    logits = tap.dense(h, p["w2"])
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, b["labels"][..., None], -1)[..., 0]
+    token_losses = tap.token_loss(-ll)
+    return jnp.sum(token_losses, axis=-1), {}
+
+
+def _single(p, ex):
+    b1 = jax.tree_util.tree_map(lambda x: x[None], ex)
+    return _loss_v2(p, b1, NULL)[0][0]
+
+
+def _one_device_mesh():
+    return shd.make_mesh((1, 1), ("data", "model"))
+
+
+# --- the fused pass vs oracles and vs sequential calls ----------------------
+
+def test_fused_clip_noise_gns_exact_vs_naive_oracle():
+    """step([Clip, Noise, GNS]) == naive per-example clip + the same
+    noise + the GNS formula on the clipped estimator's quantities."""
+    params, batch = _toy()
+    clip, sigma = 0.5, 0.3
+    key = jax.random.PRNGKey(1)
+    eng = Engine(PexSpec(method="gram"))
+    res = jax.jit(lambda p, b: eng.step(
+        _loss_v2, p, b, consumers=[pex.Clip(clip), pex.Noise(sigma, key),
+                                   pex.GNS()]))(params, batch)
+
+    sq = naive.per_example_sq_norms(_single, params, batch)
+    np.testing.assert_allclose(jnp.sum(res.sq_norms, -1), sq, rtol=2e-5)
+    pg = naive.per_example_grads(_single, params, batch)
+    c = jnp.minimum(1.0, clip / (jnp.sqrt(sq) + 1e-6))
+    np.testing.assert_allclose(res.clip_coef, c, rtol=1e-5)
+    np.testing.assert_allclose(res.weights, c, rtol=1e-5)
+    want = {k: jnp.einsum("b,b...->...", c, pg[k]) for k in params}
+    gns_want = plan_mod.gradient_noise_scale(
+        jnp.square(c) * sq, want, batch_size=B)
+    np.testing.assert_allclose(res.gns, gns_want, rtol=1e-4)
+    want = add_grad_noise(want, sigma, clip, key)   # same key ⇒ same noise
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], want[k], rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_fused_matches_sequential_engine_calls():
+    """The fused plan returns exactly what the separate fixed-function
+    calls it replaces return (clipped grads, norms, GNS)."""
+    params, batch = _toy()
+    eng = Engine(PexSpec(method="gram"), clip_norm=0.5)
+    fused = jax.jit(lambda p, b: eng.step(
+        _loss_v2, p, b, consumers=[pex.Clip(0.5), pex.GNS()]))(params, batch)
+    seq_clip = eng.clipped_step(_loss_v2, params, batch)
+    np.testing.assert_allclose(fused.sq_norms, seq_clip.sq_norms, rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(fused.grads[k], seq_clip.grads[k],
+                                   rtol=1e-5, atol=1e-7)
+    # sequential GNS runs on the UNWEIGHTED estimator; reproduce the
+    # fused (clipped-estimator) number from the sequential outputs
+    gns_seq = plan_mod.gradient_noise_scale(
+        seq_clip.sq_norms, seq_clip.grads, batch_size=B,
+        weights=pex.clip_coefficients(seq_clip.sq_norms, 0.5))
+    np.testing.assert_allclose(fused.gns, gns_seq, rtol=1e-5)
+    # and the pure-GNS plan equals the old two-call recipe exactly
+    gn = eng.value_grads_and_norms(_loss_v2, params, batch)
+    np.testing.assert_allclose(
+        eng.gradient_noise_scale(_loss_v2, params, batch),
+        pex.gradient_noise_scale(gn.sq_norms, gn.grads), rtol=1e-6)
+
+
+def test_user_loss_weights_fold_into_the_backward():
+    params, batch = _toy()
+    w = jnp.asarray([0.5, 2.0, 1.0, 0.25], jnp.float32)
+    eng = Engine(PexSpec(method="gram"))
+    res = eng.step(_loss_v2, params, batch, [pex.Grads()], loss_weights=w)
+    want = jax.grad(lambda p: jnp.sum(w * _loss_v2(p, batch, NULL)[0]))(
+        params)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], want[k], rtol=1e-5,
+                                   atol=1e-7)
+    # ...and multiply with clip coefficients in one reweighted backward
+    res_c = eng.step(_loss_v2, params, batch, [pex.Clip(0.5)],
+                     loss_weights=w)
+    c = pex.clip_coefficients(res_c.sq_norms, 0.5)
+    np.testing.assert_allclose(res_c.weights, w * c, rtol=1e-5)
+
+
+def test_empty_plan_is_the_plain_forward():
+    params, batch = _toy()
+    res = Engine(PexSpec()).step(_loss_v2, params, batch, [])
+    assert res.grads is None and res.sq_norms is None and res.gns is None
+    np.testing.assert_allclose(
+        res.loss, jnp.sum(_loss_v2(params, batch, NULL)[0]), rtol=1e-6)
+
+
+def test_importance_plan_continues_on_the_subbatch():
+    """Importance + Grads: norms on the pool, sample, one weighted
+    backward on the gathered sub-batch — equal to the hand-rolled
+    select → gather → weighted-step recipe with the same key."""
+    params, batch = _toy()
+    key = jax.random.PRNGKey(3)
+    eng = Engine(PexSpec(method="gram"))
+    res = jax.jit(lambda p, b: eng.step(
+        _loss_v2, p, b, consumers=[pex.Importance(2, smoothing=0.2, rng=key),
+                                   pex.Grads()]))(params, batch)
+    pool = eng.value_and_norms(_loss_v2, params, batch)
+    samp = importance.sample(key, pool.sq_norms, 2, smoothing=0.2)
+    np.testing.assert_array_equal(res.sample.indices, samp.indices)
+    np.testing.assert_allclose(res.sq_norms, pool.sq_norms, rtol=1e-6)
+    np.testing.assert_allclose(
+        res.sub_sq_norms, jnp.take(pool.sq_norms, samp.indices, axis=0),
+        rtol=1e-6)
+    sub = importance.gather_batch(batch, samp.indices)
+    want = jax.grad(lambda p: jnp.sum(
+        samp.weights * _loss_v2(p, sub, NULL)[0]))(params)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], want[k], rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_importance_composes_with_clip():
+    """Clip coefficients on the sub-batch come from the GATHERED pool
+    norms (no second norms pass); the backward seed is their product
+    with the importance weights."""
+    params, batch = _toy()
+    key = jax.random.PRNGKey(5)
+    eng = Engine(PexSpec(method="gram"))
+    res = jax.jit(lambda p, b: eng.step(
+        _loss_v2, p, b, consumers=[pex.Importance(3, rng=key),
+                                   pex.Clip(0.5)]))(params, batch)
+    pool = eng.value_and_norms(_loss_v2, params, batch)
+    samp = importance.sample(key, pool.sq_norms, 3)
+    sub_sq = jnp.take(pool.sq_norms, samp.indices, axis=0)
+    c = pex.clip_coefficients(sub_sq, 0.5)
+    np.testing.assert_allclose(res.weights, samp.weights * c, rtol=1e-5)
+    sub = importance.gather_batch(batch, samp.indices)
+    want = jax.grad(lambda p: jnp.sum(
+        samp.weights * c * _loss_v2(p, sub, NULL)[0]))(params)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], want[k], rtol=1e-4,
+                                   atol=1e-6)
+
+
+# --- per-token clipping -----------------------------------------------------
+
+def _token_oracle(params, batch, clip):
+    """Naive per-token oracle: contribution norms from perturbation
+    taps on the total loss (independent of TokenLayout), then the
+    gradient of the explicitly token-weighted loss."""
+    def f(tp):
+        h = params["emb"][batch["ids"]] + tp["emb"]
+        z = h @ params["w1"] + tp["d1"]
+        zb = z + params["b1"] + tp["bias"]
+        hg = jax.nn.gelu(jnp.cumsum(zb, axis=1))
+        hs = hg * params["g"] + tp["scale"]
+        logits = hs @ params["w2"] + tp["d2"]
+        logp = jax.nn.log_softmax(logits)
+        ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                                 -1)[..., 0]
+        return -jnp.sum(ll), (h, hg, hs)
+
+    tp0 = {"emb": jnp.zeros((B, S, D)), "d1": jnp.zeros((B, S, H)),
+           "bias": jnp.zeros((B, S, H)), "scale": jnp.zeros((B, S, H)),
+           "d2": jnp.zeros((B, S, V))}
+    zb = jax.grad(lambda tp: f(tp)[0])(tp0)
+    _, (h, hg, hs) = f(tp0)
+
+    def ssq(a):
+        return np.sum(np.square(np.asarray(a, np.float64)), -1)
+
+    s_tok = (ssq(zb["emb"]) + ssq(h) * ssq(zb["d1"]) + ssq(zb["bias"])
+             + ssq(np.asarray(zb["scale"]) * np.asarray(hg))
+             + ssq(hs) * ssq(zb["d2"]))
+    c = jnp.asarray(np.minimum(1.0, clip / (np.sqrt(s_tok) + 1e-6)),
+                    jnp.float32)
+    grads = jax.grad(lambda p: jnp.sum(
+        c * (-jnp.take_along_axis(
+            jax.nn.log_softmax(
+                ((jax.nn.gelu(jnp.cumsum(
+                    p["emb"][batch["ids"]] @ p["w1"] + p["b1"], axis=1))
+                  * p["g"]) @ p["w2"])),
+            batch["labels"][..., None], -1)[..., 0])))(params)
+    return s_tok, c, grads
+
+
+def test_token_clip_exact_vs_naive_per_token_oracle():
+    params, batch = _toy()
+    clip = 0.05
+    eng = Engine(PexSpec(method="gram"))
+    res = jax.jit(lambda p, b: eng.step(
+        _loss_v2, p, b,
+        consumers=[pex.Clip(clip, granularity="token"), pex.Grads(),
+                   pex.Norms()]))(params, batch)
+    s_tok, c, grads = _token_oracle(params, batch, clip)
+    assert res.sq_norms.shape == (B, S)
+    np.testing.assert_allclose(np.asarray(res.sq_norms), s_tok, rtol=1e-4)
+    np.testing.assert_allclose(res.token_weights, c, rtol=1e-4)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], grads[k], rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_token_clip_sharded_matches_local():
+    params, batch = _toy()
+    cons = [pex.Clip(0.05, granularity="token"), pex.Grads()]
+    local = jax.jit(lambda p, b: Engine(PexSpec(method="gram")).step(
+        _loss_v2, p, b, consumers=cons))(params, batch)
+    mesh = jax.jit(lambda p, b: Engine(
+        PexSpec(method="gram"), mesh=_one_device_mesh()).step(
+        _loss_v2, p, b, consumers=cons))(params, batch)
+    np.testing.assert_allclose(mesh.sq_norms, local.sq_norms, rtol=1e-6)
+    np.testing.assert_allclose(mesh.token_weights, local.token_weights,
+                               rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(mesh.grads[k], local.grads[k],
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_token_clip_via_token_engine_sugar():
+    """Engine(granularity='token').clipped_step IS per-token clipping
+    now (formerly a NotImplementedError)."""
+    params, batch = _toy()
+    eng = Engine(PexSpec(method="gram"), granularity="token",
+                 clip_norm=0.05)
+    res = eng.clipped_step(_loss_v2, params, batch)
+    _, _, grads = _token_oracle(params, batch, 0.05)
+    for k in params:
+        np.testing.assert_allclose(res.grads[k], grads[k], rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_token_clip_needs_a_registered_token_map():
+    params, batch = _toy()
+
+    def no_map_loss(p, b, tap):
+        lv, aux = _loss_v2(p, b, tap)
+        tap._token_losses = None   # simulate a loss that never registers
+        return lv, aux
+
+    eng = Engine(PexSpec(method="gram"))
+    with pytest.raises(ValueError, match="token_loss"):
+        eng.step(no_map_loss, params, batch,
+                 [pex.Clip(0.1, granularity="token")])
+
+
+def test_token_clip_moe_exact():
+    """Per-token clipping through MoE expert taps: the (B, S) norms
+    from the dispatch-position-carrying expert taps drive weights for
+    the token-reweighted backward; oracle = dispatch-independent top-k
+    reference (norms) + plain grad of the token-weighted loss."""
+    from repro.nn.moe import MoeCfg, init_moe, moe
+    from repro.nn.param import unbox
+    from test_pex_v2 import _ref_moe_token_stats
+
+    cfg = MoeCfg(d_model=8, d_ff=6, n_experts=4, top_k=2,
+                 capacity_factor=8.0)   # no drops ⇒ oracle is exact
+    p = unbox(init_moe(jax.random.PRNGKey(3), cfg, dtype=jnp.float32))
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(B, 6, cfg.d_model)), jnp.float32)
+
+    def loss_fn(params, b, tap):
+        y = moe(params, b["x"], tap=tap, cfg=cfg)
+        token_losses = tap.token_loss(jnp.sum(jnp.square(y), axis=-1))
+        return jnp.sum(token_losses, axis=-1), {}
+
+    clip = 0.5
+    eng = Engine(PexSpec(), granularity="token")
+    res = jax.jit(lambda pp, bb: eng.step(
+        loss_fn, pp, bb, consumers=[pex.Clip(clip, granularity="token"),
+                                    pex.Grads()]))(p, {"x": x})
+    s_tok = _ref_moe_token_stats(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(res.sq_norms), s_tok, rtol=1e-4)
+    c = jnp.asarray(np.minimum(1.0, clip / (np.sqrt(s_tok) + 1e-6)),
+                    jnp.float32)
+
+    def weighted(pp):
+        y = moe(pp, x, tap=NULL, cfg=cfg)
+        return jnp.sum(c * jnp.sum(jnp.square(y), axis=-1))
+
+    want = jax.grad(weighted)(p)
+    flat_r = jax.tree_util.tree_leaves_with_path(res.grads)
+    flat_w = dict(jax.tree_util.tree_leaves_with_path(want))
+    for path, g in flat_r:
+        np.testing.assert_allclose(g, flat_w[path], rtol=2e-4, atol=1e-6,
+                                   err_msg=str(path))
+
+
+def test_token_clip_real_transformer():
+    """Per-token clipping on a registry transformer (scan + remat +
+    attention): the reweighted backward must equal the plain gradient
+    of the explicitly token-weighted loss — constructed independently
+    by feeding the clip coefficients in as ``label_mask`` (which
+    multiplies the per-token losses) on the uninstrumented model."""
+    from repro.configs.common import ShapeSpec
+    from repro.models import registry
+    from repro.nn.param import unbox
+
+    aspec = registry.get("llama3.2-1b")
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = unbox(mod.init(jax.random.PRNGKey(0), cfg))
+    batch = registry.make_train_batch(aspec, cfg,
+                                      ShapeSpec("t", "train", 8, 3))
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+
+    clip = 1.0
+    eng = Engine(PexSpec(method="gram"))
+    res = jax.jit(lambda p, b: eng.step(
+        loss_fn, p, b, consumers=[pex.Clip(clip, granularity="token"),
+                                  pex.Grads()]))(params, batch)
+    c = res.token_weights
+    assert c.shape == (3, 8) and float(jnp.min(c)) < 1.0
+
+    masked = dict(batch, label_mask=c)
+    want = jax.grad(lambda p: jnp.sum(
+        loss_fn(p, masked, NULL)[0]))(params)
+    flat_r = jax.tree_util.tree_leaves_with_path(res.grads)
+    flat_w = dict(jax.tree_util.tree_leaves_with_path(want))
+    for path, g in flat_r:
+        np.testing.assert_allclose(g, flat_w[path], rtol=2e-4, atol=1e-6,
+                                   err_msg=str(path))
+
+
+# --- sharded plans ----------------------------------------------------------
+
+def test_fused_plan_sharded_matches_local():
+    params, batch = _toy()
+    key = jax.random.PRNGKey(7)
+    cons = [pex.Clip(0.5), pex.Noise(0.2, key), pex.GNS(), pex.Norms()]
+    local = jax.jit(lambda p, b: Engine(PexSpec(method="gram")).step(
+        _loss_v2, p, b, consumers=cons))(params, batch)
+    mesh = jax.jit(lambda p, b: Engine(
+        PexSpec(method="gram"), mesh=_one_device_mesh()).step(
+        _loss_v2, p, b, consumers=cons))(params, batch)
+    np.testing.assert_allclose(mesh.loss, local.loss, rtol=1e-6)
+    np.testing.assert_allclose(mesh.sq_norms, local.sq_norms, rtol=1e-6)
+    np.testing.assert_allclose(mesh.gns, local.gns, rtol=1e-5)
+    for k in params:
+        np.testing.assert_allclose(mesh.grads[k], local.grads[k],
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_importance_plan_sharded_matches_local():
+    params, batch = _toy()
+    key = jax.random.PRNGKey(9)
+    cons = [pex.Importance(2, rng=key), pex.Grads()]
+    local = jax.jit(lambda p, b: Engine(PexSpec(method="gram")).step(
+        _loss_v2, p, b, consumers=cons))(params, batch)
+    mesh = jax.jit(lambda p, b: Engine(
+        PexSpec(method="gram"), mesh=_one_device_mesh()).step(
+        _loss_v2, p, b, consumers=cons))(params, batch)
+    np.testing.assert_array_equal(mesh.sample.indices, local.sample.indices)
+    for k in params:
+        np.testing.assert_allclose(mesh.grads[k], local.grads[k],
+                                   rtol=1e-5, atol=1e-7)
+
+
+# --- plan analysis validation -----------------------------------------------
+
+def test_plan_validation():
+    params, batch = _toy()
+    eng = Engine(PexSpec())
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.step(_loss_v2, params, batch, [pex.Norms(), pex.Norms()])
+    with pytest.raises(TypeError, match="unknown consumer"):
+        eng.step(_loss_v2, params, batch, ["clip"])
+    with pytest.raises(ValueError, match="granularity"):
+        pex.Clip(1.0, granularity="word")
+    with pytest.raises(ValueError, match="noise_std"):
+        eng.step(_loss_v2, params, batch, [pex.Clip(1.0), pex.Noise(0.5)])
+    with pytest.raises(ValueError, match="scale"):
+        eng.step(_loss_v2, params, batch,
+                 [pex.Noise(0.5, jax.random.PRNGKey(0))])
+    with pytest.raises(NotImplementedError, match="GNS"):
+        eng.step(_loss_v2, params, batch,
+                 [pex.Clip(1.0, granularity="token"), pex.GNS()])
+    with pytest.raises(NotImplementedError, match="Importance"):
+        eng.step(_loss_v2, params, batch,
+                 [pex.Clip(1.0, granularity="token"),
+                  pex.Importance(2, rng=jax.random.PRNGKey(0))])
+    tok_eng = Engine(PexSpec(), granularity="token")
+    with pytest.raises(ValueError, match="token"):
+        tok_eng.step(_loss_v2, params, batch, [pex.Clip(1.0)])
+    # Noise must not default its DP sensitivity to a token Clip's C
+    # (per-token clipping bounds each token term, not the example)
+    with pytest.raises(ValueError, match="sensitivity"):
+        eng.step(_loss_v2, params, batch,
+                 [pex.Clip(1.0, granularity="token"),
+                  pex.Noise(0.5, jax.random.PRNGKey(0))])
+    # Importance without a key fails at analysis, not inside jax.random
+    with pytest.raises(ValueError, match="rng"):
+        eng.step(_loss_v2, params, batch, [pex.Importance(2), pex.Grads()])
+    # standalone Noise with an explicit scale is fine
+    res = eng.step(_loss_v2, params, batch,
+                   [pex.Noise(0.1, jax.random.PRNGKey(0), scale=1.0)])
+    assert res.grads is not None
+
+
+def test_trainer_accepts_gns_as_gradient_consumer():
+    """(Norms, GNS) is a valid training plan — GNS demands the
+    gradient, so the fused step produces one for the optimizer."""
+    from repro.data.pipeline import DataConfig
+    from repro.optim import adamw
+    from repro.train.trainer import TrainConfig, Trainer
+    t = Trainer(_loss_v2, _toy()[0], PexSpec(method="gram"),
+                adamw.AdamWConfig(lr=1e-3),
+                TrainConfig(consumers=(pex.Norms(), pex.GNS()), steps=2,
+                            log_every=0),
+                DataConfig(vocab=V, seq=S, global_batch=B))
+    ms = t.train()
+    assert len(ms) == 2 and np.isfinite(ms[-1]["gns"])
+
+
+# --- importance satellites --------------------------------------------------
+
+def test_sampling_distribution_degenerate_pool_falls_back_uniform():
+    n = 8
+    with pytest.warns(RuntimeWarning, match="uniform"):
+        p = importance.sampling_distribution(jnp.zeros((n,)))
+    np.testing.assert_allclose(p, np.full(n, 1.0 / n), rtol=1e-6)
+    with pytest.warns(RuntimeWarning, match="uniform"):
+        p = importance.sampling_distribution(
+            jnp.asarray([1.0, np.nan, 2.0, 1.0]))
+    np.testing.assert_allclose(p, np.full(4, 0.25), rtol=1e-6)
+    # under jit: same numbers (the warning becomes a debug print)
+    p = jax.jit(importance.sampling_distribution)(jnp.zeros((n,)))
+    np.testing.assert_allclose(p, np.full(n, 1.0 / n), rtol=1e-6)
+    # sampling from the fallback works
+    s = importance.sample(jax.random.PRNGKey(0), jnp.zeros((n, 2)), 3)
+    assert s.indices.shape == (3,)
+    assert np.all(np.isfinite(np.asarray(s.weights)))
+    # healthy pools are untouched
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        p = importance.sampling_distribution(jnp.asarray([1.0, 4.0]))
+    np.testing.assert_allclose(p, [1.0 / 3.0, 2.0 / 3.0], rtol=1e-6)
+
+
+def test_gather_batch_skips_scalar_and_static_leaves():
+    batch = {"ids": jnp.arange(12).reshape(4, 3),
+             "step": jnp.asarray(7),           # 0-d array
+             "flag": True,                      # python scalar
+             "temp": 0.5}
+    out = importance.gather_batch(batch, jnp.asarray([2, 0]))
+    np.testing.assert_array_equal(out["ids"], [[6, 7, 8], [0, 1, 2]])
+    assert int(out["step"]) == 7 and out["step"].ndim == 0
+    assert out["flag"] is True and out["temp"] == 0.5
+
+    # a non-batch vector leaf (wrong leading extent) is ambiguous
+    # without an explicit batch_size...
+    amb = {"ids": jnp.zeros((4, 3)), "scale": jnp.ones((5,))}
+    with pytest.raises(ValueError, match="batch_size"):
+        importance.gather_batch(amb, jnp.asarray([0]))
+    # ...and passes through untouched with one
+    out = importance.gather_batch(amb, jnp.asarray([1, 3]), batch_size=4)
+    assert out["ids"].shape == (2, 3)
+    assert out["scale"].shape == (5,)
+
+
+def test_step_result_fields_default_none():
+    params, batch = _toy()
+    res = Engine(PexSpec()).step(_loss_v2, params, batch, [pex.Norms()])
+    assert res.grads is None and res.gns is None and res.sample is None
+    assert res.weights is None and res.token_weights is None
+    assert res.sq_norms.shape == (B, 1)

@@ -91,7 +91,7 @@ def test_trainer_runs_on_mesh():
     loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     dcfg = DataConfig(vocab=cfg.vocab, seq=8, global_batch=4)
     ocfg = adamw.AdamWConfig(lr=1e-3)
-    tcfg = TrainConfig(mode="norms", steps=2, log_every=0,
+    tcfg = TrainConfig(steps=2, log_every=0,
                        ckpt_every=10 ** 9)
 
     t_ref = Trainer(loss_fn, params, spec, ocfg, tcfg, dcfg)

@@ -129,7 +129,7 @@ def test_checkpoint_resume_is_bit_deterministic(tmp_path):
 
     def mk(steps, ckpt_dir, ckpt_every):
         return Trainer(loss_fn, params, pex, ocfg,
-                       TrainConfig(mode="norms", steps=steps, log_every=0,
+                       TrainConfig(steps=steps, log_every=0,
                                    ckpt_every=ckpt_every, ckpt_dir=ckpt_dir),
                        dcfg)
 

@@ -15,12 +15,12 @@ from repro.models import registry
 from repro.nn.param import unbox
 from repro.optim import adamw
 from repro.serve.engine import Engine, Request
-from repro.train.trainer import TrainConfig, Trainer
+from repro.train.trainer import TrainConfig, Trainer, consumers_for_mode
 
 from helpers import smoke_setup
 
 
-def _trainer(mode, steps=6, arch="llama3.2-1b", **kw):
+def _trainer(consumers, steps=6, arch="llama3.2-1b", **kw):
     aspec = registry.get(arch)
     cfg = aspec.smoke()
     mod = registry.family_module(aspec)
@@ -28,13 +28,14 @@ def _trainer(mode, steps=6, arch="llama3.2-1b", **kw):
     pex = PexSpec(enabled=True, method="gram")
     loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     return Trainer(loss_fn, params, pex, adamw.AdamWConfig(lr=1e-3),
-                   TrainConfig(mode=mode, steps=steps, log_every=0, **kw),
+                   TrainConfig(consumers=consumers, steps=steps,
+                               log_every=0, **kw),
                    DataConfig(vocab=cfg.vocab, seq=16, global_batch=8))
 
 
 @pytest.mark.parametrize("mode", ["plain", "norms", "clip", "importance"])
 def test_trainer_modes_reduce_loss_and_run(mode):
-    t = _trainer(mode, steps=8)
+    t = _trainer(consumers_for_mode(mode, 8, clip_norm=1.0), steps=8)
     ms = t.train()
     assert len(ms) == 8
     assert all(np.isfinite(m["loss"]) for m in ms)
@@ -42,8 +43,20 @@ def test_trainer_modes_reduce_loss_and_run(mode):
         assert all(m["norm_mean"] > 0 for m in ms)
 
 
+def test_trainer_consumer_plan_step():
+    """A composed plan (clip + noise + GNS telemetry) trains and logs
+    its consumers' outputs from ONE fused step."""
+    from repro import pex as P
+    t = _trainer((P.Norms(), P.Clip(1.0), P.Noise(0.05), P.GNS()), steps=4)
+    ms = t.train()
+    assert all(np.isfinite(m["loss"]) for m in ms)
+    assert all(np.isfinite(m["gns"]) for m in ms)
+    assert all(m["norm_mean"] > 0 for m in ms)
+
+
 def test_trainer_grad_compression_runs():
-    t = _trainer("norms", steps=4, compress_grads=True)
+    t = _trainer(consumers_for_mode("norms", 8), steps=4,
+                 compress_grads=True)
     ms = t.train()
     assert np.isfinite(ms[-1]["loss"])
 
