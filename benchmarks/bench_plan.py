@@ -32,9 +32,14 @@ from repro.roofline.hlo import compiled_cost
 
 from benchmarks.common import row, time_fn
 
-EQ_TOL = 1e-6     # "the same program" modulo float accounting noise
-BUDGET_TOL = 0.02  # clip-plan headroom over the 1F+1aB+1wB budget
-EPS_TOL = 0.25    # Noise+GNS epsilon over the Clip plan (O(n_params))
+# the invariant arithmetic lives in repro.analysis.plan_invariants
+# (pexlint pass 2); the bench measures once and calls the checks
+from repro.analysis.plan_invariants import (BUDGET_TOL, EPS_TOL, EQ_TOL,
+                                            backward_budget,
+                                            check_backward_budget,
+                                            check_empty_plan,
+                                            check_fused_epsilon,
+                                            check_grads_plan)
 
 
 def run(b=8, s=64, check=True):
@@ -82,7 +87,7 @@ def run(b=8, s=64, check=True):
 
     f_seq, _ = cost(sequential)
 
-    budget = f_norms + (f_grad - f_fwd)
+    budget = backward_budget(f_norms, f_grad, f_fwd)
     row(f"plan.fused_step[{tag}]", time_fn(jax.jit(fused), params),
         f"flops={f_fused:.4g}")
     row(f"plan.sequential[{tag}]", time_fn(jax.jit(sequential), params),
@@ -93,17 +98,10 @@ def run(b=8, s=64, check=True):
     row(f"plan.fused_vs_sequential[{tag}]", 0.0, f"{f_fused / f_seq:.6f}")
     if not check or f_fwd <= 0.0:
         return
-    assert abs(f_empty - f_fwd) <= EQ_TOL * f_fwd, (
-        f"step([]) is not the plain forward: {f_empty} vs {f_fwd}")
-    assert f_gonly <= f_grad * (1 + EQ_TOL), (
-        f"step([Grads()]) exceeds plain value_and_grad: "
-        f"{f_gonly} vs {f_grad}")
-    assert f_clip <= budget * (1 + BUDGET_TOL), (
-        f"Clip plan exceeds the one-forward budget (a second forward "
-        f"crept in?): {f_clip} vs budget {budget}")
-    assert f_fused <= f_clip * (1 + EPS_TOL), (
-        f"Noise+GNS are not folding into the Clip plan: "
-        f"{f_fused} vs {f_clip}")
+    check_empty_plan(f_empty, f_fwd)
+    check_grads_plan(f_gonly, f_grad)
+    check_backward_budget(f_clip, f_norms, f_grad, f_fwd)
+    check_fused_epsilon(f_fused, f_clip)
     assert f_fused < f_seq, (
         f"fused plan not cheaper than the sequential calls it replaces: "
         f"{f_fused} vs {f_seq}")

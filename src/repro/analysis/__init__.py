@@ -1,0 +1,30 @@
+"""pexlint — static analysis over traced jaxprs and launch contracts
+(DESIGN.md §10).
+
+Three passes, none of which executes or compiles model code:
+
+  * ``coverage`` — tap-coverage verification: walk the traced loss
+    jaxpr from every trainable leaf toward the loss and prove each
+    parameter is tapped, declared frozen, or explicitly allowlisted;
+  * ``plan_invariants`` — the zero-overhead / one-forward-budget
+    claims as reusable HLO-cost analyzers (these DO compile — the one
+    opt-in exception, shared with tests and benches);
+  * ``launch`` — kernel-launch validation of every Pallas schedule a
+    model's tap sites imply, against the declared ``LaunchContract``s.
+
+``verify.verify`` (surfaced as ``Engine.verify``) composes them;
+``python -m repro.analysis`` lints every registered model.
+"""
+from repro.analysis.coverage import (AnalysisError, CoverageReport,
+                                     LeafReport, TapSite, trace_coverage)
+from repro.analysis.launch import (LaunchReport, contracts_for_sites,
+                                   production_cases, validate_contracts,
+                                   validate_sites)
+from repro.analysis.verify import VerifyReport, verify
+
+__all__ = [
+    "AnalysisError", "CoverageReport", "LeafReport", "TapSite",
+    "trace_coverage", "LaunchReport", "contracts_for_sites",
+    "production_cases", "validate_contracts", "validate_sites",
+    "VerifyReport", "verify",
+]

@@ -1,0 +1,146 @@
+"""``python -m repro.analysis`` — lint every registered model.
+
+For each arch × granularity {example, token} × consumer-set
+combination, run plan analysis, tap-coverage verification, and
+kernel-launch validation, entirely at trace level: params come from
+``jax.eval_shape`` over the initializer, batches from
+``registry.train_batch_specs`` — no weights are ever materialized and
+no XLA compilation happens. A guard on the XLA compile entry point
+enforces that (``--no-trace-guard`` to disable, e.g. when adding an
+opt-in compiled pass); the CI ``lint`` job relies on it to stay under
+its time budget on CPU.
+
+Exit status: 0 when every combination is clean, 1 with
+``--fail-on-error`` when any coverage/launch error survives.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _consumer_sets(granularity: str, key):
+    from repro import pex
+    if granularity == "token":
+        # token+GNS and token+Importance are rejected by analyze();
+        # Noise must carry an explicit sensitivity at token clip
+        return [[], [pex.Norms()],
+                [pex.Clip(1.0, granularity="token"),
+                 pex.Noise(0.1, key, scale=1.0)]]
+    return [[], [pex.Norms()],
+            [pex.Clip(1.0), pex.Noise(0.1, key), pex.GNS()]]
+
+
+class _TraceOnlyGuard:
+    """Fail loudly if anything under the lint reaches XLA compilation."""
+
+    def __enter__(self):
+        from jax._src import compiler
+        self._compiler = compiler
+        self._orig = compiler.backend_compile
+
+        def _blocked(*a, **kw):
+            raise RuntimeError(
+                "pexlint is trace-only, but something tried to compile an "
+                "XLA computation; keep analyzers on jax.make_jaxpr / "
+                "jax.eval_shape (or rerun with --no-trace-guard)")
+
+        compiler.backend_compile = _blocked
+        return self
+
+    def __exit__(self, *exc):
+        self._compiler.backend_compile = self._orig
+        return False
+
+
+def lint_arch(arch_id: str, *, backend: str, production: bool,
+              key) -> list:
+    """All error strings for one arch across every lint combination."""
+    import jax
+    from repro.analysis.verify import verify as _verify
+    from repro.configs.common import ShapeSpec
+    from repro.models import registry
+    from repro.nn.param import unbox
+
+    aspec = registry.get(arch_id)
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = jax.eval_shape(
+        lambda: unbox(mod.init(jax.random.PRNGKey(0), cfg)))
+    shape = ShapeSpec("lint", "train", 8, 3)
+    batch = registry.train_batch_specs(aspec, cfg, shape)
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    allow = registry.untapped_allowlist(arch_id)
+
+    errors = []
+    for gran in ("example", "token"):
+        try:
+            rep = _verify(
+                loss_fn, params, batch, _consumer_sets(gran, key),
+                granularity=gran, allow=allow, seq=shape.seq,
+                cfg=aspec.full(), backend=backend,
+                production=production and gran == "example")
+        except Exception as e:  # a trace failure is itself a lint error
+            errors.append(f"{arch_id}[{gran}]: {type(e).__name__}: {e}")
+            continue
+        errors.extend(f"{arch_id}[{gran}]: {e}" for e in rep.errors)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="pexlint: static tap-coverage, plan, and "
+                    "kernel-launch checks")
+    ap.add_argument("--all-models", action="store_true",
+                    help="lint every registered arch")
+    ap.add_argument("--arch", action="append", default=[],
+                    help="lint one arch id (repeatable)")
+    ap.add_argument("--fail-on-error", action="store_true",
+                    help="exit 1 if any lint error is found")
+    ap.add_argument("--backend", default="tpu",
+                    help="launch-contract budget profile (default: tpu)")
+    ap.add_argument("--no-production", action="store_true",
+                    help="skip the config-derived production-shape "
+                         "launch cases")
+    ap.add_argument("--no-trace-guard", action="store_true",
+                    help="allow XLA compilation during the lint")
+    args = ap.parse_args(argv)
+
+    from repro.models import registry
+    arch_ids = sorted(registry.ARCHS) if args.all_models or not args.arch \
+        else args.arch
+
+    # concrete PRNG key for the Noise consumer — created BEFORE the
+    # trace guard goes up (key creation itself compiles a tiny program)
+    import jax
+    key = jax.random.PRNGKey(0)
+
+    t0 = time.time()
+    all_errors = []
+    guard = _TraceOnlyGuard() if not args.no_trace_guard else None
+    try:
+        if guard is not None:
+            guard.__enter__()
+        for aid in arch_ids:
+            t1 = time.time()
+            errs = lint_arch(aid, backend=args.backend,
+                             production=not args.no_production, key=key)
+            all_errors.extend(errs)
+            status = "ok" if not errs else f"{len(errs)} ERROR"
+            print(f"  {aid:24s} {status:12s} {time.time() - t1:5.1f}s")
+    finally:
+        if guard is not None:
+            guard.__exit__(None, None, None)
+
+    for e in all_errors:
+        print(f"ERROR {e}")
+    n = len(all_errors)
+    print(f"pexlint: {len(arch_ids)} arch(s), {n} error(s), "
+          f"{time.time() - t0:.1f}s")
+    return 1 if (n and args.fail_on_error) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

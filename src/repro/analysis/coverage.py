@@ -1,0 +1,364 @@
+"""Tap-coverage verifier: prove, at trace time, that the taps cover
+the parameter tree (pexlint pass 1, DESIGN.md §10).
+
+The paper's exactness claim is only as good as the instrumentation: a
+parameter whose gradient path bypasses every ``pex`` custom_vjp
+contributes to training but not to the per-example norms — DP clipping
+silently under-clips and GNS/importance estimates bias. Nothing about
+running the model can catch that (the norms are merely *smaller*), but
+the traced jaxpr can: this pass walks the closed jaxpr of
+``loss_fn(params, batch, tap)`` with a live tap and classifies every
+parameter leaf by taint analysis.
+
+**Taint propagation.** Each jaxpr variable carries the set of parameter
+leaves it (transitively) depends on. Ordinary equations union their
+operands' taint into their outputs. A pex equation (identified by its
+registered backward rule — ``taps.PEX_OPS``) is the one place taint is
+*blocked*: the weight-slot operand's taint is captured as a tap site
+and does NOT flow into the op's output, while data-slot taint flows
+through. After propagation:
+
+  * leaf taint reaches the loss        ⇒ **untapped-but-trained**: some
+    gradient path avoids every tap (ERROR unless allowlisted);
+  * leaf captured at a tap site only   ⇒ **tapped** (OK);
+  * leaf taint reaches nothing          ⇒ **frozen/unused** (OK).
+
+A leaf that is both captured *and* reaches the loss (e.g. a weight
+used through ``tap.dense`` in one layer and a plain einsum in another)
+is still an error — its norm undercounts the plain path.
+
+The walk recurses structurally into ``pjit``, ``scan`` (carry taint to
+fixpoint), ``remat2``, ``cond``/``while`` branches, and foreign
+``custom_vjp``/``custom_jvp`` calls, so the same pass covers scanned
+stacks, checkpointed blocks, and the flash-attention kernel without
+special cases. Everything here is ``jax.make_jaxpr`` — no XLA
+compilation, no execution; abstract (``ShapeDtypeStruct``) params and
+batches work.
+
+**Allowlist.** Intentionally untapped parameters (DESIGN.md §5: the
+weight-shared zamba2 block, ssm conv/decay tensors, rwkv mix/decay
+bases — and the upcoming scoped-tap modes) must be *declared*, not
+accidental: ``allow`` entries are substrings matched against the
+leaf's key path (``models.registry.UNTAPPED_ALLOWLIST`` holds the
+per-arch declarations; ``tests/helpers.py`` derives its oracle scope
+filter from the same table, so the analyzer and the exactness tests
+can never disagree about scope).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import (ExampleLayout, PexSpec, Tap, identify_pex_bwd)
+
+_EMPTY = frozenset()
+
+
+class AnalysisError(RuntimeError):
+    """The jaxpr walker met a structure it cannot soundly propagate
+    through (a sub-jaxpr whose arity disagrees with its equation)."""
+
+
+# ---------------------------------------------------------------------------
+# report datatypes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TapSite:
+    """One instrumented op in the traced program."""
+    index: int
+    op: str                         # dense | bias_add | scale | ...
+    param_leaves: frozenset         # leaf ids captured in the weight slot
+    operand_avals: Tuple            # (shape, dtype name) per operand
+
+
+#: classification outcomes
+TAPPED = "tapped"
+UNTAPPED = "untapped-but-trained"
+FROZEN = "frozen/unused"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafReport:
+    path: str                       # display path (keystr)
+    shape: Tuple[int, ...]
+    status: str                     # TAPPED | UNTAPPED | FROZEN
+    allowlisted: bool
+    sites: Tuple[int, ...]          # TapSite indices capturing this leaf
+
+    @property
+    def is_error(self) -> bool:
+        return self.status == UNTAPPED and not self.allowlisted
+
+
+@dataclasses.dataclass(frozen=True)
+class CoverageReport:
+    leaves: Tuple[LeafReport, ...]
+    sites: Tuple[TapSite, ...]
+    token_loss_registered: bool
+
+    @property
+    def errors(self) -> Tuple[LeafReport, ...]:
+        return tuple(l for l in self.leaves if l.is_error)
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def counts(self) -> dict:
+        out = {TAPPED: 0, UNTAPPED: 0, FROZEN: 0, "allowlisted": 0}
+        for l in self.leaves:
+            if l.status == UNTAPPED and l.allowlisted:
+                out["allowlisted"] += 1
+            else:
+                out[l.status] += 1
+        return out
+
+    def summary(self) -> str:
+        c = self.counts()
+        head = (f"{len(self.sites)} tap sites; {c[TAPPED]} tapped, "
+                f"{c['allowlisted']} allowlisted-untapped, "
+                f"{c[FROZEN]} frozen, {c[UNTAPPED]} ERROR")
+        lines = [head]
+        for l in self.errors:
+            lines.append(
+                f"  ERROR untapped-but-trained: {l.path} {l.shape} — its "
+                f"gradient path reaches the loss without crossing any pex "
+                f"op, so per-example norms undercount it; tap it or add "
+                f"it to the allowlist")
+        return "\n".join(lines)
+
+    def raise_if_errors(self) -> "CoverageReport":
+        if not self.ok:
+            raise AnalysisError("tap coverage failed:\n" + self.summary())
+        return self
+
+
+# ---------------------------------------------------------------------------
+# the jaxpr walker
+# ---------------------------------------------------------------------------
+
+def _read(env, atom):
+    if hasattr(atom, "val"):            # Literal
+        return _EMPTY
+    return env.get(atom, _EMPTY)
+
+
+def _write(env, var, taint):
+    # DropVars are placeholders for unused outputs
+    if type(var).__name__ == "DropVar":
+        return
+    env[var] = env.get(var, _EMPTY) | taint
+
+
+def _as_open(j):
+    """Jaxpr of a possibly-Closed jaxpr."""
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def _sub_jaxprs(params: dict):
+    """Every (Closed)Jaxpr value in an equation's params."""
+    found = []
+    for v in params.values():
+        if hasattr(v, "eqns") or (hasattr(v, "jaxpr")
+                                  and hasattr(_as_open(v), "eqns")):
+            found.append(v)
+        elif isinstance(v, (tuple, list)):
+            for w in v:
+                if hasattr(w, "eqns") or (hasattr(w, "jaxpr")
+                                          and hasattr(_as_open(w), "eqns")):
+                    found.append(w)
+    return found
+
+
+def _run_jaxpr(jaxpr, in_taints, sites):
+    """Propagate taint through one (open) jaxpr; returns out taints.
+    ``sites=None`` discards tap-site records (fixpoint warm-up runs)."""
+    jaxpr = _as_open(jaxpr)
+    if len(jaxpr.invars) != len(in_taints):
+        raise AnalysisError(
+            f"sub-jaxpr arity mismatch: {len(jaxpr.invars)} invars vs "
+            f"{len(in_taints)} operand taints")
+    env = {}
+    for v in jaxpr.constvars:
+        env[v] = _EMPTY
+    for v, t in zip(jaxpr.invars, in_taints):
+        _write(env, v, t)
+    for eqn in jaxpr.eqns:
+        _eqn_taint(eqn, env, sites)
+    return [_read(env, v) for v in jaxpr.outvars]
+
+
+def _eqn_taint(eqn, env, sites) -> None:
+    name = eqn.primitive.name
+    in_t = [_read(env, v) for v in eqn.invars]
+
+    if name in ("custom_vjp_call_jaxpr", "custom_vjp_call"):
+        info = identify_pex_bwd(eqn.params.get("bwd"))
+        num_consts = eqn.params.get("num_consts", 0)
+        if info is not None and \
+                len(eqn.invars) - num_consts == info.n_operands:
+            ops_t = in_t[num_consts:]
+            ops_v = eqn.invars[num_consts:]
+            captured = _EMPTY
+            for ws in info.weight_slots:
+                captured = captured | ops_t[ws]
+            if sites is not None:
+                avals = tuple(
+                    (tuple(v.aval.shape), jnp.dtype(v.aval.dtype).name)
+                    for v in ops_v)
+                sites.append(TapSite(len(sites), info.name, captured, avals))
+            data = _EMPTY
+            for ds in info.data_slots:
+                data = data | ops_t[ds]
+            # outputs are (z, acc): weight taint is *blocked* — covered
+            # gradient paths end at the tap
+            _write(env, eqn.outvars[0], data)
+            for ov in eqn.outvars[1:]:
+                _write(env, ov, ops_t[-1])
+            return
+        # foreign custom_vjp (e.g. flash attention): recurse
+        fun = eqn.params.get("fun_jaxpr") or eqn.params.get("call_jaxpr")
+        if fun is not None and len(_as_open(fun).invars) == len(in_t):
+            outs = _run_jaxpr(fun, in_t, sites)
+            for ov, t in zip(eqn.outvars, outs):
+                _write(env, ov, t)
+            return
+
+    elif name == "pjit":
+        outs = _run_jaxpr(eqn.params["jaxpr"], in_t, sites)
+        for ov, t in zip(eqn.outvars, outs):
+            _write(env, ov, t)
+        return
+
+    elif name == "scan":
+        nc = eqn.params["num_consts"]
+        ncar = eqn.params["num_carry"]
+        body = eqn.params["jaxpr"]
+        consts_t, carry_t = in_t[:nc], list(in_t[nc:nc + ncar])
+        xs_t = in_t[nc + ncar:]
+        while True:                      # carry-taint fixpoint
+            outs = _run_jaxpr(body, consts_t + carry_t + xs_t, None)
+            new_carry = [c | o for c, o in zip(carry_t, outs[:ncar])]
+            if new_carry == carry_t:
+                break
+            carry_t = new_carry
+        outs = _run_jaxpr(body, consts_t + carry_t + xs_t, sites)
+        final = [c | o for c, o in zip(carry_t, outs[:ncar])] + outs[ncar:]
+        for ov, t in zip(eqn.outvars, final):
+            _write(env, ov, t)
+        return
+
+    elif name == "while":
+        cn = eqn.params["cond_nconsts"]
+        bn = eqn.params["body_nconsts"]
+        body = eqn.params["body_jaxpr"]
+        cond_t = in_t[:cn]
+        body_c = in_t[cn:cn + bn]
+        carry_t = list(in_t[cn + bn:])
+        while True:
+            outs = _run_jaxpr(body, body_c + carry_t, None)
+            new_carry = [c | o for c, o in zip(carry_t, outs)]
+            if new_carry == carry_t:
+                break
+            carry_t = new_carry
+        _run_jaxpr(body, body_c + carry_t, sites)
+        pred = frozenset().union(*cond_t) if cond_t else _EMPTY
+        for ov, t in zip(eqn.outvars, carry_t):
+            _write(env, ov, t | pred)
+        return
+
+    elif name == "cond":
+        pred_t = in_t[0]
+        for branch in eqn.params["branches"]:
+            outs = _run_jaxpr(branch, in_t[1:], sites)
+            for ov, t in zip(eqn.outvars, outs):
+                _write(env, ov, t | pred_t)
+        return
+
+    else:
+        subs = _sub_jaxprs(eqn.params)
+        if len(subs) == 1 and len(_as_open(subs[0]).invars) == len(in_t):
+            outs = _run_jaxpr(subs[0], in_t, sites)
+            for ov, t in zip(eqn.outvars, outs):
+                _write(env, ov, t)
+            return
+
+    # conservative fallback: everything flows everywhere
+    union = frozenset().union(*in_t) if in_t else _EMPTY
+    for ov in eqn.outvars:
+        _write(env, ov, union)
+
+
+# ---------------------------------------------------------------------------
+# the pass
+# ---------------------------------------------------------------------------
+
+def _leading_dim(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("cannot infer batch size from an empty batch")
+    return leaves[0].shape[0]
+
+
+def trace_coverage(loss_fn: Callable, params, batch, *,
+                   spec: Optional[PexSpec] = None, layout=None,
+                   batch_size: Optional[int] = None,
+                   allow: Sequence[str] = (),
+                   tap_factory: Optional[Callable] = None) -> CoverageReport:
+    """Classify every parameter leaf of ``loss_fn(params, batch, tap)``
+    as tapped / untapped-but-trained / frozen. Trace-only: works on
+    concrete arrays or ``ShapeDtypeStruct`` trees, never compiles.
+
+    ``allow`` entries are substrings matched against the leaf's key
+    path (both the raw ``(DictKey(...), ...)`` form — compatible with
+    the historical scope filters — and the ``keystr`` form).
+    ``tap_factory(spec, acc=..., layout=...)`` substitutes a custom
+    collector (the mutation-corpus tests inject site-deleting taps)."""
+    spec = spec if spec is not None else PexSpec(enabled=True)
+    if not spec.enabled:
+        raise ValueError(
+            "tap coverage needs a live tap: spec.enabled=False would "
+            "classify every trained parameter as untapped")
+    layout = layout if layout is not None else ExampleLayout(spec.n_groups)
+    b = batch_size if batch_size is not None else _leading_dim(batch)
+    factory = tap_factory if tap_factory is not None else Tap
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    n_leaves = len(flat)
+    state = {}
+
+    def run(p, bt):
+        tap = factory(spec, acc=layout.init(b), layout=layout)
+        loss_vec, _aux = loss_fn(p, bt, tap)
+        state["token"] = tap.token_losses() is not None
+        return jnp.sum(loss_vec)
+
+    closed = jax.make_jaxpr(run)(params, batch)
+    jaxpr = closed.jaxpr
+
+    sites: list = []
+    in_taints = [frozenset((i,)) if i < n_leaves else _EMPTY
+                 for i in range(len(jaxpr.invars))]
+    out_taints = _run_jaxpr(jaxpr, in_taints, sites)
+    loss_taint = out_taints[0] if out_taints else _EMPTY
+
+    leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        raw, pretty = str(path), jax.tree_util.keystr(path)
+        captured = tuple(s.index for s in sites if i in s.param_leaves)
+        if i in loss_taint:
+            status = UNTAPPED
+        elif captured:
+            status = TAPPED
+        else:
+            status = FROZEN
+        allowed = status == UNTAPPED and any(
+            a in raw or a in pretty for a in allow)
+        leaves.append(LeafReport(pretty, tuple(leaf.shape), status,
+                                 allowed, captured))
+    return CoverageReport(tuple(leaves), tuple(sites),
+                          bool(state.get("token")))

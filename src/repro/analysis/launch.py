@@ -1,0 +1,181 @@
+"""Kernel-launch validator: prove every Pallas launch is well-formed
+without compiling it (pexlint pass 3, DESIGN.md §10).
+
+The Pallas wrappers (``kernels/ops.py``) pick tiles and padding per
+logical shape; the kernels assert divisibility and allocate VMEM
+scratch. On a real TPU a bad schedule fails at Mosaic compile time; in
+interpret mode on CPU — the CI target — it may not fail at all. This
+pass closes that gap statically: each kernel module declares its
+launch geometry as a ``LaunchContract`` (kernels/contract.py), the
+wrapper-side builders reproduce the exact padding/tile arithmetic of
+the call site, and ``contract.validate`` checks
+
+  * tile divisibility against the chunk schedule,
+  * estimated VMEM footprint (double-buffered in/out blocks + resident
+    scratch) against the per-backend budget,
+  * the f32-accumulator dtype rule on every partial-sum buffer.
+
+Workloads come from two sources: the **tap sites of an actual trace**
+(``coverage.TapSite`` records every instrumented op's operand shapes,
+so the validator exercises the exact geometries the estimators would
+launch for that model), and **config-derived production cases** (full
+model dims at the assigned train shape, including the flash-attention
+geometry that small smoke traces never reach).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels import contract as _c
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchReport:
+    contracts: Tuple[_c.LaunchContract, ...]
+    errors: Tuple[str, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def summary(self) -> str:
+        head = (f"{len(self.contracts)} kernel launches checked, "
+                f"{len(self.errors)} ERROR")
+        return "\n".join([head] + [f"  ERROR {e}" for e in self.errors])
+
+    def raise_if_errors(self) -> "LaunchReport":
+        if not self.ok:
+            raise AssertionError("kernel launch validation failed:\n"
+                                 + self.summary())
+        return self
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+def contracts_for_site(site) -> list:
+    """Launch contracts for the kernels one tap site's stat could
+    dispatch to, at the exact operand shapes of the trace."""
+    out = []
+    avals = site.operand_avals
+    if site.op == "dense":
+        (h_shape, h_dt), (w_shape, _) = avals[0], avals[1]
+        p_in, p_out = w_shape[-2], w_shape[-1]
+        dt = _dt(h_dt)
+        if len(h_shape) >= 3:
+            b, s = h_shape[0], h_shape[1]
+            out.append(ops.gram_contract(b, s, p_in, p_out, dtype=dt))
+            out.append(ops.direct_contract(b, s, p_in, p_out, dtype=dt))
+            out.append(ops.clip_scale_contract(b, s, p_out, dtype=dt))
+            out.append(ops.rowsumsq_contract(b, s * p_in, dtype=dt))
+        else:
+            b = h_shape[0]
+            out.append(ops.rowsumsq_contract(b, p_in, dtype=dt))
+            out.append(ops.rowsumsq_contract(b, p_out, dtype=dt))
+    elif site.op in ("bias_add", "scale", "embedding"):
+        # stat work for these is rowsumsq-shaped (factorized/elementwise)
+        z_shape, z_dt = avals[0]
+        n = 1
+        for d in z_shape[1:]:
+            n *= d
+        out.append(ops.rowsumsq_contract(z_shape[0], n, dtype=_dt(z_dt)))
+    elif site.op == "dense_expert":
+        (x_shape, x_dt), (w_shape, _) = avals[0], avals[1]
+        acc_shape, _ = avals[-1]
+        e, c, d = x_shape
+        f = w_shape[-1]
+        n_seg = e * (acc_shape[0] + 1)
+        out.append(ops.segmented_contract(e * c, d, f, n_seg,
+                                          dtype=_dt(x_dt)))
+    elif site.op == "dense_expert_grouped":
+        (x_shape, x_dt), (w_shape, _) = avals[0], avals[1]
+        acc_shape, _ = avals[-1]
+        ng, e, c, d = x_shape
+        f = w_shape[-1]
+        bg = max(acc_shape[0] // max(ng, 1), 1)
+        n_seg = ng * e * (bg + 1)
+        out.append(ops.segmented_contract(ng * e * c, d, f, n_seg,
+                                          dtype=_dt(x_dt)))
+    return out
+
+
+def contracts_for_sites(sites: Sequence) -> list:
+    out = []
+    for site in sites:
+        out.extend(contracts_for_site(site))
+    return out
+
+
+def production_cases(cfg, *, batch: int = 8, seq: int = 4096) -> list:
+    """Config-derived launch cases at production dims: the dense-stat
+    kernels at (d_model, d_ff) / (d_model, vocab), and the
+    flash-attention forward/backward geometry (never reached by smoke
+    traces — attention only goes through the Pallas path when
+    S % 128 == 0)."""
+    out = []
+    dt = getattr(cfg, "jdtype", jnp.float32)
+    d_model = getattr(cfg, "d_model", None)
+    d_ff = getattr(cfg, "d_ff", None) \
+        or getattr(getattr(cfg, "mlp", None), "d_ff", None)
+    vocab = getattr(cfg, "vocab", None)
+    if d_model:
+        pairs = [(d_model, d_model)]
+        if d_ff:
+            pairs += [(d_model, d_ff), (d_ff, d_model)]
+        if vocab:
+            pairs.append((d_model, vocab))
+        for p_in, p_out in pairs:
+            out.append(ops.gram_contract(batch, seq, p_in, p_out, dtype=dt))
+            out.append(ops.direct_contract(batch, seq, p_in, p_out,
+                                           dtype=dt))
+            out.append(ops.clip_scale_contract(batch, seq, p_out, dtype=dt))
+        out.append(ops.rowsumsq_contract(batch, seq * d_model, dtype=dt))
+    attn = getattr(cfg, "attn", None)
+    n_heads = getattr(attn, "n_heads", None) or getattr(cfg, "n_heads", None)
+    n_kv = getattr(attn, "n_kv", None) or getattr(cfg, "kv_heads", None) \
+        or n_heads
+    head_dim = getattr(attn, "head_dim", None) \
+        or getattr(cfg, "head_dim", None)
+    if n_heads and head_dim:
+        out.extend(ops.attention_contracts(batch, n_heads, n_kv, seq, seq,
+                                           head_dim, dtype=dt))
+    moe = getattr(cfg, "moe", None)
+    if moe is not None:
+        n_exp = getattr(moe, "n_experts", None)
+        d_exp = getattr(moe, "d_ff", None) or d_ff
+        if n_exp and d_model and d_exp:
+            cap = (batch * seq * getattr(moe, "top_k", 2)) // n_exp
+            out.append(ops.segmented_contract(
+                n_exp * max(cap, 1), d_model, d_exp,
+                n_exp * (batch + 1), dtype=dt))
+    return out
+
+
+def validate_contracts(contracts: Sequence, *,
+                       backend: str = "tpu") -> LaunchReport:
+    errors = []
+    for ct in contracts:
+        errors.extend(_c.validate(ct, backend))
+    # identical workloads repeat across layers/sites — dedupe messages
+    seen, uniq = set(), []
+    for e in errors:
+        if e not in seen:
+            seen.add(e)
+            uniq.append(e)
+    return LaunchReport(tuple(contracts), tuple(uniq))
+
+
+def validate_sites(sites: Sequence, cfg=None, *, backend: str = "tpu",
+                   batch: int = 8, seq: int = 4096,
+                   production: bool = True) -> LaunchReport:
+    """Full pass: trace-site workloads plus (optionally) the
+    config-derived production cases."""
+    contracts = contracts_for_sites(sites)
+    if production and cfg is not None:
+        contracts.extend(production_cases(cfg, batch=batch, seq=seq))
+    return validate_contracts(contracts, backend=backend)

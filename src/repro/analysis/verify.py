@@ -1,0 +1,92 @@
+"""``Engine.verify`` backend — one call that runs every trace-only
+pexlint pass against a model (DESIGN.md §10).
+
+Composes the three analyzers:
+
+  * plan analysis (``core.plan.analyze``) validates the consumer list
+    and yields the static cost shape (``Plan.describe()``);
+  * tap coverage (``analysis.coverage``) proves every trained
+    parameter's gradient is reachable by a tap, modulo the declared
+    allowlist;
+  * launch validation (``analysis.launch``) checks every Pallas
+    schedule the trace's tap sites imply, plus the config-derived
+    production geometries.
+
+Everything here operates on traced jaxprs and static contracts — no
+XLA compilation, no kernel execution — so it is safe to run on
+abstract ``ShapeDtypeStruct`` params/batches and cheap enough for CI
+on every registered model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.analysis import coverage as _cov
+from repro.analysis import launch as _launch
+from repro.core import plan as plan_mod
+from repro.core.taps import ExampleLayout, PexSpec, TokenLayout
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyReport:
+    """Combined result of one ``Engine.verify`` run."""
+    plans: Tuple[plan_mod.Plan, ...]
+    coverage: _cov.CoverageReport
+    launch: _launch.LaunchReport
+
+    @property
+    def ok(self) -> bool:
+        return self.coverage.ok and self.launch.ok
+
+    @property
+    def errors(self) -> Tuple[str, ...]:
+        cov = tuple(f"coverage: {l.path} is {l.status}"
+                    for l in self.coverage.errors)
+        return cov + tuple(f"launch: {e}" for e in self.launch.errors)
+
+    def summary(self) -> str:
+        lines = [f"plan[{i}]: {p.describe()}"
+                 for i, p in enumerate(self.plans)]
+        lines.append(self.coverage.summary())
+        lines.append(self.launch.summary())
+        return "\n".join(lines)
+
+    def raise_if_errors(self) -> "VerifyReport":
+        self.coverage.raise_if_errors()
+        self.launch.raise_if_errors()
+        return self
+
+
+def verify(loss_fn, params, batch, consumers: Sequence = (), *,
+           spec: Optional[PexSpec] = None, granularity: str = "example",
+           allow: Sequence[str] = (), batch_size: Optional[int] = None,
+           seq: Optional[int] = None, cfg=None, backend: str = "tpu",
+           production: bool = True) -> VerifyReport:
+    """Run all trace-only static checks for one model.
+
+    ``consumers`` may be one consumer list or a sequence of lists —
+    each is folded through plan analysis (raising on invalid
+    compositions) without affecting the trace; the tap sites a model
+    emits do not depend on who consumes the stats.
+    """
+    spec = spec if spec is not None else PexSpec(enabled=True)
+    if consumers and not isinstance(consumers[0], (list, tuple)):
+        consumer_sets = [list(consumers)]
+    else:
+        consumer_sets = [list(c) for c in consumers] or [[]]
+    plans = tuple(plan_mod.analyze(c, engine_granularity=granularity)
+                  for c in consumer_sets)
+
+    if granularity == "token":
+        from repro.core.engine import infer_seq_len
+        layout = TokenLayout(seq if seq is not None
+                             else infer_seq_len(batch))
+    else:
+        layout = ExampleLayout(spec.n_groups)
+    cov = _cov.trace_coverage(loss_fn, params, batch, spec=spec,
+                              layout=layout, batch_size=batch_size,
+                              allow=allow)
+    lr = _launch.validate_sites(cov.sites, cfg, backend=backend,
+                                production=production)
+    return VerifyReport(plans, cov, lr)

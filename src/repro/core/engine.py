@@ -200,6 +200,33 @@ class Engine:
                          batch_size=batch_size).gns
 
     # ------------------------------------------------------------------
+    def verify(self, loss_fn: Callable, params, batch,
+               consumers: Sequence = (), *, allow: Sequence[str] = (),
+               batch_size: Optional[int] = None,
+               seq: Optional[int] = None, cfg=None,
+               backend: str = "tpu"):
+        """Static verification of a (model, plan) pair — trace-only,
+        no compilation, safe on abstract ``ShapeDtypeStruct`` params
+        and batches (DESIGN.md §10).
+
+        Runs the pexlint passes against THIS engine's spec and
+        granularity: plan analysis of ``consumers`` (one list or a
+        sequence of lists), tap-coverage verification of ``loss_fn``
+        (``allow`` declares intentionally-untapped parameter path
+        substrings; ``registry.untapped_allowlist`` has the registered
+        archs' tables), and launch validation of every Pallas schedule
+        the trace's tap sites imply (``cfg`` additionally checks the
+        config-derived production geometries). Returns a
+        ``repro.analysis.VerifyReport``; ``.ok`` /
+        ``.raise_if_errors()`` gate on it."""
+        from repro.analysis.verify import verify as _verify
+        return _verify(loss_fn, params, batch, consumers,
+                              spec=self.spec,
+                              granularity=self.granularity, allow=allow,
+                              batch_size=batch_size, seq=seq, cfg=cfg,
+                              backend=backend)
+
+    # ------------------------------------------------------------------
     def tap(self, batch_size: int, *, seq: Optional[int] = None) -> Tap:
         """Standalone live Tap for hand-rolled transforms (the Engine
         passes above create their own)."""

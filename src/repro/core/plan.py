@@ -156,6 +156,39 @@ class Plan:
         add to this at execute time.)"""
         return self.clip is not None or self.importance is not None
 
+    @property
+    def n_backwards(self) -> int:
+        """Backward applications over the fused region's shared
+        residuals (without user loss_weights): 0 for the plain
+        forward, 1 when norms and the unweighted gradient fold into
+        one seed, 2 when a reweighted backward follows the norms pass.
+        Never more — the structural claim the one-forward budget
+        (``analysis.plan_invariants``) pins on compiled HLO."""
+        if not self.needs_norms and not self.needs_grads:
+            return 0
+        if not self.needs_norms:
+            return 1
+        if self.needs_grads and (self.weighted or self.token_weighted):
+            return 2
+        return 1
+
+    def describe(self) -> str:
+        """One-line static cost shape of the pass this plan compiles
+        to — consumed by ``Engine.verify`` and the pexlint CLI."""
+        regions = 1 if self.importance is None else 2
+        parts = [f"regions={regions}", f"backwards={self.n_backwards}",
+                 "acc=(B,S)" if self.token_norms else
+                 ("acc=(B,G)" if self.needs_norms else "acc=none")]
+        if self.clip is not None:
+            parts.append(f"clip[{self.clip.granularity}]")
+        if self.noise is not None:
+            parts.append("noise")
+        if self.gns:
+            parts.append("gns")
+        if self.importance is not None:
+            parts.append(f"importance(k={self.importance.k})")
+        return " ".join(parts)
+
 
 def analyze(consumers: Sequence, *,
             engine_granularity: str = "example") -> Plan:

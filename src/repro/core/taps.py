@@ -98,6 +98,31 @@ class PexSpec:
     tap_embeddings: bool = True
     tap_head: bool = True
 
+    def __post_init__(self):
+        """Group patterns resolve by first match, so a duplicate or a
+        shadowed catch-all would silently merge two groups' stats into
+        one column — reject at construction, naming the conflict."""
+        seen = {}
+        dups = []
+        for i, g in enumerate(self.groups):
+            if g in seen:
+                dups.append(f"{g!r} (columns {seen[g]} and {i})")
+            else:
+                seen[g] = i
+        if dups:
+            raise ValueError(
+                f"duplicate pex group pattern(s): {', '.join(dups)}; "
+                f"each entry of groups={self.groups} must name a distinct "
+                f"accumulator column — stats for a repeated name would all "
+                f"land in the first occurrence")
+        catch_alls = [g for g in ("all", "other") if g in seen]
+        if len(catch_alls) > 1:
+            raise ValueError(
+                f"shadowing catch-all group patterns {catch_alls} in "
+                f"groups={self.groups}: 'all' always wins the catch-all "
+                f"lookup, so the 'other' column could never receive a "
+                f"stat — keep exactly one catch-all")
+
     def group_index(self, group: Optional[str]) -> int:
         if group is None:
             return 0
@@ -499,6 +524,66 @@ def _pex_embed_bwd(group, layout, res, cts):
 
 
 _pex_embed.defvjp(_pex_embed_fwd, _pex_embed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# tap-site provenance — the metadata the static analyzer consumes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PexOpInfo:
+    """Shape of one instrumented op as it appears in a traced jaxpr.
+
+    Slots index the op's *differentiable* operands, i.e. the
+    ``custom_vjp_call_jaxpr`` equation's invars after its ``num_consts``
+    prefix. ``weight_slots`` hold the parameter whose per-example stat
+    this op registers (the gradient path the tap covers);
+    ``data_slots`` are the operands whose gradient flows *through* the
+    op to earlier layers; the last operand is always the accumulator.
+    ``analysis.coverage`` uses this to decide which taint survives an
+    op: a parameter reaching the loss only via weight slots is tapped,
+    one that also reaches it through any plain op is undercounted.
+    """
+    name: str
+    weight_slots: Tuple[int, ...]
+    data_slots: Tuple[int, ...]
+    n_operands: int
+
+
+#: registered backward rule → op provenance. Keyed by the *function
+#: object* jax stores in the equation's ``bwd`` parameter, which is
+#: robust to renaming and wrapping (``identify_pex_bwd`` unwraps it).
+PEX_OPS = {
+    _pex_dense_bwd: PexOpInfo("dense", (1,), (0,), 3),
+    _pex_dense_expert_bwd: PexOpInfo("dense_expert", (1,), (0, 2, 3), 5),
+    _pex_dense_expert_grouped_bwd: PexOpInfo(
+        "dense_expert_grouped", (1,), (0, 2, 3), 5),
+    _pex_bias_bwd: PexOpInfo("bias_add", (1,), (0,), 3),
+    _pex_scale_bwd: PexOpInfo("scale", (1,), (0,), 3),
+    _pex_embed_bwd: PexOpInfo("embedding", (0,), (1,), 3),
+}
+
+_PEX_OPS_BY_NAME = {fn.__name__: info for fn, info in PEX_OPS.items()}
+
+
+def identify_pex_bwd(bwd) -> Optional[PexOpInfo]:
+    """Resolve a ``custom_vjp_call_jaxpr`` equation's ``bwd`` parameter
+    to the pex op it belongs to (None for foreign custom_vjps, e.g. the
+    flash-attention kernel). jax stores ``bwd`` as a bound method of a
+    ``WrappedFun`` holding the raw registered function in ``.f``; fall
+    back to matching the wrapped repr against the registered names so
+    a jax-internal relayering doesn't silently blind the analyzer."""
+    raw = getattr(getattr(bwd, "__self__", None), "f", None)
+    if raw is None:
+        raw = getattr(bwd, "f", None)
+    info = PEX_OPS.get(raw)
+    if info is not None:
+        return info
+    label = repr(raw) if raw is not None else repr(bwd)
+    for name, info in _PEX_OPS_BY_NAME.items():
+        if name in label:
+            return info
+    return None
 
 
 # ---------------------------------------------------------------------------

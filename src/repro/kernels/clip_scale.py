@@ -14,6 +14,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def launch_contract(b: int, s: int, p: int, *, tile_s: int = 256,
+                    tile_p: int = 512, dtype=jnp.float32):
+    """Static launch geometry of :func:`clip_scale` at padded shapes —
+    the analyzer-checkable contract (kernels/contract.py)."""
+    from repro.kernels.contract import Block, Divisibility, LaunchContract
+    return LaunchContract(
+        kernel="clip_scale",
+        grid=(b, max(s // tile_s, 1), max(p // tile_p, 1)),
+        blocks=(
+            Block("z", (1, tile_s, tile_p), dtype),
+            Block("out", (1, tile_s, tile_p), dtype, kind="out"),
+        ),
+        divisibility=(
+            Divisibility("s", s, tile_s),
+            Divisibility("p", p, tile_p),
+        ),
+        scalar_prefetch=1,
+    )
+
+
 def _kernel(c_ref, z_ref, out_ref):
     b = pl.program_id(0)
     out_ref[...] = (z_ref[...].astype(jnp.float32) * c_ref[b]).astype(out_ref.dtype)

@@ -1,0 +1,126 @@
+"""Launch contracts — each Pallas kernel's geometry as checkable data.
+
+A kernel module declares, next to its ``pallas_call``, a
+``launch_contract(...)`` returning the grid, every block that will be
+resident in VMEM (input/output panels and scratch accumulators), and
+the divisibility constraints its index maps assume. The static
+analyzer (``repro.analysis.launch``) then validates a launch *without
+compiling it*: tile divisibility against the wrapper's chunk schedule,
+estimated VMEM footprint against the per-backend budget, and the
+f32-accumulator dtype rule — the failures that today only surface at
+Mosaic compile time on a real TPU (or not at all in interpret mode on
+CPU, the CI target).
+
+The contract intentionally describes the launch the ``ops.py`` wrapper
+would issue (padded shapes, selected tiles), not the logical shapes:
+padding bugs and tile-selection regressions are exactly what it exists
+to catch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+#: ~16 MiB of VMEM per TPU core (pallas guide); interpret mode has no
+#: hard ceiling but is validated against the TPU budget anyway — the
+#: point of the static check is to catch TPU-only failures on CPU CI.
+VMEM_BUDGETS = {"tpu": 16 * 1024 * 1024, "interpret": 16 * 1024 * 1024}
+
+#: every partial-sum accumulator (scratch or revisited output block)
+#: must accumulate in this dtype — bf16 accumulation loses the low
+#: bits of exactly the squared-norm sums the paper's exactness claim
+#: rests on.
+ACCUMULATOR_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One VMEM-resident buffer of a launch.
+
+    kind: 'in' | 'out' | 'scratch'. in/out blocks are double-buffered
+    by the Pallas pipeline (charged twice in the footprint); scratch
+    persists across grid steps (charged once). ``accumulator`` marks
+    buffers that hold partial sums across grid steps and are therefore
+    subject to the f32 rule.
+    """
+    name: str
+    shape: Tuple[int, ...]
+    dtype: object
+    kind: str = "in"
+    accumulator: bool = False
+
+    @property
+    def bytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class Divisibility:
+    """One ``extent % tile == 0`` assumption of the kernel's index maps
+    (the asserts at the top of each kernel, promoted to data)."""
+    axis: str
+    extent: int
+    tile: int
+
+    @property
+    def ok(self) -> bool:
+        return self.tile >= 1 and self.extent >= 0 \
+            and self.extent % self.tile == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchContract:
+    """The checkable surface of one ``pallas_call``."""
+    kernel: str
+    grid: Tuple[int, ...]
+    blocks: Tuple[Block, ...]
+    divisibility: Tuple[Divisibility, ...] = ()
+    scalar_prefetch: int = 0
+
+    def vmem_bytes(self) -> int:
+        """Footprint estimate: pipelined in/out blocks double-buffered,
+        scratch resident once."""
+        total = 0
+        for blk in self.blocks:
+            total += blk.bytes * (1 if blk.kind == "scratch" else 2)
+        return total
+
+
+def validate(contract: LaunchContract, backend: str = "tpu") -> list:
+    """All violations of one contract (empty list ⇒ launch is
+    well-formed). Checked entirely statically."""
+    errors = []
+    budget = VMEM_BUDGETS.get(backend, VMEM_BUDGETS["tpu"])
+    for i, g in enumerate(contract.grid):
+        if int(g) < 1:
+            errors.append(
+                f"{contract.kernel}: grid axis {i} has extent {g} < 1 "
+                f"(grid={contract.grid})")
+    for d in contract.divisibility:
+        if not d.ok:
+            errors.append(
+                f"{contract.kernel}: {d.axis}={d.extent} is not divisible "
+                f"by its tile {d.tile} — the wrapper's padding/chunk "
+                f"schedule disagrees with the kernel's index maps")
+    used = contract.vmem_bytes()
+    if used > budget:
+        errors.append(
+            f"{contract.kernel}: estimated VMEM footprint {used} B "
+            f"({used / 2**20:.2f} MiB) exceeds the {backend} budget "
+            f"{budget} B — blocks: "
+            + ", ".join(f"{b.name}{b.shape}:{jnp.dtype(b.dtype).name}"
+                        for b in contract.blocks))
+    for blk in contract.blocks:
+        if blk.accumulator and jnp.dtype(blk.dtype) != \
+                jnp.dtype(ACCUMULATOR_DTYPE):
+            errors.append(
+                f"{contract.kernel}: accumulator block {blk.name!r} has "
+                f"dtype {jnp.dtype(blk.dtype).name}; partial sums must "
+                f"accumulate in "
+                f"{jnp.dtype(ACCUMULATOR_DTYPE).name}")
+    return errors

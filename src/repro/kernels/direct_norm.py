@@ -56,6 +56,31 @@ def bytes_estimate(b: int, s: int, p_in: int, p_out: int, *,
     return int(b * s * (p_in * n_co + p_out * n_ci) * itemsize + b * 4)
 
 
+def launch_contract(b: int, s: int, p_in: int, p_out: int, *,
+                    tile_s: int = 128, chunk_in: int = 512,
+                    chunk_out: int = 512, dtype=jnp.float32):
+    """Static launch geometry of :func:`direct_norm` at padded shapes —
+    the analyzer-checkable contract (kernels/contract.py)."""
+    from repro.kernels.contract import Block, Divisibility, LaunchContract
+    return LaunchContract(
+        kernel="direct_norm",
+        grid=(b, max(p_in // chunk_in, 1), max(p_out // chunk_out, 1),
+              max(s // tile_s, 1)),
+        blocks=(
+            Block("h", (1, tile_s, chunk_in), dtype),
+            Block("zbar", (1, tile_s, chunk_out), dtype),
+            Block("out", (1, 1), jnp.float32, kind="out"),
+            Block("g_acc", (chunk_in, chunk_out), jnp.float32,
+                  kind="scratch", accumulator=True),
+        ),
+        divisibility=(
+            Divisibility("s", s, tile_s),
+            Divisibility("p_in", p_in, chunk_in),
+            Divisibility("p_out", p_out, chunk_out),
+        ),
+    )
+
+
 def _kernel(n_s: int, h_ref, z_ref, out_ref, g_acc):
     ci = pl.program_id(1)
     co = pl.program_id(2)

@@ -80,6 +80,78 @@ def _kernel(scale: float, softcap: Optional[float], window: Optional[int],
         lse_ref[0, 0] = (m_ref[...] + jnp.log(l))[:, 0]
 
 
+def launch_contracts(b: int, hq: int, hkv: int, sq: int, sk: int, d: int, *,
+                     block_q: int = 256, block_k: int = 256,
+                     dtype=jnp.float32):
+    """Static launch geometry of the forward, dq, and dkv kernels — the
+    analyzer-checkable contracts (kernels/contract.py). Returns one
+    contract per ``pallas_call`` the differentiable attention op
+    issues."""
+    from repro.kernels.contract import Block, Divisibility, LaunchContract
+    rep = max(hq // max(hkv, 1), 1)
+    n_q = max(sq // block_q, 1)
+    n_k = max(sk // block_k, 1)
+    div = (
+        Divisibility("hq % hkv", hq, max(hkv, 1)),
+        Divisibility("sq", sq, block_q),
+        Divisibility("sk", sk, block_k),
+    )
+    fwd = LaunchContract(
+        kernel="flash_attention.fwd",
+        grid=(b, hq, n_q, n_k),
+        blocks=(
+            Block("q", (1, 1, block_q, d), dtype),
+            Block("k", (1, 1, block_k, d), dtype),
+            Block("v", (1, 1, block_k, d), dtype),
+            Block("o", (1, 1, block_q, d), dtype, kind="out"),
+            Block("lse", (1, 1, block_q), jnp.float32, kind="out"),
+            Block("acc", (block_q, d), jnp.float32, kind="scratch",
+                  accumulator=True),
+            Block("m", (block_q, 1), jnp.float32, kind="scratch",
+                  accumulator=True),
+            Block("l", (block_q, 1), jnp.float32, kind="scratch",
+                  accumulator=True),
+        ),
+        divisibility=div,
+    )
+    dq = LaunchContract(
+        kernel="flash_attention.bwd_dq",
+        grid=(b, hq, n_q, n_k),
+        blocks=(
+            Block("q", (1, 1, block_q, d), dtype),
+            Block("k", (1, 1, block_k, d), dtype),
+            Block("v", (1, 1, block_k, d), dtype),
+            Block("do", (1, 1, block_q, d), dtype),
+            Block("lse", (1, 1, block_q), jnp.float32),
+            Block("delta", (1, 1, block_q), jnp.float32),
+            Block("dq", (1, 1, block_q, d), dtype, kind="out"),
+            Block("dq_acc", (block_q, d), jnp.float32, kind="scratch",
+                  accumulator=True),
+        ),
+        divisibility=div,
+    )
+    dkv = LaunchContract(
+        kernel="flash_attention.bwd_dkv",
+        grid=(b, max(hkv, 1), n_k, rep, n_q),
+        blocks=(
+            Block("q", (1, 1, block_q, d), dtype),
+            Block("k", (1, 1, block_k, d), dtype),
+            Block("v", (1, 1, block_k, d), dtype),
+            Block("do", (1, 1, block_q, d), dtype),
+            Block("lse", (1, 1, block_q), jnp.float32),
+            Block("delta", (1, 1, block_q), jnp.float32),
+            Block("dk", (1, 1, block_k, d), dtype, kind="out"),
+            Block("dv", (1, 1, block_k, d), dtype, kind="out"),
+            Block("dk_acc", (block_k, d), jnp.float32, kind="scratch",
+                  accumulator=True),
+            Block("dv_acc", (block_k, d), jnp.float32, kind="scratch",
+                  accumulator=True),
+        ),
+        divisibility=div,
+    )
+    return (fwd, dq, dkv)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "scale", "softcap", "window", "block_q", "block_k", "interpret",
     "return_lse"))

@@ -77,6 +77,40 @@ def bytes_estimate(b: int, s: int, p_in: int, p_out: int, *,
     return int(b * pairs * panel_rows * itemsize + b * 4)
 
 
+def launch_contract(b: int, s: int, p_in: int, p_out: int, *,
+                    tile_s: int = 128, chunk_in: int = 512,
+                    chunk_out: int = 512, triangular: bool = True,
+                    dtype=jnp.float32):
+    """Static launch geometry of :func:`gram_norm` at padded shapes —
+    the analyzer-checkable contract (kernels/contract.py)."""
+    from repro.kernels.contract import Block, Divisibility, LaunchContract
+    n_s = max(s // tile_s, 1)
+    n_k = max(p_in // chunk_in, p_out // chunk_out, 1)
+    pairs = n_s * (n_s + 1) // 2 if triangular else n_s * n_s
+    grid = (b, pairs, n_k) if triangular else (b, n_s, n_s, n_k)
+    return LaunchContract(
+        kernel="gram_norm",
+        grid=grid,
+        blocks=(
+            Block("h_i", (1, tile_s, chunk_in), dtype),
+            Block("h_j", (1, tile_s, chunk_in), dtype),
+            Block("z_i", (1, tile_s, chunk_out), dtype),
+            Block("z_j", (1, tile_s, chunk_out), dtype),
+            Block("out", (1, 1), jnp.float32, kind="out"),
+            Block("a_acc", (tile_s, tile_s), jnp.float32, kind="scratch",
+                  accumulator=True),
+            Block("b_acc", (tile_s, tile_s), jnp.float32, kind="scratch",
+                  accumulator=True),
+        ),
+        divisibility=(
+            Divisibility("s", s, tile_s),
+            Divisibility("p_in", p_in, chunk_in),
+            Divisibility("p_out", p_out, chunk_out),
+        ),
+        scalar_prefetch=2 if triangular else 0,
+    )
+
+
 def _tri_maps(n_s: int) -> tuple[np.ndarray, np.ndarray]:
     """Row/col tile indices of the upper triangle, row-major: pair t ↦
     (ti[t], tj[t]) with ti[t] <= tj[t]."""

@@ -270,6 +270,61 @@ def _fa_bwd(scale, window, res, g):
 flash_attention_vjp.defvjp(_fa_fwd, _fa_bwd)
 
 
+# ---------------------------------------------------------------------------
+# launch contracts — what each wrapper above WOULD launch, as data.
+# The static analyzer (repro.analysis.launch) validates these without
+# compiling; each builder must mirror its wrapper's padding/tile
+# arithmetic exactly, which is why they live here next to it.
+# ---------------------------------------------------------------------------
+
+def gram_contract(b: int, s: int, p_in: int, p_out: int, *,
+                  triangular: bool = True, dtype=jnp.float32):
+    tile_s, chunk_in, chunk_out, s_pad, pi_pad, po_pad = _launch_tiles(
+        s, p_in, p_out)
+    return _gn.launch_contract(b, s_pad, pi_pad, po_pad, tile_s=tile_s,
+                               chunk_in=chunk_in, chunk_out=chunk_out,
+                               triangular=triangular, dtype=dtype)
+
+
+def direct_contract(b: int, s: int, p_in: int, p_out: int, *,
+                    dtype=jnp.float32):
+    tile_s, chunk_in, chunk_out, s_pad, pi_pad, po_pad = _launch_tiles(
+        s, p_in, p_out)
+    return _dn.launch_contract(b, s_pad, pi_pad, po_pad, tile_s=tile_s,
+                               chunk_in=chunk_in, chunk_out=chunk_out,
+                               dtype=dtype)
+
+
+def segmented_contract(t: int, p_in: int, p_out: int, n_seg: int, *,
+                       dtype=jnp.float32):
+    (tile_t, chunk_in, chunk_out, t_pad, pi_pad, po_pad,
+     _, n_work, n_seg_pad) = _seg_launch_tiles(t, p_in, p_out, n_seg)
+    return _sn.launch_contract(t_pad, pi_pad, po_pad, n_seg_pad, n_work,
+                               tile_t=tile_t, chunk_in=chunk_in,
+                               chunk_out=chunk_out, dtype=dtype)
+
+
+def clip_scale_contract(b: int, s: int, p: int, *, dtype=jnp.float32):
+    tile_s = min(256, _round_up(s, 8))
+    tile_p = min(512, _round_up(p, 128))
+    return _cs.launch_contract(b, _round_up(s, tile_s), _round_up(p, tile_p),
+                               tile_s=tile_s, tile_p=tile_p, dtype=dtype)
+
+
+def rowsumsq_contract(b: int, n: int, *, dtype=jnp.float32):
+    tile_b = 8 if b % 8 == 0 else 1
+    tile_n = min(2048, _round_up(n, 128))
+    return _rs.launch_contract(b, _round_up(n, tile_n), tile_b=tile_b,
+                               tile_n=tile_n, dtype=dtype)
+
+
+def attention_contracts(b: int, hq: int, hkv: int, sq: int, sk: int,
+                        d: int, *, dtype=jnp.float32):
+    bq = min(256, sq)
+    return _fa.launch_contracts(b, hq, hkv, sq, sk, d, block_q=bq,
+                                block_k=bq, dtype=dtype)
+
+
 def clip_scale(z: jax.Array, c: jax.Array) -> jax.Array:
     """(B,S,p) ⊙ c(B,) → (B,S,p); pads S and p, slices back only when
     padding was actually applied (the common aligned case is copy-free)."""

@@ -14,6 +14,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def launch_contract(b: int, n: int, *, tile_b: int = 8, tile_n: int = 2048,
+                    dtype=jnp.float32):
+    """Static launch geometry of :func:`rowsumsq` at padded shapes —
+    the analyzer-checkable contract (kernels/contract.py)."""
+    from repro.kernels.contract import Block, Divisibility, LaunchContract
+    return LaunchContract(
+        kernel="rowsumsq",
+        grid=(max(b // tile_b, 1), max(n // tile_n, 1)),
+        blocks=(
+            Block("x", (tile_b, tile_n), dtype),
+            # revisited output block: per-row partials accumulate across
+            # the n axis, so the f32 rule applies
+            Block("out", (tile_b, 1), jnp.float32, kind="out",
+                  accumulator=True),
+        ),
+        divisibility=(
+            Divisibility("b", b, tile_b),
+            Divisibility("n", n, tile_n),
+        ),
+    )
+
+
 def _kernel(n_k: int, x_ref, out_ref):
     k = pl.program_id(1)
 

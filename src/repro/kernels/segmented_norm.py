@@ -90,6 +90,34 @@ def bytes_estimate(n_work: int, tile_t: int, p_in: int, p_out: int,
     return int(panels * itemsize + n_ci * n_co * n_seg * 4)
 
 
+def launch_contract(t: int, p_in: int, p_out: int, n_seg_pad: int,
+                    n_work: int, *, tile_t: int = 128, chunk_in: int = 512,
+                    chunk_out: int = 512, dtype=jnp.float32):
+    """Static launch geometry of :func:`segmented_norm_sorted` at padded
+    shapes — the analyzer-checkable contract (kernels/contract.py)."""
+    from repro.kernels.contract import Block, Divisibility, LaunchContract
+    return LaunchContract(
+        kernel="segmented_norm",
+        grid=(max(p_in // chunk_in, 1), max(p_out // chunk_out, 1),
+              max(n_work, 1)),
+        blocks=(
+            Block("h", (tile_t, chunk_in), dtype),
+            Block("zbar", (tile_t, chunk_out), dtype),
+            Block("out", (1, n_seg_pad), jnp.float32, kind="out",
+                  accumulator=True),
+            Block("g_acc", (chunk_in, chunk_out), jnp.float32,
+                  kind="scratch", accumulator=True),
+        ),
+        divisibility=(
+            Divisibility("t", t, tile_t),
+            Divisibility("p_in", p_in, chunk_in),
+            Divisibility("p_out", p_out, chunk_out),
+            Divisibility("n_seg_pad", n_seg_pad, 128),
+        ),
+        scalar_prefetch=6,
+    )
+
+
 def _kernel(blk_ref, r0_ref, r1_ref, seg_ref, first_ref, last_ref,
             h_ref, z_ref, out_ref, g_acc):
     w = pl.program_id(2)

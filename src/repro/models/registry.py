@@ -33,6 +33,28 @@ _FAMILIES = {
     "seamless": seamless,
 }
 
+#: Parameters *intentionally* outside the pex norm scope, per arch
+#: (DESIGN.md §5, §10) — the single source of truth consumed by both
+#: the static tap-coverage verifier (``repro.analysis``/
+#: ``Engine.verify``) and the exactness-test scope filters
+#: (tests/helpers.py), so the analyzer and the oracle can never
+#: disagree about scope. Entries are substrings matched against a
+#: parameter leaf's key path. zamba2: the weight-shared global block
+#: runs with ``taps.NULL`` and the ssm conv/decay tensors
+#: (conv_w/conv_b/a_log/d) take non-matmul gradient paths; rwkv6: the
+#: token/channel-mix interpolation bases (mu), decay base (w0), and
+#: bonus (u) likewise. An arch with untapped trained params *not*
+#: declared here fails `python -m repro.analysis`.
+UNTAPPED_ALLOWLIST: Dict[str, tuple] = {
+    "zamba2-7b": ("shared", "a_log", "'d'", "conv_w", "conv_b"),
+    "rwkv6-3b": ("mu", "w0", "'u'"),
+}
+
+
+def untapped_allowlist(arch_id: str) -> tuple:
+    """Declared intentionally-untapped path patterns for an arch."""
+    return UNTAPPED_ALLOWLIST.get(arch_id, ())
+
 
 def get(arch_id: str) -> ArchSpec:
     if arch_id not in ARCHS:

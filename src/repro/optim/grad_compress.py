@@ -23,10 +23,19 @@ def init_error(params):
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+def _quant(x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-tensor int8 quantization, guarded against a non-finite
+    amax: a single NaN/inf element would otherwise poison the scale
+    and turn the WHOLE tensor into NaN on dequant (NaN/NaN rounds to
+    NaN, clip keeps it, int8 cast is undefined). When amax is not
+    finite the tensor is quantized as zeros and the caller falls back
+    to the uncompressed values for that step."""
+    amax = jnp.max(jnp.abs(x))
+    finite = jnp.isfinite(amax)
+    scale = jnp.maximum(jnp.where(finite, amax, 0.0), 1e-12) / 127.0
+    xq = jnp.where(jnp.isfinite(x) & finite, x, 0.0)
+    q = jnp.clip(jnp.round(xq / scale), -127, 127).astype(jnp.int8)
+    return q, scale, finite
 
 
 def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
@@ -34,12 +43,20 @@ def _dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
 
 
 def compress_decompress(grads, err):
-    """Returns (compressed-then-restored grads, new error feedback)."""
+    """Returns (compressed-then-restored grads, new error feedback).
+
+    A tensor whose amax is non-finite (overflow/NaN gradient, e.g. a
+    loss-scale spike) passes through uncompressed for that step — the
+    values are unchanged for the optimizer/skip logic downstream — and
+    contributes nothing to the error carry, so one bad step cannot
+    poison future compressed steps through the feedback loop."""
     def one(g, e):
         gf = g.astype(jnp.float32) + e
-        q, s = _quant(gf)
+        q, s, finite = _quant(gf)
         deq = _dequant(q, s)
-        return deq.astype(g.dtype), gf - deq
+        out = jnp.where(finite, deq, gf)
+        new_e = jnp.where(finite, gf - deq, jnp.zeros_like(gf))
+        return out.astype(g.dtype), new_e
 
     out = jax.tree_util.tree_map(one, grads, err)
     is_pair = lambda t: isinstance(t, tuple) and len(t) == 2 and \

@@ -9,15 +9,14 @@ from repro.core.taps import NULL
 from repro.models import registry
 from repro.nn.param import unbox
 
-# params outside the pex norm scope, per arch (DESIGN.md §5)
-PEX_SCOPE_EXCLUDE = {
-    "zamba2-7b": ("shared", "a_log", "'d'", "conv_w", "conv_b"),
-    "rwkv6-3b": ("mu", "w0", "'u'"),
-}
+# params outside the pex norm scope, per arch — derived from the
+# registry's declared allowlist (DESIGN.md §5, §10) so the oracle
+# scope filter and the static tap-coverage verifier share one table
+PEX_SCOPE_EXCLUDE = registry.UNTAPPED_ALLOWLIST
 
 
 def scope_filter(arch_id):
-    excl = PEX_SCOPE_EXCLUDE.get(arch_id, ())
+    excl = registry.untapped_allowlist(arch_id)
     return lambda path: not any(e in str(path) for e in excl)
 
 

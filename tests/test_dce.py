@@ -1,14 +1,17 @@
 """The zero-overhead claim, pinned by HLO cost: an instrumented model
 whose taps are disabled — or enabled but with norms not requested —
 must lower to the same flop/byte cost as the plain model, so the DCE
-property (taps docstring / DESIGN.md §1) can't silently regress."""
-import jax
-import jax.numpy as jnp
-import pytest
+property (taps docstring / DESIGN.md §1) can't silently regress.
 
-from repro.core.taps import DISABLED, ExampleLayout, PexSpec, Tap, NULL
+The assertions live in ``repro.analysis.plan_invariants`` (pexlint
+pass 2) — this file pins them on a real arch; the benches reuse the
+same ``check_*`` arithmetic on their own measurements.
+"""
+import jax
+
+from repro.analysis import plan_invariants as pi
+from repro.core.taps import PexSpec
 from repro.models import registry
-from repro.roofline.hlo import compiled_cost
 
 
 def _setup():
@@ -24,28 +27,9 @@ def _setup():
     return params, batch, loss_v2
 
 
-def _grad_cost(loss_v2, params, batch, spec):
-    """Compile grad-wrt-params of the (possibly instrumented) total
-    loss; the accumulator gradient is never requested."""
-    def total(p):
-        if spec is None:
-            lv, _ = loss_v2(p, batch, NULL)
-        else:
-            tap = Tap(spec, acc=ExampleLayout(spec.n_groups).init(
-                batch["ids"].shape[0]))
-            lv, _ = loss_v2(p, batch, tap)
-        return jnp.sum(lv)
-
-    compiled = jax.jit(jax.grad(total)).lower(params).compile()
-    return compiled_cost(compiled)
-
-
 def test_disabled_spec_compiles_to_plain_model():
     params, batch, loss_v2 = _setup()
-    flops_plain, bytes_plain = _grad_cost(loss_v2, params, batch, None)
-    flops_off, bytes_off = _grad_cost(loss_v2, params, batch, DISABLED)
-    assert flops_off == pytest.approx(flops_plain, rel=1e-6)
-    assert bytes_off == pytest.approx(bytes_plain, rel=1e-6)
+    pi.assert_disabled_spec_is_plain(loss_v2, params, batch)
 
 
 def test_unrequested_norms_are_dce_dead():
@@ -56,8 +40,21 @@ def test_unrequested_norms_are_dce_dead():
     than autodiff transpose of the plain einsum; what must never
     appear is the O(B·S²)/O(mnp) stat work.)"""
     params, batch, loss_v2 = _setup()
-    flops_plain, bytes_plain = _grad_cost(loss_v2, params, batch, None)
-    flops_on, bytes_on = _grad_cost(loss_v2, params, batch,
-                                    PexSpec(enabled=True, method="gram"))
-    assert flops_on <= flops_plain * (1 + 1e-6)
-    assert bytes_on <= bytes_plain * (1 + 1e-6)
+    pi.assert_unrequested_norms_dce(
+        loss_v2, params, batch, spec=PexSpec(enabled=True, method="gram"))
+
+
+def test_empty_plan_is_plain_forward():
+    """step([]) lowers to exactly the plain forward — promoted from
+    benchmarks/bench_plan.py so the invariant is pinned in tier 1."""
+    params, batch, loss_v2 = _setup()
+    pi.assert_empty_plan_is_plain(loss_v2, params, batch)
+
+
+def test_clip_plan_fits_backward_budget():
+    """The Clip plan fits cost(norms) + (cost(grad) − cost(fwd)) —
+    one tapped forward, one activation backward, ONE reweighted
+    backward; a second forward would blow the budget."""
+    from repro import pex
+    params, batch, loss_v2 = _setup()
+    pi.assert_backward_budget(loss_v2, params, batch, [pex.Clip(1.0)])

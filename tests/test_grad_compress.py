@@ -1,0 +1,75 @@
+"""Error-feedback int8 compression: round-trip quality and the
+non-finite-amax guard (a single NaN/inf element must not poison the
+whole tensor's scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.grad_compress import (compress_decompress, init_error,
+                                       _dequant, _quant)
+
+
+def _tree(x):
+    return {"w": jnp.asarray(x, jnp.float32)}
+
+
+def test_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(64, 32)).astype(np.float32)
+    q, s, finite = _quant(jnp.asarray(g))
+    assert bool(finite)
+    deq = _dequant(q, s)
+    # per-tensor int8: error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_carries_residual():
+    g = _tree([[1.0, -0.3], [0.2, 0.05]])
+    err = init_error(g)
+    out, new_err = compress_decompress(g, err)
+    np.testing.assert_allclose(np.asarray(out["w"] + new_err["w"]),
+                               np.asarray(g["w"]), rtol=0, atol=1e-6)
+
+
+def test_nan_amax_falls_back_to_passthrough():
+    g = _tree([[1.0, float("nan")], [0.2, 0.05]])
+    err = init_error(g)
+    out, new_err = compress_decompress(g, err)
+    # the tensor passes through uncompressed: finite entries unchanged,
+    # the NaN is preserved for downstream skip logic -- and crucially
+    # the OTHER entries did not become NaN via a poisoned scale
+    o = np.asarray(out["w"])
+    assert np.isnan(o[0, 1])
+    np.testing.assert_allclose(o[0, 0], 1.0, atol=1e-6)
+    np.testing.assert_allclose(o[1, 0], 0.2, atol=1e-6)
+    # and the error carry is cleared, not NaN-contaminated
+    assert np.all(np.asarray(new_err["w"]) == 0.0)
+
+
+def test_inf_amax_falls_back_to_passthrough():
+    g = _tree([[jnp.inf, 2.0]])
+    out, new_err = compress_decompress(g, init_error(g))
+    o = np.asarray(out["w"])
+    assert np.isinf(o[0, 0])
+    np.testing.assert_allclose(o[0, 1], 2.0, atol=1e-6)
+    assert np.all(np.asarray(new_err["w"]) == 0.0)
+
+
+def test_bad_step_does_not_poison_next_step():
+    g_bad = _tree([[float("nan"), 1.0]])
+    g_good = _tree([[0.5, 1.0]])
+    err = init_error(g_bad)
+    _, err = compress_decompress(g_bad, err)
+    out, err2 = compress_decompress(g_good, err)
+    assert np.all(np.isfinite(np.asarray(out["w"])))
+    assert np.all(np.isfinite(np.asarray(err2["w"])))
+
+
+def test_finite_tensors_unaffected_by_guard():
+    rng = np.random.default_rng(1)
+    g = _tree(rng.normal(size=(16, 16)))
+    out_g, err_g = compress_decompress(g, init_error(g))
+    # guard is a no-op on finite input: reconstruction is exact
+    np.testing.assert_allclose(np.asarray(out_g["w"] + err_g["w"]),
+                               np.asarray(g["w"]), atol=1e-6)

@@ -1,0 +1,132 @@
+"""pexlint passes on the real registry: tap coverage is clean on every
+registered arch (zero false positives), the allowlist is load-bearing
+(removing it flags the declared leaves), the analysis is trace-only,
+and Engine.verify composes the passes."""
+import jax
+import pytest
+
+from repro.analysis import coverage as cov
+from repro.analysis.verify import verify as verify_model
+from repro.configs.common import ShapeSpec
+from repro.core.engine import Engine
+from repro.core.taps import PexSpec, TokenLayout
+from repro.models import registry
+from repro.nn.param import unbox
+
+ALL_ARCHS = sorted(registry.ARCHS)
+
+
+def abstract_setup(arch_id, b=3, s=8):
+    aspec = registry.get(arch_id)
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = jax.eval_shape(
+        lambda: unbox(mod.init(jax.random.PRNGKey(0), cfg)))
+    batch = registry.train_batch_specs(aspec, cfg,
+                                       ShapeSpec("lint", "train", s, b))
+    return aspec, registry.make_loss_fn_v2(aspec, cfg), params, batch
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_clean_arch_has_no_coverage_errors(arch_id):
+    _, loss_fn, params, batch = abstract_setup(arch_id)
+    rep = cov.trace_coverage(loss_fn, params, batch,
+                             allow=registry.untapped_allowlist(arch_id))
+    assert rep.ok, rep.summary()
+    c = rep.counts()
+    assert c[cov.TAPPED] > 0
+    assert len(rep.sites) > 0
+
+
+@pytest.mark.parametrize("arch_id", ["llama3.2-1b", "phi3.5-moe",
+                                     "rwkv6-3b", "seamless-m4t-medium"])
+def test_token_layout_coverage_is_clean(arch_id):
+    _, loss_fn, params, batch = abstract_setup(arch_id)
+    spec = PexSpec(enabled=True)
+    rep = cov.trace_coverage(loss_fn, params, batch, spec=spec,
+                             layout=TokenLayout(8),
+                             allow=registry.untapped_allowlist(arch_id))
+    assert rep.ok, rep.summary()
+
+
+@pytest.mark.parametrize("arch_id", sorted(registry.UNTAPPED_ALLOWLIST))
+def test_allowlist_is_load_bearing(arch_id):
+    """Without the declared allowlist the untapped-but-trained leaves
+    must surface as errors — proving the pass detects them and the
+    allowlist is the only thing keeping these archs green."""
+    _, loss_fn, params, batch = abstract_setup(arch_id)
+    rep = cov.trace_coverage(loss_fn, params, batch, allow=())
+    assert not rep.ok
+    allow = registry.untapped_allowlist(arch_id)
+    for leaf in rep.errors:
+        # leaf.path is the keystr form, e.g. ['blocks']['tmix']['mu']
+        assert any(a in leaf.path for a in allow), (
+            f"undeclared untapped leaf {leaf.path}")
+    with pytest.raises(cov.AnalysisError):
+        rep.raise_if_errors()
+
+
+def test_coverage_is_trace_only():
+    """The pass must never reach XLA compilation (abstract inputs and
+    a blocked compile entry point)."""
+    from jax._src import compiler
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    orig = compiler.backend_compile
+
+    def blocked(*a, **kw):
+        raise AssertionError("coverage pass triggered an XLA compile")
+
+    compiler.backend_compile = blocked
+    try:
+        rep = cov.trace_coverage(loss_fn, params, batch)
+    finally:
+        compiler.backend_compile = orig
+    assert rep.ok
+
+
+def test_engine_verify_end_to_end():
+    from repro import pex
+    aspec, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    eng = Engine(PexSpec(enabled=True), clip_norm=1.0)
+    key = jax.random.PRNGKey(1)
+    rep = eng.verify(
+        loss_fn, params, batch,
+        [[], [pex.Norms()], [pex.Clip(1.0), pex.Noise(0.1, key),
+                             pex.GNS()]],
+        cfg=aspec.full())
+    assert rep.ok, rep.summary()
+    assert len(rep.plans) == 3
+    assert rep.plans[0].n_backwards == 0
+    assert rep.plans[1].n_backwards == 1
+    assert rep.plans[2].n_backwards == 2
+    rep.raise_if_errors()
+    assert "backwards=2" in rep.plans[2].describe()
+
+
+def test_engine_verify_rejects_invalid_plan():
+    aspec, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    from repro import pex
+    eng = Engine(PexSpec(enabled=True), granularity="token")
+    with pytest.raises(NotImplementedError, match="GNS"):
+        eng.verify(loss_fn, params, batch,
+                   [pex.Clip(1.0, granularity="token"), pex.GNS()],
+                   seq=8)
+
+
+def test_verify_token_granularity():
+    aspec, loss_fn, params, batch = abstract_setup("phi3.5-moe")
+    from repro import pex
+    key = jax.random.PRNGKey(0)
+    rep = verify_model(
+        loss_fn, params, batch,
+        [[pex.Clip(1.0, granularity="token"),
+          pex.Noise(0.1, key, scale=1.0)]],
+        granularity="token", seq=8,
+        allow=registry.untapped_allowlist("phi3.5-moe"))
+    assert rep.ok, rep.summary()
+    assert rep.plans[0].token_norms
+
+
+def test_cli_main_single_arch():
+    from repro.analysis.__main__ import main
+    assert main(["--arch", "llama3.2-1b", "--fail-on-error"]) == 0

@@ -1,0 +1,120 @@
+"""Mutation corpus for the tap-coverage verifier: programmatically
+delete one tap site at a time — route the k-th instrumented op of the
+trace through its plain counterpart — across all four model families;
+pexlint must flag EVERY mutant (100% detection) while the clean traces
+stay green (zero false positives, test_pexlint.py).
+
+A deleted site sends the weight's gradient down the ordinary autodiff
+path, so its taint reaches the loss and the leaf classifies as
+untapped-but-trained; a site inside a scan body covers all layers at
+once (the body traces once), which only makes the mutant bigger, not
+harder to see.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import coverage as cov
+from repro.core.taps import Tap
+from repro.models import registry
+
+from tests.test_pexlint import abstract_setup
+
+# one representative per family: transformer (with MoE), rwkv6,
+# zamba2, seamless (encoder-decoder)
+CORPUS = ["phi3.5-moe", "rwkv6-3b", "zamba2-7b", "seamless-m4t-medium"]
+
+
+class MutantTap(Tap):
+    """Tap that drops its ``kill``-th op call (trace order) to the
+    uninstrumented path; ``kill=-1`` counts sites without mutating."""
+    __slots__ = ("kill", "count")
+
+    def __init__(self, spec, acc=None, layout=None, kill=-1):
+        super().__init__(spec, acc, layout)
+        self.kill = kill
+        self.count = 0
+
+    def _dead(self) -> bool:
+        k = self.count
+        self.count += 1
+        return k == self.kill
+
+    def dense(self, h, w, **kw):
+        if self._dead():
+            return jnp.einsum("...i,io->...o", h, w)
+        return super().dense(h, w, **kw)
+
+    def bias_add(self, x, b, **kw):
+        if self._dead():
+            return x + b
+        return super().bias_add(x, b, **kw)
+
+    def scale(self, h, g, **kw):
+        if self._dead():
+            return h * g
+        return super().scale(h, g, **kw)
+
+    def embedding(self, table, ids, **kw):
+        if self._dead():
+            return jnp.take(table, ids, axis=0)
+        return super().embedding(table, ids, **kw)
+
+    def dense_expert(self, x, w, seg, tok=None, **kw):
+        if self._dead():
+            return jnp.einsum("ecd,edf->ecf", x, w)
+        return super().dense_expert(x, w, seg, tok, **kw)
+
+    def dense_expert_grouped(self, x, w, seg, bg, tok=None, **kw):
+        if self._dead():
+            return jnp.einsum("gecd,gedf->gecf", x, w) \
+                if w.ndim == 4 else jnp.einsum("gecd,edf->gecf", x, w)
+        return super().dense_expert_grouped(x, w, seg, bg, tok, **kw)
+
+
+def _count_sites(loss_fn, params, batch) -> int:
+    holder = {}
+
+    def factory(spec, acc=None, layout=None):
+        tap = MutantTap(spec, acc, layout, kill=-1)
+        holder["tap"] = tap
+        return tap
+
+    cov.trace_coverage(loss_fn, params, batch, tap_factory=factory)
+    return holder["tap"].count
+
+
+@pytest.mark.parametrize("arch_id", CORPUS)
+def test_every_deleted_tap_site_is_flagged(arch_id):
+    _, loss_fn, params, batch = abstract_setup(arch_id)
+    allow = registry.untapped_allowlist(arch_id)
+    n = _count_sites(loss_fn, params, batch)
+    assert n > 0
+    missed = []
+    for k in range(n):
+        rep = cov.trace_coverage(
+            loss_fn, params, batch, allow=allow,
+            tap_factory=lambda spec, acc=None, layout=None:
+                MutantTap(spec, acc, layout, kill=k))
+        if rep.ok:
+            missed.append(k)
+    assert not missed, (
+        f"{arch_id}: deleting tap call(s) {missed} of {n} went "
+        f"undetected by the coverage pass")
+
+
+def test_mutant_errors_name_the_right_leaves():
+    """Killing the first dense site must flag exactly the weight(s)
+    routed through it — not unrelated leaves (precision, not just
+    recall)."""
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    clean = cov.trace_coverage(loss_fn, params, batch)
+    assert clean.ok
+    rep = cov.trace_coverage(
+        loss_fn, params, batch,
+        tap_factory=lambda spec, acc=None, layout=None:
+            MutantTap(spec, acc, layout, kill=0))
+    assert not rep.ok
+    # every flagged leaf was TAPPED in the clean trace
+    clean_by_path = {str(l.path): l.status for l in clean.leaves}
+    for leaf in rep.errors:
+        assert clean_by_path[str(leaf.path)] == cov.TAPPED

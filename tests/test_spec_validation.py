@@ -1,0 +1,33 @@
+"""PexSpec construction-time validation: group patterns resolve by
+first match, so duplicates and shadowed catch-alls must be rejected at
+construction with the conflict named, not discovered as silently-merged
+stat columns."""
+import pytest
+
+from repro.core.taps import PexSpec
+
+
+def test_valid_specs_construct():
+    PexSpec(enabled=True)
+    PexSpec(enabled=True, groups=("attn", "mlp", "other"))
+    PexSpec(enabled=True, groups=("embed", "all"))
+    PexSpec(enabled=False)
+
+
+def test_duplicate_group_rejected():
+    with pytest.raises(ValueError, match="duplicate pex group"):
+        PexSpec(enabled=True, groups=("attn", "mlp", "attn"))
+
+
+def test_duplicate_error_names_columns():
+    with pytest.raises(ValueError, match=r"'mlp' \(columns 0 and 2\)"):
+        PexSpec(enabled=True, groups=("mlp", "attn", "mlp"))
+
+
+def test_shadowing_catch_alls_rejected():
+    with pytest.raises(ValueError, match="catch-all"):
+        PexSpec(enabled=True, groups=("all", "other"))
+
+
+def test_single_catch_all_ok():
+    assert PexSpec(enabled=True, groups=("attn", "other")).n_groups == 2
