@@ -22,11 +22,20 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: everything a torn / truncated / corrupted step dir can throw at the
+#: reader: missing files (OSError, which IOError aliases), torn
+#: manifest json (json.JSONDecodeError ⊂ ValueError), truncated npz
+#: (zipfile.BadZipFile), short raw buffers (ValueError), manifest
+#: missing keys (KeyError).
+_RESTORE_ERRORS = (OSError, ValueError, KeyError, zipfile.BadZipFile)
 
 
 def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -43,7 +52,30 @@ class CheckpointManager:
         self.host_id = host_id
         self.num_hosts = num_hosts
         self._thread: Optional[threading.Thread] = None
+        self._write_exc: Optional[BaseException] = None
+        #: step actually used by the last successful restore() (it may
+        #: have fallen back from the requested/latest step)
+        self.last_restored_step: Optional[int] = None
         os.makedirs(directory, exist_ok=True)
+        self._sweep_stale_tmp()
+
+    def _sweep_stale_tmp(self) -> None:
+        """Remove `step_*.tmp` litter from a writer that crashed
+        mid-save in a previous life. Readers never see tmp dirs
+        (``all_steps`` filters them), but the litter would block the
+        atomic rename of a later save of the same step on platforms
+        where rename-onto-nonempty-dir fails — and it wastes disk.
+        Construction is the safe moment: this manager has no save in
+        flight yet, and a committed dir is never named ``.tmp``."""
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                path = os.path.join(self.dir, name)
+                warnings.warn(f"sweeping stale checkpoint tmp dir {path} "
+                              f"(crashed mid-save)")
+                if os.path.isdir(path):
+                    shutil.rmtree(path, ignore_errors=True)
+                else:
+                    os.unlink(path)
 
     # -- paths ------------------------------------------------------------
     def _step_dir(self, step: int, tmp: bool = False) -> str:
@@ -74,11 +106,24 @@ class CheckpointManager:
             self.wait()
 
     def wait(self) -> None:
+        """Join the in-flight save. A background ``_write`` failure is
+        captured on the writer thread and re-raised HERE (and therefore
+        at the next ``save()``, which waits first) — silently losing
+        checkpoints is how a later host failure becomes unrecoverable."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._write_exc is not None:
+            exc, self._write_exc = self._write_exc, None
+            raise exc
 
     def _write(self, step: int, host_items, extra: Dict) -> None:
+        try:
+            self._write_inner(step, host_items, extra)
+        except BaseException as e:          # noqa: BLE001 — re-raised at wait()
+            self._write_exc = e
+
+    def _write_inner(self, step: int, host_items, extra: Dict) -> None:
         tmp = self._step_dir(step, tmp=True)
         final = self._step_dir(step)
         os.makedirs(tmp, exist_ok=True)
@@ -116,10 +161,39 @@ class CheckpointManager:
     def restore(self, step: Optional[int], like_tree,
                 shardings=None) -> Tuple[Any, Dict]:
         """Rebuild the pytree (re-sharded to `shardings` if given).
-        Verifies content hashes; raises on corruption."""
+
+        Verifies content hashes. A hash-mismatched, truncated, or
+        otherwise unreadable step dir is *not* fatal: it warns and
+        falls back to the newest earlier committed step, raising only
+        when no restorable checkpoint exists — a single corrupt shard
+        costing a step of progress beats it killing the run. The step
+        actually used is recorded in ``self.last_restored_step``."""
+        steps = self.all_steps()
         if step is None:
-            step = self.latest_step()
-        assert step is not None, "no checkpoint found"
+            candidates = list(reversed(steps))
+        else:
+            candidates = [step] + [s for s in reversed(steps) if s < step]
+        assert candidates, "no checkpoint found"
+        errors: List[str] = []
+        for s in candidates:
+            try:
+                tree, extra = self._restore_step(s, like_tree)
+            except _RESTORE_ERRORS as e:
+                errors.append(f"step {s}: {type(e).__name__}: {e}")
+                if len(candidates) > len(errors):
+                    warnings.warn(
+                        f"checkpoint step {s} unreadable "
+                        f"({type(e).__name__}: {e}); falling back to the "
+                        f"newest earlier committed step")
+                continue
+            self.last_restored_step = s
+            if shardings is not None:
+                tree = jax.device_put(tree, shardings)
+            return tree, extra
+        raise IOError("no restorable checkpoint in "
+                      f"{self.dir}; tried: " + "; ".join(errors))
+
+    def _restore_step(self, step: int, like_tree) -> Tuple[Any, Dict]:
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -130,7 +204,11 @@ class CheckpointManager:
             raise IOError(f"checkpoint shard corrupt at step {step}")
         data = np.load(shard_path)
         flat_like, treedef = jax.tree_util.tree_flatten(like_tree)
-        assert len(flat_like) == len(manifest["keys"]), "tree structure changed"
+        if len(flat_like) != len(manifest["keys"]):
+            raise ValueError(
+                f"tree structure changed: checkpoint has "
+                f"{len(manifest['keys'])} leaves, caller expects "
+                f"{len(flat_like)}")
         out = []
         for i, like in enumerate(flat_like):
             raw = data[f"leaf_{i}"]
@@ -140,7 +218,4 @@ class CheckpointManager:
                 np.frombuffer(raw.tobytes(), dtype).reshape(shape),
                 dtype=like.dtype)
             out.append(arr)
-        tree = jax.tree_util.tree_unflatten(treedef, out)
-        if shardings is not None:
-            tree = jax.device_put(tree, shardings)
-        return tree, manifest["extra"]
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

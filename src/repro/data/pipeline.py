@@ -9,7 +9,7 @@ on. Sharding: each data-parallel host materializes only its slice
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,14 +30,25 @@ class DataConfig:
 
 @dataclasses.dataclass
 class PipelineState:
+    """Everything needed to resume the stream: the step cursor and the
+    seed that generated it. Persisted in checkpoint ``extra`` so a
+    restore can *verify* it is replaying the same stream rather than
+    silently training on different data."""
     step: int = 0
+    seed: int = 0
 
     def to_dict(self) -> Dict:
-        return {"step": self.step}
+        return {"step": self.step, "seed": self.seed}
 
     @classmethod
     def from_dict(cls, d: Dict) -> "PipelineState":
-        return cls(step=int(d["step"]))
+        missing = [k for k in ("step", "seed") if k not in d]
+        if missing:
+            raise ValueError(
+                f"pipeline state is missing key(s) {missing} (have "
+                f"{sorted(d)}); refusing to resume onto an unknown "
+                f"data cursor")
+        return cls(step=int(d["step"]), seed=int(d["seed"]))
 
 
 class SyntheticLM:
@@ -76,3 +87,77 @@ class SyntheticLM:
         while True:
             yield self.batch_at(step)
             step += 1
+
+
+# --- elastic host renumbering ----------------------------------------------
+#
+# The fault-tolerance layer needs the *global* token stream to be
+# invariant under topology changes: after a contraction from 8 hosts to
+# 4, the uninterrupted-run batches must still be reproducible, or every
+# recovery silently changes the data. The trick is to fix the shard
+# grid at launch ("logical shards" — one per host of the LAUNCH
+# topology) and renumber only the *ownership* of shards when hosts come
+# and go. Each logical shard is a pure (seed, step, shard) stream, so
+# the concatenation over shards — the global batch — never depends on
+# which physical host happens to own which shard.
+
+def assign_logical_shards(n_logical: int,
+                          active_hosts: Sequence[int]) -> Dict[int, List[int]]:
+    """Order-preserving, contiguous, balanced assignment of the fixed
+    logical shard grid onto the (sorted) active host set: the k-th
+    active host owns shards [k·m, (k+1)·m). Order preservation is what
+    keeps the assembled global batch equal to the logical-order
+    concatenation after any retopologize."""
+    hosts = sorted(active_hosts)
+    if not hosts:
+        raise ValueError("no active hosts to assign shards to")
+    if n_logical % len(hosts):
+        raise ValueError(
+            f"{n_logical} logical shards do not divide over "
+            f"{len(hosts)} hosts; contract/expand to a divisor "
+            f"(power-of-two topologies guarantee this)")
+    m = n_logical // len(hosts)
+    return {h: list(range(k * m, (k + 1) * m))
+            for k, h in enumerate(hosts)}
+
+
+class LogicalShardedLM:
+    """``SyntheticLM`` over a fixed logical shard grid.
+
+    ``n_logical`` is pinned at launch (normally the launch topology's
+    host count) and never changes; physical hosts own shard subsets via
+    ``assign_logical_shards``. ``global_batch_at(step)`` is therefore a
+    pure function of (cfg.seed, step) alone — the invariant the soak
+    harness (launch/soak.py) asserts across kill/contract/expand."""
+
+    def __init__(self, cfg: DataConfig, n_logical: int):
+        if cfg.global_batch % n_logical:
+            raise ValueError(f"global_batch {cfg.global_batch} not "
+                             f"divisible into {n_logical} logical shards")
+        self.cfg = cfg
+        self.n_logical = n_logical
+        self.shards = [SyntheticLM(cfg, host_id=i, num_hosts=n_logical)
+                       for i in range(n_logical)]
+
+    def shard_batch_at(self, step: int, shard_ids: Sequence[int]):
+        """One physical host's slice: its owned logical shards, in
+        shard order."""
+        parts = [self.shards[i].batch_at(step) for i in shard_ids]
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+    def global_batch_at(self, step: int,
+                        owned: Optional[Dict[int, List[int]]] = None):
+        """The full global batch. With ``owned`` (host → shard list),
+        assembled the way the cluster would — host by host in sorted
+        host order — which equals the logical-order concatenation iff
+        the assignment is order-preserving: feeding this to the
+        data-replay invariant is what catches renumbering bugs."""
+        if owned is None:
+            return self.shard_batch_at(step, range(self.n_logical))
+        order = [i for h in sorted(owned) for i in owned[h]]
+        return self.shard_batch_at(step, order)
+
+    def batch_at(self, step: int):
+        """Trainer data-source protocol (the full global batch)."""
+        return self.global_batch_at(step)

@@ -138,6 +138,26 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
                          axis_types=(axis_type.Auto,) * len(axes))
 
 
+def make_mesh_over(devices: Sequence, shape: Sequence[int],
+                   axes: Sequence[str]) -> Mesh:
+    """Mesh over an *explicit* device subset — the elastic
+    contraction/expansion primitive: after a host loss the surviving
+    devices (in renumbered order) become the new data axis, without
+    touching the dead ones ``jax.make_mesh`` would insist on using.
+    ``len(devices)`` must equal ``prod(shape)``."""
+    import math
+
+    import numpy as np
+    n = math.prod(shape)
+    if len(devices) != n:
+        raise ValueError(f"{len(devices)} devices cannot fill a mesh of "
+                         f"shape {tuple(shape)} (= {n})")
+    arr = np.empty(n, dtype=object)
+    for i, d in enumerate(devices):
+        arr[i] = d
+    return Mesh(arr.reshape(tuple(shape)), tuple(axes))
+
+
 # --- mesh arithmetic -------------------------------------------------------
 
 def axis_size(axes: AxisRule, mesh: Optional[Mesh] = None) -> int:

@@ -1,1 +1,22 @@
-"""repro.ft"""
+"""repro.ft — fault tolerance: detection (heartbeat), planning
+(elastic), deterministic fault injection (inject), and supervised
+recovery (supervisor). The closed loop is exercised end to end by the
+soak harness, ``python -m repro.launch.soak`` (DESIGN.md §11)."""
+from repro.ft.elastic import (Topology, plan_contraction, plan_expansion,
+                              reassign_data_hosts)
+from repro.ft.heartbeat import (HeartbeatConfig, HeartbeatMonitor,
+                                detect_stragglers)
+from repro.ft.inject import (FaultEvent, FaultPlan, corrupt_newest_checkpoint,
+                             litter_tmp_dir, poison_loss_fn, random_storm,
+                             scripted_storm)
+from repro.ft.supervisor import (RecoveryActions, RecoveryEvent, Supervisor,
+                                 SupervisorConfig, SupervisorHalted)
+
+__all__ = [
+    "Topology", "plan_contraction", "plan_expansion", "reassign_data_hosts",
+    "HeartbeatConfig", "HeartbeatMonitor", "detect_stragglers",
+    "FaultEvent", "FaultPlan", "corrupt_newest_checkpoint",
+    "litter_tmp_dir", "poison_loss_fn", "random_storm", "scripted_storm",
+    "RecoveryActions", "RecoveryEvent", "Supervisor", "SupervisorConfig",
+    "SupervisorHalted",
+]

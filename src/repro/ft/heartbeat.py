@@ -41,15 +41,31 @@ class HeartbeatMonitor:
         os.replace(tmp, path)
 
     def survey(self, now: Optional[float] = None) -> Dict[int, Dict]:
+        """One entry per heartbeat file. A torn, empty, or otherwise
+        unreadable heartbeat is a *dead* host, not a crashed survey —
+        the monitor is exactly the thing that must keep working while
+        hosts are failing. The parse error is recorded in the payload
+        (``payload["error"]``) so the supervisor can log why. In-flight
+        ``.tmp`` files from ``beat``'s atomic write are skipped (the
+        committed file is the heartbeat); files whose name carries no
+        parseable host id are skipped (they are not heartbeats)."""
         now = now or time.time()
         out = {}
         for name in os.listdir(self.dir):
-            if not name.startswith("host_"):
+            if not name.startswith("host_") or name.endswith(".tmp"):
                 continue
-            hid = int(name.split("_")[1].split(".")[0])
-            with open(os.path.join(self.dir, name)) as f:
-                payload = json.load(f)
-            payload["alive"] = (now - payload["time"]) < self.cfg.deadline_s
+            try:
+                hid = int(name.split("_")[1].split(".")[0])
+            except (IndexError, ValueError):
+                continue            # misnamed: not a heartbeat file
+            try:
+                with open(os.path.join(self.dir, name)) as f:
+                    payload = json.load(f)
+                stale = now - float(payload["time"])
+                payload["alive"] = stale < self.cfg.deadline_s
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                payload = {"alive": False,
+                           "error": f"{type(e).__name__}: {e}"}
             out[hid] = payload
         return out
 

@@ -1,0 +1,590 @@
+"""Elastic soak harness: a simulated N-host world under a fault storm.
+
+    PYTHONPATH=src python -m repro.launch.soak --hosts 8 --steps 40 \
+        --storm short --seed 0
+    PYTHONPATH=src python -m repro.launch.soak --hosts 4 --steps 24 \
+        --mutation-check
+
+Simulates N hosts in one process (forced host devices, one device per
+simulated host), runs the per-example-norm training pipeline through a
+deterministic ``FaultPlan`` storm — kill a host mid-run, contract,
+restore, resume; corrupt the newest checkpoint shard and watch restore
+fall back a step; return the hosts and expand back — and *asserts*
+the three invariants that make it a test, not a demo (DESIGN.md §11):
+
+INV1 ``bit-exact-restore``  — after every recovery, params + optimizer
+     state are byte-identical (sha256 over canonical leaf bytes) to
+     the snapshot taken when the restored step was saved.
+INV2 ``data-replay``        — every trained step consumes exactly the
+     global batch an uninterrupted single-mesh run would have seen at
+     that step, regardless of how hosts were renumbered (the
+     logical-shard grid is pinned at launch; ownership moves, data
+     does not).
+INV3 ``norm-invariance``    — per-example gradient norms and the
+     gradient-noise scale computed on the post-recovery mesh match the
+     pre-failure single-mesh oracle at the restored step (selfcheck
+     tolerances: rtol 2e-4 on norms, 5e-3 relative on GNS).
+
+Time is simulated: one tick per attempted train step, heartbeats at
+``now=tick`` — no wall clocks, no process kills, so the same
+(storm, seed) replays bit-for-bit.
+
+``--mutation-check`` proves the invariants have teeth: it re-runs the
+storm three times, each with one recovery guard deliberately broken
+(trust live state instead of restoring / scramble the shard
+renumbering / compute GNS with the local batch size), and demands that
+exactly the matching invariant trips. A soak whose invariants cannot
+fail verifies nothing.
+
+Graceful degradation rides along: the storm's NaN-poisoned batch must
+be quarantined example-by-example through the plan's ``loss_weights=``
+path (skip examples, not steps) — the harness asserts the quarantine
+event names exactly the poisoned rows.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import tempfile
+import warnings
+from typing import Dict, List, Optional
+
+
+def _argv_hosts(argv) -> int:
+    for i, a in enumerate(argv):
+        if a == "--hosts" and i + 1 < len(argv):
+            try:
+                return int(argv[i + 1])
+            except ValueError:
+                return 8
+        if a.startswith("--hosts="):
+            try:
+                return int(a.split("=", 1)[1])
+            except ValueError:
+                return 8
+    return 8
+
+
+# MUST precede the first jax backend init (dryrun/selfcheck idiom):
+# the simulated world needs one forced host device per simulated host.
+if "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count="
+        f"{max(8, _argv_hosts(sys.argv))}").strip()
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import ft
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core import plan as plan_mod
+from repro.core.engine import Engine
+from repro.core.taps import PexSpec
+from repro.data.pipeline import (DataConfig, LogicalShardedLM,
+                                 assign_logical_shards)
+from repro.dist.sharding import make_mesh_over
+from repro.models import registry
+from repro.nn.param import unbox
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+INV_RESTORE = "bit-exact-restore"
+INV_REPLAY = "data-replay"
+INV_NORMS = "norm-invariance"
+
+#: mutation → the invariant that must catch it (the mutation matrix)
+MUTATIONS = {
+    "restore": INV_RESTORE,    # keep live state instead of restoring
+    "renumber": INV_REPLAY,    # scramble the shard→host renumbering
+    "reshard": INV_NORMS,      # GNS with the local, not global, batch
+}
+
+
+class SoakInvariantError(RuntimeError):
+    def __init__(self, invariant: str, msg: str):
+        super().__init__(f"[{invariant}] {msg}")
+        self.invariant = invariant
+
+
+class MutationCheckError(RuntimeError):
+    """A disabled guard did NOT trip its invariant — the soak is
+    asserting less than it claims."""
+
+
+def unwrap_invariant(exc: BaseException) -> Optional[SoakInvariantError]:
+    """Find the SoakInvariantError in an exception's cause chain (the
+    supervisor wraps recovery failures in SupervisorHalted)."""
+    seen = set()
+    e: Optional[BaseException] = exc
+    while e is not None and id(e) not in seen:
+        seen.add(id(e))
+        if isinstance(e, SoakInvariantError):
+            return e
+        e = e.__cause__ or e.__context__
+    return None
+
+
+# ---------------------------------------------------------------------------
+# canonical digests (INV1 / INV2)
+# ---------------------------------------------------------------------------
+
+def tree_digest(tree) -> str:
+    """sha256 over path + dtype + shape + raw bytes of every leaf, in
+    canonical tree order — bit-exact equality, not allclose."""
+    h = hashlib.sha256()
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        h.update(jax.tree_util.keystr(path).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class SoakConfig:
+    hosts: int = 8
+    steps: int = 40
+    seed: int = 0
+    arch: str = "llama3.2-1b"
+    seq: int = 16
+    batch_per_host: int = 2
+    ckpt_every: int = 0           # 0 ⇒ max(2, steps // 8)
+    storm: str = "short"
+    workdir: Optional[str] = None
+    #: "" = honest run; a MUTATIONS key disables that recovery guard
+    mutate: str = ""
+    verbose: bool = True
+
+
+class SoakWorld(ft.RecoveryActions):
+    """The simulated cluster: trainer + data grid + heartbeat files +
+    supervisor, advanced one tick per attempted train step. Implements
+    ``RecoveryActions`` so the supervisor's recovery transitions act on
+    this world — and get invariant-checked while doing so."""
+
+    def __init__(self, cfg: SoakConfig, plan: ft.FaultPlan, workdir: str):
+        n = cfg.hosts
+        if len(jax.devices()) < n:
+            raise RuntimeError(
+                f"need {n} devices to simulate {n} hosts, have "
+                f"{len(jax.devices())} (repro/__init__ forces 512 host "
+                f"devices — is another jax already initialized?)")
+        self.cfg = cfg
+        self.plan = plan
+        self.mutate = cfg.mutate
+        if self.mutate and self.mutate not in MUTATIONS:
+            raise ValueError(f"unknown mutation {self.mutate!r}; "
+                             f"have {sorted(MUTATIONS)}")
+        self.n = n
+        self.B = n * cfg.batch_per_host
+        self.ckpt_every = cfg.ckpt_every or max(2, cfg.steps // 8)
+        self.ckpt_dir = os.path.join(workdir, "ckpt")
+        hb_dir = os.path.join(workdir, "heartbeats")
+
+        aspec = registry.get(cfg.arch)
+        mcfg = aspec.smoke()
+        mod = registry.family_module(aspec)
+        params = unbox(mod.init(jax.random.PRNGKey(cfg.seed), mcfg))
+        #: poison-aware loss: batch["poison"] (all-ones normally) is a
+        #: bit-exact no-op; the storm's nan_batch makes rows NaN
+        self.loss = ft.poison_loss_fn(registry.make_loss_fn_v2(aspec, mcfg))
+
+        data_cfg = DataConfig(vocab=mcfg.vocab, seq=cfg.seq,
+                              global_batch=self.B, seed=cfg.seed)
+        #: the logical shard grid is pinned at n_logical = launch hosts
+        #: and NEVER changes — hosts own shard subsets (INV2's anchor)
+        self.lm = LogicalShardedLM(data_cfg, n_logical=n)
+        self.active: List[int] = list(range(n))
+        self.owned = assign_logical_shards(n, self.active)
+        #: hosts currently emitting heartbeats (killed ⇒ removed;
+        #: contraction-dropped survivors go silent; host_return re-adds)
+        self.beating = set(self.active)
+        hb_cfg = ft.HeartbeatConfig(interval_s=1.0, deadline_s=2.5)
+        self.monitors = {h: ft.HeartbeatMonitor(hb_dir, h, hb_cfg)
+                         for h in range(n)}
+        sup_monitor = ft.HeartbeatMonitor(hb_dir, n, hb_cfg)  # never beats
+
+        mesh = make_mesh_over(jax.devices()[:n], (n,), ("data",))
+        self.trainer = Trainer(
+            self.loss, params, PexSpec(enabled=True),
+            adamw.AdamWConfig(lr=1e-3),
+            TrainConfig(consumers=(plan_mod.Norms(), plan_mod.Grads()),
+                        steps=cfg.steps, log_every=0,
+                        ckpt_every=self.ckpt_every,
+                        ckpt_dir=self.ckpt_dir, seed=cfg.seed),
+            data_cfg, mesh=mesh, data=self.lm)
+        self.supervisor = ft.Supervisor(
+            ft.Topology(n_hosts=n, devices_per_host=1, model_parallel=1),
+            self.active, sup_monitor, actions=self)
+
+        #: mesh=None single-device oracle for INV3 (selfcheck's role)
+        self._oracle_eng = Engine(PexSpec(enabled=True), mesh=None)
+
+        def oracle(p, b):
+            res = self._oracle_eng.step(
+                self.loss, p, b,
+                consumers=(plan_mod.Norms(), plan_mod.Grads()))
+            gns = plan_mod.gradient_noise_scale(res.sq_norms, res.grads,
+                                                batch_size=self.B)
+            return res.sq_norms, gns
+        self._oracle = jax.jit(oracle)
+
+        #: step → {digest, oracle_sq, oracle_gns}, written at every save
+        self.snapshots: Dict[int, Dict] = {}
+        self.fallbacks = 0
+        self.recoveries: List[Dict] = []
+        self.fault_log: List[Dict] = []
+        self.ticks = 0
+
+    # -- helpers ----------------------------------------------------------
+    def _say(self, msg: str) -> None:
+        if self.cfg.verbose:
+            print(f"[soak] {msg}", flush=True)
+
+    def _state_digest(self) -> str:
+        tr = self.trainer
+        return tree_digest({"state": tr._state_tree(),
+                            "opt_step": np.int64(int(tr.opt_state.step))})
+
+    def _probe_batch(self, step: int):
+        """The oracle/mesh probe input at ``step``: the pure
+        logical-order global batch with a clean poison vector."""
+        batch = dict(self.lm.global_batch_at(step))
+        batch["poison"] = jnp.ones(self.B, jnp.float32)
+        return batch
+
+    def _save_snapshot(self) -> None:
+        """Checkpoint + record the INV1/INV3 ground truth for this step:
+        the state digest and the single-mesh oracle (norms, GNS)."""
+        tr = self.trainer
+        sq, gns = self._oracle(tr.params, self._probe_batch(tr.step))
+        self.snapshots[tr.step] = {
+            "digest": self._state_digest(),
+            "oracle_sq": np.asarray(sq, np.float32),
+            "oracle_gns": float(gns),
+        }
+        tr.save_checkpoint()        # async: the writer thread races on
+
+    # -- fault application ------------------------------------------------
+    def _apply_fault(self, e: ft.FaultEvent, tick: int) -> None:
+        tr = self.trainer
+        self.fault_log.append({"tick": tick, "kind": e.kind})
+        if e.kind == "host_death":
+            self._say(f"tick {tick}: KILL host {e.host}")
+            self.beating.discard(e.host)
+        elif e.kind == "host_return":
+            self._say(f"tick {tick}: hosts {sorted(e.hosts)} return")
+            self.beating |= set(e.hosts)
+        elif e.kind in ("ckpt_corrupt", "ckpt_truncate"):
+            tr.ckpt.wait()          # corrupt the *committed* newest
+            step = ft.corrupt_newest_checkpoint(
+                self.ckpt_dir, truncate=(e.kind == "ckpt_truncate"))
+            self._say(f"tick {tick}: {e.kind} step {step}")
+        elif e.kind == "tmp_litter":
+            # a far-future step number: real saves never reuse the dir,
+            # so the litter survives until a manager sweeps it
+            path = ft.litter_tmp_dir(self.ckpt_dir,
+                                     step=tr.step + 1_000_000)
+            self._say(f"tick {tick}: tmp litter {os.path.basename(path)}")
+        # "straggler" needs no world mutation: it enters through the
+        # per-host step times fed to the supervisor each tick
+
+    # -- RecoveryActions --------------------------------------------------
+    def restore_to(self, topology: ft.Topology, active_hosts, reason: str
+                   ) -> None:
+        tr = self.trainer
+        active = sorted(active_hosts)
+        self._say(f"recovery[{reason}] → {len(active)} hosts {active}")
+        tr.ckpt.wait()              # surface async writer failures now
+        if reason == "expand":
+            # a healthy world checkpoints before resharding wider so
+            # expansion never costs progress
+            self._save_snapshot()
+            tr.ckpt.wait()
+        # the recovered world restarts its checkpoint manager — which
+        # must sweep any crashed-mid-save .tmp litter on construction
+        tr.ckpt = CheckpointManager(self.ckpt_dir)
+        leftover = [f for f in os.listdir(self.ckpt_dir)
+                    if f.endswith(".tmp")]
+        if leftover:
+            raise RuntimeError(f"stale tmp litter survived manager "
+                               f"construction: {leftover}")
+
+        live = (tr.params, tr.opt_state)
+        newest = tr.ckpt.latest_step()
+        mesh = make_mesh_over([jax.devices()[h] for h in active],
+                              (len(active),), ("data",))
+        restored = tr.restore_from(
+            None, shardings=NamedSharding(mesh, PartitionSpec()))
+        if self.mutate == "restore":
+            # MUTATION: trust the live in-memory state instead of the
+            # checkpoint (a supervisor that "resumes" without restoring)
+            tr.params, tr.opt_state = live
+
+        # INV1 — bit-exact restore
+        snap = self.snapshots.get(restored)
+        if snap is None:
+            raise RuntimeError(f"restored step {restored} has no "
+                               f"snapshot (saves: {sorted(self.snapshots)})")
+        got = self._state_digest()
+        if got != snap["digest"]:
+            raise SoakInvariantError(
+                INV_RESTORE,
+                f"post-recovery state digest {got[:12]} != snapshot "
+                f"{snap['digest'][:12]} at step {restored}")
+        if newest is not None and restored < newest:
+            self.fallbacks += 1
+            self._say(f"  restore fell back: {newest} → {restored}")
+
+        # renumber the data pipeline onto the survivors
+        owned = assign_logical_shards(self.n, active)
+        if self.mutate == "renumber":
+            # MUTATION: hand hosts each other's shards in reverse order
+            # (full coverage, wrong order — only INV2 can see it)
+            vals = [owned[h] for h in active][::-1]
+            owned = dict(zip(active, vals))
+        self.owned = owned
+        tr.rebind_mesh(mesh)
+
+        # INV3 — per-example norms + GNS on the new mesh vs the
+        # pre-failure single-mesh oracle at the restored step
+        probe = self._probe_batch(restored)
+        res = jax.jit(lambda p, b: tr.engine.step(
+            self.loss, p, b,
+            consumers=(plan_mod.Norms(), plan_mod.Grads())))(
+                tr.params, probe)
+        bs = self.B if self.mutate != "reshard" \
+            else self.B // len(active)      # MUTATION: local batch size
+        gns = float(plan_mod.gradient_noise_scale(
+            res.sq_norms, res.grads, batch_size=bs))
+        sq = np.asarray(res.sq_norms, np.float32)
+        if sq.shape != snap["oracle_sq"].shape or \
+                not np.allclose(sq, snap["oracle_sq"],
+                                rtol=2e-4, atol=1e-6):
+            raise SoakInvariantError(
+                INV_NORMS,
+                f"per-example sq norms on the {len(active)}-way mesh "
+                f"diverge from the single-mesh oracle at step {restored}")
+        ogns = snap["oracle_gns"]
+        if abs(gns - ogns) > 5e-3 * max(1.0, abs(ogns)):
+            raise SoakInvariantError(
+                INV_NORMS,
+                f"GNS after reshard = {gns:.6g}, single-mesh oracle = "
+                f"{ogns:.6g} at step {restored}")
+
+        self.active = active
+        # the launcher only keeps the hosts it placed in the new world
+        # beating; dropped-but-alive survivors go silent (idle)
+        self.beating = set(active)
+        self.recoveries.append(
+            {"reason": reason, "restored_step": restored,
+             "hosts": list(active)})
+
+    # -- the storm loop ---------------------------------------------------
+    def run(self) -> Dict:
+        cfg, tr, plan = self.cfg, self.trainer, self.plan
+        max_ticks = cfg.steps * 3 + 30
+        tick = 0
+        while tr.step < cfg.steps:
+            if tick > max_ticks:
+                raise RuntimeError(
+                    f"storm did not converge in {max_ticks} ticks "
+                    f"(trained {tr.step}/{cfg.steps})")
+            now = float(tick)
+            for e in plan.at_tick(tick):
+                self._apply_fault(e, tick)
+            for h in sorted(self.beating):
+                self.monitors[h].beat(tr.step, now=now)
+            step_times = {h: plan.straggler_factor(tick, h)
+                          for h in self.active}
+            self.supervisor.tick(now, step_times=step_times)
+
+            s = tr.step
+            batch = dict(self.lm.global_batch_at(s, self.owned))
+            # INV2 — the batch assembled from the current host→shard
+            # ownership equals the uninterrupted-run stream at s
+            want = tree_digest(self.lm.global_batch_at(s))
+            if tree_digest(batch) != want:
+                raise SoakInvariantError(
+                    INV_REPLAY,
+                    f"step {s}: batch assembled from ownership "
+                    f"{self.owned} diverges from the uninterrupted "
+                    f"stream (renumbering broke data replay)")
+            batch["poison"] = jnp.asarray(plan.poison_vector(s, self.B))
+            tr.run_step(batch)
+            tr.step += 1
+            if tr.step % self.ckpt_every == 0:
+                self._save_snapshot()
+            tick += 1
+        tr.ckpt.wait()
+        self.ticks = tick
+        return self._finish()
+
+    def _finish(self) -> Dict:
+        tr = self.trainer
+        for leaf in jax.tree_util.tree_leaves(tr.params):
+            if not np.isfinite(np.asarray(leaf)).all():
+                raise SoakInvariantError(
+                    INV_RESTORE, "non-finite parameters after the storm "
+                                 "(quarantine failed to contain poison)")
+        # every scheduled NaN batch must have produced a quarantine of
+        # exactly the poisoned rows (examples skipped, steps trained)
+        quarantines = [e for e in tr.events if e["kind"] == "quarantine"]
+        for e in self.plan.events:
+            if e.kind != "nan_batch" or e.at >= self.cfg.steps:
+                continue
+            hits = [q for q in quarantines if q["step"] == e.at]
+            if not hits:
+                raise SoakInvariantError(
+                    INV_REPLAY,
+                    f"nan_batch at step {e.at} was never quarantined")
+            for q in hits:
+                if set(q["examples"]) != set(e.examples):
+                    raise SoakInvariantError(
+                        INV_REPLAY,
+                        f"step {e.at}: quarantined {q['examples']}, "
+                        f"poisoned {sorted(set(e.examples))}")
+        reasons = [r["reason"] for r in self.recoveries]
+        summary = {
+            "steps": self.cfg.steps,
+            "ticks": self.ticks,
+            "hosts": self.n,
+            "final_hosts": len(self.active),
+            "recoveries": self.recoveries,
+            "contractions": reasons.count("contract") +
+                            reasons.count("evict"),
+            "expansions": reasons.count("expand"),
+            "fallbacks": self.fallbacks,
+            "quarantined_steps": sorted({q["step"] for q in quarantines}),
+            "supervisor_events": len(self.supervisor.events),
+            "final_loss": tr.metrics[-1]["loss"] if tr.metrics else None,
+            "invariants": "PASS",
+        }
+        return summary
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def _build_plan(cfg: SoakConfig) -> ft.FaultPlan:
+    if cfg.storm == "random":
+        return ft.random_storm(cfg.seed, cfg.hosts, cfg.steps)
+    return ft.scripted_storm(cfg.storm, cfg.hosts, cfg.steps)
+
+
+def run_soak(cfg: SoakConfig) -> Dict:
+    """One full storm run; raises SoakInvariantError (possibly wrapped
+    in SupervisorHalted) when an invariant trips."""
+    workdir = cfg.workdir or tempfile.mkdtemp(prefix="soak_")
+    plan = _build_plan(cfg)
+    world = SoakWorld(cfg, plan, workdir)
+    summary = world.run()
+    if cfg.storm == "short":
+        # the acceptance storm must actually exercise every path
+        if summary["contractions"] < 2:
+            raise MutationCheckError(
+                f"storm 'short' produced {summary['contractions']} "
+                f"contractions, expected >= 2")
+        if summary["expansions"] < 1:
+            raise MutationCheckError(
+                "storm 'short' never expanded back")
+        if summary["fallbacks"] < 1:
+            raise MutationCheckError(
+                "storm 'short' never exercised checkpoint fallback")
+        if not summary["quarantined_steps"]:
+            raise MutationCheckError(
+                "storm 'short' never exercised quarantine")
+    return summary
+
+
+def run_mutation_checks(cfg: SoakConfig) -> Dict[str, str]:
+    """Prove the invariants can fail: disable one recovery guard at a
+    time and demand the matching invariant trips."""
+    results = {}
+    for mutate, want in MUTATIONS.items():
+        mcfg = dataclasses.replace(cfg, mutate=mutate, workdir=None)
+        try:
+            run_soak(mcfg)
+        except (SoakInvariantError, ft.SupervisorHalted) as e:
+            inv = unwrap_invariant(e)
+            if inv is None:
+                raise MutationCheckError(
+                    f"mutation {mutate!r} halted without an invariant "
+                    f"error: {e}") from e
+            if inv.invariant != want:
+                raise MutationCheckError(
+                    f"mutation {mutate!r} tripped {inv.invariant!r}, "
+                    f"expected {want!r}") from e
+            results[mutate] = inv.invariant
+            print(f"[soak] mutation {mutate!r}: tripped {want!r} ✓",
+                  flush=True)
+        else:
+            raise MutationCheckError(
+                f"mutation {mutate!r} completed the storm — invariant "
+                f"{want!r} has no teeth")
+    return results
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="elastic soak harness (DESIGN.md §11)")
+    p.add_argument("--hosts", type=int, default=8)
+    p.add_argument("--steps", type=int, default=40)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--arch", default="llama3.2-1b")
+    p.add_argument("--seq", type=int, default=16)
+    p.add_argument("--batch-per-host", type=int, default=2)
+    p.add_argument("--ckpt-every", type=int, default=0,
+                   help="0 = max(2, steps//8)")
+    p.add_argument("--storm", default="short",
+                   choices=("none", "short", "random"))
+    p.add_argument("--workdir", default=None)
+    p.add_argument("--mutation-check", action="store_true",
+                   help="run the storm with each recovery guard "
+                        "disabled; every mutant must trip its invariant")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+    cfg = SoakConfig(hosts=args.hosts, steps=args.steps, seed=args.seed,
+                     arch=args.arch, seq=args.seq,
+                     batch_per_host=args.batch_per_host,
+                     ckpt_every=args.ckpt_every, storm=args.storm,
+                     workdir=args.workdir, verbose=not args.quiet)
+    if len(jax.devices()) < cfg.hosts:
+        print(f"need {cfg.hosts} devices, have {len(jax.devices())}",
+              file=sys.stderr)
+        return 2
+    warnings.filterwarnings(
+        "ignore", message=".*(unreadable|sweeping stale).*")
+    try:
+        if args.mutation_check:
+            results = run_mutation_checks(cfg)
+            print(json.dumps({"mutation_check": results,
+                              "status": "PASS"}))
+            return 0
+        summary = run_soak(cfg)
+        print(json.dumps(summary, indent=2))
+        return 0
+    except (SoakInvariantError, ft.SupervisorHalted) as e:
+        inv = unwrap_invariant(e)
+        name = inv.invariant if inv else "halt"
+        print(f"SOAK FAILED [{name}]: {e}", file=sys.stderr)
+        return 1
+    except MutationCheckError as e:
+        print(f"MUTATION CHECK FAILED: {e}", file=sys.stderr)
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,11 +30,13 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core import plan as plan_mod
 from repro.core.engine import Engine
 from repro.core.taps import PexSpec
+from repro.core.engine import infer_batch_size
 from repro.data.pipeline import DataConfig, PipelineState, SyntheticLM
 from repro.ft.heartbeat import HeartbeatConfig, HeartbeatMonitor
 from repro.optim import adamw, grad_compress
@@ -96,18 +98,30 @@ def _inject_rngs(consumers: Sequence, rng: jax.Array):
                  for c in consumers)
 
 
+#: checkpoint ``extra`` keys a resume refuses to run without: the step
+#: cursor, the optimizer step, the trainer seed, and the data-pipeline
+#: state (which carries its own step/seed — PipelineState.from_dict
+#: validates those).
+RESUME_EXTRA_KEYS = ("step", "opt_step", "seed", "data")
+
+
 class Trainer:
     def __init__(self, loss_fn: Callable, params, pex_spec: PexSpec,
                  opt_cfg: adamw.AdamWConfig, train_cfg: TrainConfig,
-                 data_cfg: DataConfig, *, mesh=None, data_axes=("data",)):
+                 data_cfg: DataConfig, *, mesh=None, data_axes=("data",),
+                 data=None):
         """``loss_fn`` is the v2 canonical tap-collector loss
         (``registry.make_loss_fn_v2``). ``mesh=None`` runs
         single-device; a mesh routes every per-example transform
         through the data-parallel shard_map pipeline (dist.pex) with
-        gradients psum'd across ``data_axes``."""
+        gradients psum'd across ``data_axes``. ``data`` overrides the
+        default ``SyntheticLM(data_cfg)`` with any source exposing
+        ``batch_at(step)`` (e.g. the soak harness's
+        ``LogicalShardedLM``)."""
         self.loss_fn = loss_fn
         self.cfg = train_cfg
         self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
         self.consumers = tuple(train_cfg.consumers) \
             if train_cfg.consumers is not None \
             else (plan_mod.Norms(), plan_mod.Grads())
@@ -117,8 +131,10 @@ class Trainer:
             raise ValueError(
                 f"training needs a gradient-producing consumer "
                 f"(Grads/Clip/Noise/GNS); got {self.consumers}")
+        self.pex_spec = pex_spec
+        self.data_axes = data_axes
         self.engine = Engine(pex_spec, mesh=mesh, data_axes=data_axes)
-        self.data = SyntheticLM(data_cfg)
+        self.data = data if data is not None else SyntheticLM(data_cfg)
         self.params = params
         self.opt_state = adamw.init(params)
         self.err = grad_compress.init_error(params) \
@@ -128,17 +144,22 @@ class Trainer:
         self.ckpt = CheckpointManager(train_cfg.ckpt_dir) \
             if train_cfg.ckpt_dir else None
         self.metrics: list = []
+        #: graceful-degradation log: quarantine / skip events
+        self.events: list = []
         self._step_fn = self._build_step()
+        self._step_fn_weighted = None       # built on first quarantine
 
     # ------------------------------------------------------------------
-    def _build_step(self):
+    def _build_step(self, weighted: bool = False):
         loss_fn, opt_cfg = self.loss_fn, self.opt_cfg
         consumers, eng = self.consumers, self.engine
 
         @jax.jit
-        def step_fn(params, opt_state, err, batch, rng):
+        def step_fn(params, opt_state, err, batch, rng, *loss_weights):
             res = eng.step(loss_fn, params, batch,
-                           consumers=_inject_rngs(consumers, rng))
+                           consumers=_inject_rngs(consumers, rng),
+                           loss_weights=loss_weights[0] if weighted
+                           else None)
             grads = res.grads
             if err is not None:
                 grads, err = grad_compress.compress_decompress(grads, err)
@@ -148,16 +169,78 @@ class Trainer:
 
         return step_fn
 
+    # -- graceful degradation -------------------------------------------
+    def _quarantine_mask(self, res) -> Optional[np.ndarray]:
+        """True for examples whose loss and per-example norms are
+        finite. None when every example is bad (nothing to salvage)."""
+        mask = np.isfinite(np.asarray(res.loss_vec, np.float32))
+        if res.sq_norms is not None:
+            per_ex = np.asarray(res.sq_norms, np.float32)
+            mask &= np.isfinite(per_ex).all(axis=tuple(range(1, per_ex.ndim)))
+        return mask if mask.any() else None
+
+    @staticmethod
+    def _substitute_rows(batch, mask: np.ndarray):
+        """Replace quarantined rows with the first healthy row. The
+        zero loss-weight removes the substitute's (finite) gradient
+        contribution *exactly*; substitution only keeps NaNs produced
+        in the forward out of the program — a zero cotangent seed does
+        not (0·NaN = NaN), so masking by weight alone cannot quarantine
+        an example whose activations are already poisoned."""
+        b = infer_batch_size(batch)
+        donor = int(np.argmax(mask))
+        keep = jnp.asarray(mask)
+
+        def sub(x):
+            if x.ndim == 0 or x.shape[0] != b:
+                return x
+            m = keep.reshape((b,) + (1,) * (x.ndim - 1))
+            return jnp.where(m, x, x[donor][None])
+
+        return jax.tree_util.tree_map(sub, batch)
+
     # ------------------------------------------------------------------
     def run_step(self, batch) -> Dict:
         t0 = time.perf_counter()
         self.rng, sub = jax.random.split(self.rng)
-        (self.params, self.opt_state, self.err,
-         res) = self._step_fn(self.params, self.opt_state, self.err,
-                              batch, sub)
+        params, opt_state, err, res = self._step_fn(
+            self.params, self.opt_state, self.err, batch, sub)
+        loss = float(res.loss)
+        bad = not np.isfinite(loss)
+        if not bad and res.sq_norms is not None:
+            bad = not bool(jnp.all(jnp.isfinite(res.sq_norms)))
+        quarantined = 0
+        if bad:
+            # non-finite loss/grad: the per-example norms (and losses)
+            # the pass already computed identify the poisoned examples;
+            # reweight them out through the plan's loss_weights= path
+            # and retry — skip examples, not steps (DESIGN.md §11)
+            mask = self._quarantine_mask(res)
+            if mask is None:
+                self.events.append({"step": self.step, "kind": "skip_step",
+                                    "reason": "every example non-finite"})
+                dt = time.perf_counter() - t0
+                m = {"step": self.step, "loss": loss, "time_s": dt,
+                     "skipped": 1}
+                self.metrics.append(m)
+                return m          # previous params/opt_state kept
+            quarantined = int((~mask).sum())
+            self.events.append({
+                "step": self.step, "kind": "quarantine",
+                "examples": [int(i) for i in np.flatnonzero(~mask)]})
+            if self._step_fn_weighted is None:
+                self._step_fn_weighted = self._build_step(weighted=True)
+            params, opt_state, err, res = self._step_fn_weighted(
+                self.params, self.opt_state, self.err,
+                self._substitute_rows(batch, mask), sub,
+                jnp.asarray(mask, jnp.float32))
+            loss = float(res.loss)
+        self.params, self.opt_state, self.err = params, opt_state, err
         jax.block_until_ready(res.loss)
         dt = time.perf_counter() - t0
-        m = {"step": self.step, "loss": float(res.loss), "time_s": dt}
+        m = {"step": self.step, "loss": loss, "time_s": dt}
+        if quarantined:
+            m["quarantined"] = quarantined
         if res.sq_norms is not None:
             sqs = jnp.sum(res.sq_norms, -1)
             m["norm_mean"] = float(jnp.mean(jnp.sqrt(sqs)))
@@ -167,16 +250,79 @@ class Trainer:
         self.metrics.append(m)
         return m
 
+    # -- checkpoint plumbing --------------------------------------------
+    def _state_tree(self):
+        return {"params": self.params, "mu": self.opt_state.mu,
+                "nu": self.opt_state.nu}
+
+    def _ckpt_extra(self) -> Dict:
+        return {"step": self.step, "opt_step": int(self.opt_state.step),
+                "seed": self.cfg.seed,
+                "data": PipelineState(step=self.step,
+                                      seed=self.data_cfg.seed).to_dict()}
+
+    def save_checkpoint(self, block: bool = False) -> None:
+        assert self.ckpt is not None, "no ckpt_dir configured"
+        self.ckpt.save(self.step, self._state_tree(),
+                       extra=self._ckpt_extra(), block=block)
+
+    def _validate_extra(self, extra: Dict) -> PipelineState:
+        missing = [k for k in RESUME_EXTRA_KEYS if k not in extra]
+        if missing:
+            raise ValueError(
+                f"checkpoint extra is missing key(s) {missing} (have "
+                f"{sorted(extra)}); refusing to resume — a checkpoint "
+                f"without step/seed/pipeline state cannot be replayed "
+                f"deterministically")
+        if int(extra["seed"]) != self.cfg.seed:
+            raise ValueError(
+                f"checkpoint was written by a run with seed="
+                f"{extra['seed']}, this trainer has seed={self.cfg.seed}; "
+                f"resuming would fork the rng/noise stream")
+        ps = PipelineState.from_dict(extra["data"])
+        if ps.seed != self.data_cfg.seed:
+            raise ValueError(
+                f"checkpoint data stream has seed={ps.seed}, this "
+                f"trainer's pipeline has seed={self.data_cfg.seed}; "
+                f"resuming would replay different batches")
+        return ps
+
+    def restore_from(self, step: Optional[int] = None,
+                     shardings=None) -> int:
+        """Restore params/opt-state/step from the newest restorable
+        checkpoint (≤ ``step`` if given; CheckpointManager falls back
+        past corrupt ones), after validating the ``extra`` payload.
+        Returns the step actually restored."""
+        assert self.ckpt is not None, "no ckpt_dir configured"
+        self.ckpt.wait()        # surface writer-thread failures first
+        restored, extra = self.ckpt.restore(step, self._state_tree(),
+                                            shardings=shardings)
+        ps = self._validate_extra(extra)
+        self.params = restored["params"]
+        self.opt_state = adamw.AdamWState(
+            jnp.asarray(extra["opt_step"], jnp.int32),
+            restored["mu"], restored["nu"])
+        self.step = int(extra["step"])
+        assert ps.step == self.step, \
+            f"pipeline cursor {ps.step} != trainer step {self.step}"
+        return self.step
+
+    # -- elastic rebinding ----------------------------------------------
+    def rebind_mesh(self, mesh, data_axes=None) -> None:
+        """Rebuild the engine and compiled step(s) on a new topology —
+        the supervisor calls this after contraction/expansion. Params
+        and optimizer state are re-placed by the next jitted step."""
+        if data_axes is not None:
+            self.data_axes = data_axes
+        self.engine = Engine(self.pex_spec, mesh=mesh,
+                             data_axes=self.data_axes)
+        self._step_fn = self._build_step()
+        self._step_fn_weighted = None
+
+    # ------------------------------------------------------------------
     def train(self, resume: bool = False) -> list:
         if resume and self.ckpt and self.ckpt.latest_step() is not None:
-            state = {"params": self.params, "mu": self.opt_state.mu,
-                     "nu": self.opt_state.nu}
-            restored, extra = self.ckpt.restore(None, state)
-            self.params = restored["params"]
-            self.opt_state = adamw.AdamWState(
-                jnp.asarray(extra["opt_step"], jnp.int32),
-                restored["mu"], restored["nu"])
-            self.step = int(extra["step"])
+            self.restore_from(None)
         while self.step < self.cfg.steps:
             batch = self.data.batch_at(self.step)
             m = self.run_step(batch)
@@ -185,12 +331,7 @@ class Trainer:
                 print(f"[{self.step}] " + " ".join(
                     f"{k}={v:.4g}" for k, v in m.items() if k != "step"))
             if self.ckpt and self.step % self.cfg.ckpt_every == 0:
-                self.ckpt.save(
-                    self.step,
-                    {"params": self.params, "mu": self.opt_state.mu,
-                     "nu": self.opt_state.nu},
-                    extra={"step": self.step,
-                           "opt_step": int(self.opt_state.step)})
+                self.save_checkpoint()
         if self.ckpt:
             self.ckpt.wait()
         return self.metrics

@@ -97,3 +97,27 @@ def test_pallas_rowsumsq_any_shape(b, n, seed):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
     np.testing.assert_allclose(ops.rowsumsq(x), ref.rowsumsq_ref(x), rtol=1e-5)
+
+
+@settings(max_examples=80, deadline=None)
+@given(n=st.integers(1, 64), dph=st.integers(1, 8),
+       mp_pow=st.integers(0, 4), n_dead=st.integers(0, 63))
+def test_elastic_contract_expand_roundtrip(n, dph, mp_pow, n_dead):
+    """expand(contract(t)) ⊆ t: contraction lands on a runnable pow2
+    topology at or above the model-parallel floor, and re-expanding on
+    the full original pool never exceeds it (lands on pow2_floor(n))."""
+    from repro.ft import elastic
+    topo = elastic.Topology(n, dph, 2 ** mp_pow)
+    dead = list(range(min(n_dead, n - 1)))
+    try:
+        c = elastic.plan_contraction(topo, dead)
+    except RuntimeError:
+        return                      # unrecoverable worlds may refuse
+    assert c.n_hosts <= n - len(dead)
+    assert c.n_hosts & (c.n_hosts - 1) == 0          # power of two
+    assert c.n_devices >= topo.model_parallel        # runnable
+    e = elastic.plan_expansion(c, n)
+    assert c.n_hosts <= e.n_hosts <= n
+    assert e.n_hosts == elastic._pow2_floor(n)
+    assert (e.devices_per_host, e.model_parallel) == \
+        (topo.devices_per_host, topo.model_parallel)

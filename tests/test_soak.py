@@ -1,0 +1,338 @@
+"""Soak harness: fault plans, the supervisor state machine, graceful
+degradation (quarantine), resume validation, and the end-to-end storm.
+
+The e2e storm runs in a subprocess: the simulated N-host world needs
+forced host devices, which must be configured before jax initializes —
+impossible inside a pytest process whose jax is already live.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ft
+from repro.core import plan as plan_mod
+from repro.core.taps import PexSpec
+from repro.data.pipeline import (DataConfig, LogicalShardedLM,
+                                 PipelineState, assign_logical_shards)
+from repro.optim import adamw
+from repro.train.trainer import TrainConfig, Trainer
+
+SRC = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+
+# --- fault plans -----------------------------------------------------------
+
+def test_fault_plan_scripted_and_random_deterministic():
+    a = ft.scripted_storm("short", 8, 40)
+    assert a == ft.scripted_storm("short", 8, 40)
+    kinds = {e.kind for e in a.events}
+    assert {"host_death", "ckpt_corrupt", "nan_batch", "host_return",
+            "straggler", "tmp_litter"} <= kinds
+    r = ft.random_storm(7, 8, 64)
+    assert r == ft.random_storm(7, 8, 64)
+    assert r != ft.random_storm(8, 8, 64)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="killed twice"):
+        ft.FaultPlan((ft.FaultEvent(1, "host_death", host=0),
+                      ft.FaultEvent(2, "host_death", host=0))
+                     ).validate(4, 10)
+    with pytest.raises(ValueError, match="outside"):
+        ft.FaultPlan((ft.FaultEvent(1, "host_death", host=9),)
+                     ).validate(4, 10)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        ft.FaultEvent(1, "meteor_strike")
+    with pytest.raises(ValueError, match="power-of-two"):
+        ft.scripted_storm("short", 3, 40)
+    with pytest.raises(ValueError, match="steps"):
+        ft.scripted_storm("short", 8, 10)
+
+
+def test_poison_vector_identity_and_nan():
+    plan = ft.FaultPlan((ft.FaultEvent(5, "nan_batch", examples=(1, 3)),))
+    np.testing.assert_array_equal(plan.poison_vector(4, 6),
+                                  np.ones(6, np.float32))
+    v = plan.poison_vector(5, 6)
+    assert np.isnan(v[[1, 3]]).all()
+    assert np.isfinite(v[[0, 2, 4, 5]]).all()
+    with pytest.raises(ValueError, match="outside"):
+        plan.poison_vector(5, 2)
+
+
+def test_poison_loss_fn_is_bit_exact_identity():
+    def loss(params, batch, tap):
+        return batch["x"] * params, None
+
+    wrapped = ft.poison_loss_fn(loss)
+    x = jnp.asarray([0.3, 0.7, 1.9])
+    base, _ = loss(2.0, {"x": x}, None)
+    same, _ = wrapped(2.0, {"x": x, "poison": jnp.ones(3)}, None)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(same))
+    bad, _ = wrapped(
+        2.0, {"x": x, "poison": jnp.asarray([1.0, np.nan, 1.0])}, None)
+    bad = np.asarray(bad)
+    assert np.isnan(bad[1]) and np.isfinite(bad[[0, 2]]).all()
+
+
+# --- data: the logical shard grid (INV2's anchor) --------------------------
+
+def test_logical_shards_invariant_under_renumbering():
+    cfg = DataConfig(vocab=64, seq=8, global_batch=16, seed=1)
+    lm = LogicalShardedLM(cfg, n_logical=8)
+    want = np.asarray(lm.global_batch_at(3)["ids"])
+    for hosts in ([0, 1, 2, 3, 4, 5, 6, 7], [0, 3, 4, 6], [1, 5], [2]):
+        owned = assign_logical_shards(8, hosts)
+        got = np.asarray(lm.global_batch_at(3, owned)["ids"])
+        np.testing.assert_array_equal(want, got)
+    # a non-order-preserving assignment IS visible in the stream —
+    # which is exactly what the soak's data-replay invariant catches
+    got = np.asarray(
+        lm.global_batch_at(3, {0: [4, 5, 6, 7], 1: [0, 1, 2, 3]})["ids"])
+    assert not np.array_equal(want, got)
+    with pytest.raises(ValueError, match="divide"):
+        assign_logical_shards(8, [0, 1, 2])
+
+
+def test_pipeline_state_roundtrip_and_validation():
+    ps = PipelineState(step=7, seed=3)
+    assert PipelineState.from_dict(ps.to_dict()) == ps
+    with pytest.raises(ValueError, match="missing"):
+        PipelineState.from_dict({"step": 7})
+
+
+# --- supervisor state machine ----------------------------------------------
+
+class _Recorder(ft.RecoveryActions):
+    def __init__(self, fail: bool = False):
+        self.calls = []
+        self.fail = fail
+
+    def restore_to(self, topology, active_hosts, reason):
+        if self.fail:
+            raise RuntimeError("restore failed")
+        self.calls.append((reason, topology.n_hosts, list(active_hosts)))
+
+
+def _world(tmp_path, n=4):
+    cfg = ft.HeartbeatConfig(interval_s=1.0, deadline_s=2.5)
+    mons = {h: ft.HeartbeatMonitor(str(tmp_path), h, cfg)
+            for h in range(n)}
+    sup_mon = ft.HeartbeatMonitor(str(tmp_path), n, cfg)  # never beats
+    return mons, sup_mon
+
+
+def test_supervisor_contracts_on_dead_host(tmp_path):
+    mons, sup_mon = _world(tmp_path)
+    rec = _Recorder()
+    sup = ft.Supervisor(ft.Topology(4, 1, 1), [0, 1, 2, 3], sup_mon, rec)
+    for h in (0, 1, 3):                     # host 2 never heartbeats
+        mons[h].beat(step=0, now=0.0)
+    events = sup.tick(0.0)
+    assert [e.kind for e in events] == ["dead", "contract"]
+    assert rec.calls == [("contract", 2, [0, 1])]
+    assert sup.active == [0, 1] and sup.topo.n_hosts == 2
+    assert sup.state == "RUNNING"
+
+
+def test_supervisor_contracts_on_torn_heartbeat(tmp_path):
+    mons, sup_mon = _world(tmp_path)
+    rec = _Recorder()
+    sup = ft.Supervisor(ft.Topology(4, 1, 1), [0, 1, 2, 3], sup_mon, rec)
+    for h in range(4):
+        mons[h].beat(step=0, now=0.0)
+    (tmp_path / "host_00003.json").write_text('{"to')   # torn write
+    sup.tick(0.5)
+    assert rec.calls and rec.calls[0][0] == "contract"
+    dead = [e for e in sup.events if e.kind == "dead"]
+    assert dead[0].detail["host"] == 3
+    assert "Error" in dead[0].detail["error"]   # parse error recorded
+
+
+def test_supervisor_straggler_grace_then_evict(tmp_path):
+    mons, sup_mon = _world(tmp_path)
+    rec = _Recorder()
+    cfg = ft.SupervisorConfig(straggler_grace=3, allow_expansion=False)
+    sup = ft.Supervisor(ft.Topology(4, 1, 1), [0, 1, 2, 3], sup_mon, rec,
+                        cfg)
+    slow = {0: 1.0, 1: 1.0, 2: 1.0, 3: 8.0}
+
+    def tick(t, times):
+        for h in range(4):
+            mons[h].beat(step=0, now=t)
+        return sup.tick(t, step_times=times)
+
+    for t in (0.0, 1.0):                    # observed, below grace
+        tick(t, slow)
+        assert sup.state == "DEGRADED" and not rec.calls
+    tick(2.0, {h: 1.0 for h in range(4)})   # transient: count resets
+    assert sup.state == "RUNNING"
+    for t in (3.0, 4.0, 5.0):               # grace consecutive hits
+        tick(t, slow)
+    assert rec.calls == [("evict", 2, [0, 1])]
+
+
+def test_supervisor_expands_on_returned_hosts(tmp_path):
+    mons, sup_mon = _world(tmp_path)
+    rec = _Recorder()
+    sup = ft.Supervisor(ft.Topology(2, 1, 1), [0, 1], sup_mon, rec)
+    for h in range(4):                      # 2, 3 are fresh spares
+        mons[h].beat(step=0, now=0.0)
+    events = sup.tick(0.0)
+    assert rec.calls == [("expand", 4, [0, 1, 2, 3])]
+    assert sup.topo.n_hosts == 4 and sup.active == [0, 1, 2, 3]
+    assert "returned" in [e.kind for e in events]
+
+
+def test_supervisor_halts_below_model_parallel_floor(tmp_path):
+    mons, sup_mon = _world(tmp_path)
+    rec = _Recorder()
+    sup = ft.Supervisor(ft.Topology(4, 1, 4), [0, 1, 2, 3], sup_mon, rec)
+    mons[0].beat(step=0, now=0.0)           # hosts 1..3 dead
+    with pytest.raises(ft.SupervisorHalted):
+        sup.tick(0.0)
+    assert sup.state == "HALTED" and not rec.calls
+    with pytest.raises(ft.SupervisorHalted):
+        sup.tick(1.0)                       # halted worlds stay halted
+
+
+def test_supervisor_halts_when_recovery_fails(tmp_path):
+    mons, sup_mon = _world(tmp_path)
+    rec = _Recorder(fail=True)
+    sup = ft.Supervisor(ft.Topology(4, 1, 1), [0, 1, 2, 3], sup_mon, rec)
+    for h in (0, 1, 2):
+        mons[h].beat(step=0, now=0.0)
+    with pytest.raises(ft.SupervisorHalted, match="restore failed"):
+        sup.tick(0.0)
+    assert sup.state == "HALTED"
+
+
+# --- trainer: resume validation + quarantine -------------------------------
+
+def _toy_trainer(ckpt_dir, seed=0, data_seed=None):
+    """Tiny linear model through the real Engine/Trainer machinery."""
+    def loss_fn(params, batch, tap):
+        x = batch["ids"].astype(jnp.float32)
+        pred = x @ params["w"]
+        err = pred - batch["labels"].astype(jnp.float32)
+        return jnp.mean(jnp.square(err), axis=-1), None
+
+    params = {"w": jnp.eye(4) * 0.5}
+    dcfg = DataConfig(vocab=16, seq=4, global_batch=4,
+                      seed=seed if data_seed is None else data_seed)
+    return Trainer(
+        ft.poison_loss_fn(loss_fn), params, PexSpec(enabled=True),
+        adamw.AdamWConfig(lr=1e-2),
+        TrainConfig(consumers=(plan_mod.Grads(),), steps=4, log_every=0,
+                    ckpt_every=10 ** 9, ckpt_dir=ckpt_dir, seed=seed),
+        dcfg)
+
+
+def test_trainer_rejects_incomplete_or_mismatched_resume(tmp_path):
+    d = str(tmp_path / "ck")
+    t1 = _toy_trainer(d, seed=0)
+    t1.save_checkpoint(block=True)
+    # trainer seed mismatch: the rng/noise stream would fork
+    with pytest.raises(ValueError, match="seed"):
+        _toy_trainer(d, seed=1).restore_from()
+    # data-stream seed mismatch: different batches would replay
+    with pytest.raises(ValueError, match="data stream"):
+        _toy_trainer(d, seed=0, data_seed=2).restore_from()
+    # a checkpoint with no pipeline state names what's missing
+    t1.ckpt.save(99, t1._state_tree(),
+                 extra={"step": 99, "opt_step": 0, "seed": 0}, block=True)
+    with pytest.raises(ValueError, match=r"missing key\(s\) \['data'\]"):
+        _toy_trainer(d, seed=0).restore_from()
+    # intact checkpoints restore fine
+    assert _toy_trainer(d, seed=0).restore_from(step=0) == 0
+
+
+def test_trainer_quarantines_poisoned_examples():
+    t = _toy_trainer(None)
+    batch = dict(t.data.batch_at(0))
+    batch["poison"] = jnp.asarray([1.0, np.nan, np.nan, 1.0], jnp.float32)
+    before = [np.asarray(x) for x in jax.tree_util.tree_leaves(t.params)]
+    m = t.run_step(batch)
+    assert m["quarantined"] == 2
+    assert t.events[-1]["kind"] == "quarantine"
+    assert t.events[-1]["examples"] == [1, 2]
+    assert np.isfinite(m["loss"])
+    after = [np.asarray(x) for x in jax.tree_util.tree_leaves(t.params)]
+    for leaf in after:
+        assert np.isfinite(leaf).all()
+    # the healthy examples still trained: params moved
+    assert any(not np.array_equal(a, b) for a, b in zip(before, after))
+
+
+def test_trainer_quarantine_matches_clean_step_on_healthy_rows():
+    """Quarantining rows ≡ training on a reweighted batch: the poison
+    must not leak into the healthy examples' update."""
+    t = _toy_trainer(None)
+    batch = dict(t.data.batch_at(0))
+    batch["poison"] = jnp.asarray([1.0, 1.0, np.nan, 1.0], jnp.float32)
+    t.run_step(batch)
+    # reference: same step with the bad row explicitly weighted out
+    r = _toy_trainer(None)
+    clean = dict(r.data.batch_at(0))
+    clean["poison"] = jnp.ones(4, jnp.float32)
+    sub = jax.tree_util.tree_map(
+        lambda x: x.at[2].set(x[0]) if hasattr(x, "at") and x.shape
+        and x.shape[0] == 4 else x, clean)
+    if r._step_fn_weighted is None:
+        r._step_fn_weighted = r._build_step(weighted=True)
+    r.rng, key = jax.random.split(r.rng)
+    p, o, e, _ = r._step_fn_weighted(
+        r.params, r.opt_state, r.err, sub, key,
+        jnp.asarray([1.0, 1.0, 0.0, 1.0]))
+    for a, b in zip(jax.tree_util.tree_leaves(t.params),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_skips_step_when_every_example_is_poisoned():
+    t = _toy_trainer(None)
+    batch = dict(t.data.batch_at(0))
+    batch["poison"] = jnp.full(4, np.nan, jnp.float32)
+    before = [np.asarray(x) for x in jax.tree_util.tree_leaves(t.params)]
+    m = t.run_step(batch)
+    assert m.get("skipped") == 1
+    assert t.events[-1]["kind"] == "skip_step"
+    for a, b in zip(before, jax.tree_util.tree_leaves(t.params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+# --- the storm, end to end -------------------------------------------------
+
+def _run_soak(*extra):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.soak", "--hosts", "4",
+         "--steps", "24", "--seed", "0", "--quiet", *extra],
+        capture_output=True, text=True, env=env, timeout=900)
+
+
+def test_soak_short_storm_end_to_end():
+    r = _run_soak()
+    assert r.returncode == 0, r.stdout + r.stderr
+    summary = json.loads(r.stdout[r.stdout.index("{"):])
+    assert summary["invariants"] == "PASS"
+    assert summary["contractions"] >= 2
+    assert summary["expansions"] >= 1
+    assert summary["fallbacks"] >= 1          # corrupt ckpt → fell back
+    assert summary["quarantined_steps"]       # NaN batch → quarantine
+
+
+def test_soak_mutation_checks_trip_their_invariants():
+    r = _run_soak("--mutation-check")
+    assert r.returncode == 0, r.stdout + r.stderr
+    out = json.loads(r.stdout[r.stdout.rindex('{"mutation_check'):])
+    assert out["mutation_check"] == {"restore": "bit-exact-restore",
+                                     "renumber": "data-replay",
+                                     "reshard": "norm-invariance"}

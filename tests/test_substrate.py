@@ -12,7 +12,7 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.core import importance
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.dist import sharding as shd
-from repro.ft import elastic, heartbeat
+from repro.ft import elastic, heartbeat, inject
 from repro.optim import adamw, grad_compress, schedule
 from repro.roofline import hlo as hlo_parse
 
@@ -177,6 +177,119 @@ def test_elastic_reassign():
     hosts = list(range(8))
     assert elastic.reassign_data_hosts(hosts, dead=[2, 5], new_count=4) == \
         [0, 1, 3, 4]
+
+
+def test_heartbeat_survey_tolerates_torn_files(tmp_path):
+    """A dying host's torn/empty heartbeat is a dead host, not a
+    crashed survey — the monitor must keep working while hosts fail."""
+    cfg = heartbeat.HeartbeatConfig(deadline_s=5.0)
+    mon = heartbeat.HeartbeatMonitor(str(tmp_path), 0, cfg)
+    mon.beat(step=3, now=100.0)
+    (tmp_path / "host_00001.json").write_text('{"step": 3, "ti')  # torn
+    (tmp_path / "host_00002.json").write_text("")                 # empty
+    (tmp_path / "host_junk.json").write_text("{}")       # not a heartbeat
+    (tmp_path / "host_00004.json.tmp").write_text("{}")  # in-flight write
+    s = mon.survey(now=101.0)
+    assert set(s) == {0, 1, 2}
+    assert s[0]["alive"]
+    assert not s[1]["alive"] and "error" in s[1]
+    assert not s[2]["alive"] and "error" in s[2]
+    assert mon.dead_hosts(now=101.0) == [1, 2]
+
+
+def test_checkpoint_writer_failure_surfaces_at_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.ones(4)}
+    # block the async writer's tmp dir with a *file*: its makedirs
+    # fails on the background thread, where an uncaught exception
+    # would silently vanish
+    open(os.path.join(str(tmp_path), "step_000000005.tmp"), "w").close()
+    mgr.save(5, tree)                       # async: no error here
+    with pytest.raises(OSError):
+        mgr.wait()                          # ...it surfaces here
+    mgr.save(6, tree, block=True)           # captured error was consumed
+    assert mgr.latest_step() == 6
+
+
+def test_checkpoint_restore_falls_back_past_corruption(tmp_path):
+    import warnings as _w
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    for s in (5, 6, 7):
+        mgr.save(s, {"a": jnp.full(8, float(s))}, extra={"step": s},
+                 block=True)
+    assert inject.corrupt_newest_checkpoint(str(tmp_path)) == 7
+    with pytest.warns(UserWarning, match="falling back"):
+        tree, extra = mgr.restore(None, {"a": jnp.ones(8)})
+    assert extra["step"] == 6 and mgr.last_restored_step == 6
+    np.testing.assert_array_equal(np.asarray(tree["a"]), np.full(8, 6.0))
+    # truncate 6 as well: falls all the way to 5
+    with open(os.path.join(mgr._step_dir(6), "shard_00000.npz"),
+              "r+b") as f:
+        f.truncate(4)
+    with pytest.warns(UserWarning):
+        _, extra = mgr.restore(None, {"a": jnp.ones(8)})
+    assert extra["step"] == 5 and mgr.last_restored_step == 5
+    # only when *no* committed step is restorable does restore raise
+    with open(os.path.join(mgr._step_dir(5), "shard_00000.npz"),
+              "r+b") as f:
+        f.truncate(4)
+    with pytest.raises(IOError):
+        with _w.catch_warnings():
+            _w.simplefilter("ignore")
+            mgr.restore(None, {"a": jnp.ones(8)})
+
+
+def test_checkpoint_sweeps_stale_tmp_on_construction(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"a": jnp.ones(2)}, block=True)
+    inject.litter_tmp_dir(str(tmp_path), step=99)
+    assert any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    with pytest.warns(UserWarning, match="sweeping"):
+        mgr2 = CheckpointManager(str(tmp_path))
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    assert mgr2.all_steps() == [3]          # committed data untouched
+
+
+def test_elastic_contraction_exactly_at_floor():
+    # pow2 survivors landing exactly on the model-parallel floor: legal
+    topo = elastic.Topology(n_hosts=16, devices_per_host=1,
+                            model_parallel=8)
+    new = elastic.plan_contraction(topo, dead_hosts=list(range(8, 15)))
+    assert new.n_hosts == 8 and new.n_devices == topo.model_parallel
+    assert elastic.mesh_shape(new) == (1, 8)
+    # raw device count passes (3·4 ≥ 12) but the pow2 rounding gives
+    # 2 hosts = 8 devices < 12: must refuse, not under-provision
+    with pytest.raises(RuntimeError, match="power-of-two"):
+        elastic.plan_contraction(elastic.Topology(4, 4, 12),
+                                 dead_hosts=[0])
+
+
+def test_elastic_reassign_more_deaths_than_drops():
+    hosts = list(range(8))
+    # 5 deaths, but the plan only keeps 2: survivors in order
+    assert elastic.reassign_data_hosts(hosts, dead=[0, 1, 2, 3, 4],
+                                       new_count=2) == [5, 6]
+    # fewer survivors than requested: return who's alive (caller halts)
+    assert elastic.reassign_data_hosts(hosts, dead=list(range(7)),
+                                       new_count=2) == [7]
+
+
+def test_elastic_expansion_roundtrip():
+    for n in (4, 8, 16):
+        t = elastic.Topology(n, 2, 4)
+        c = elastic.plan_contraction(t, dead_hosts=[0])
+        assert c.n_hosts == n // 2
+        # full pool back → the original pow2 topology, exactly
+        assert elastic.plan_expansion(c, available_hosts=n) == t
+        # partial pool → largest pow2 ≤ pool, never exceeding it
+        assert elastic.plan_expansion(c, available_hosts=n - 1).n_hosts \
+            == n // 2
+    with pytest.raises(RuntimeError):
+        elastic.plan_expansion(elastic.Topology(4, 1, 4),
+                               available_hosts=3)   # pow2(3)=2 < mp=4
+    with pytest.raises(RuntimeError):
+        elastic.plan_expansion(elastic.Topology(4, 1, 1),
+                               available_hosts=0)
 
 
 # --- importance sampling -----------------------------------------------------
