@@ -1,0 +1,186 @@
+"""Bench-drift gate: the static cost model vs the committed benchmark
+baseline (``BENCH_PR*.json``).
+
+The dispatch layer's method choices (``norms.pick_method`` /
+``pick_segmented``) and the crossover tables the docs cite are *model*
+outputs; the BENCH files record what the model said — and what was
+measured — when the benchmarks last ran. Editing the cost model (a new
+flop formula, a changed VPU weight, a retuned kernel cost) silently
+invalidates those records: the model in HEAD starts disagreeing with
+the picks and crossovers the committed baseline documents, and nothing
+fails until someone re-runs the full bench suite.
+
+This gate recomputes every model-derived row of the newest baseline
+with the CURRENT code and fails on drift:
+
+  * ``*.crossover[p=AxB]#derived = "xla_s=N;pallas_s=M"`` — recompute
+    ``crossover_s`` per backend; > ``--tolerance`` (default 25%)
+    relative deviation fails;
+  * ``seg.crossover_model[p=AxB,n=N]#derived = "t=N"`` — recompute
+    ``crossover_t`` likewise;
+  * ``...#derived = "cost_model_pick=X"`` — recompute the pick
+    (``pick_method`` for dense rows, ``pick_segmented`` for segmented
+    ones); a categorical flip fails outright, and on XLA-measured
+    dense rows the picked method's recorded time must be within
+    tolerance of the measured best (the model must still pick a
+    winner, not just the same name);
+  * rows marked ``interpret_mode`` or ``upper_bound`` (and the
+    ``plan.*``/``v2.*`` flop telemetry) are measurements, not model
+    outputs — skipped.
+
+Pure Python + the cost-model functions — no kernels run, no jit; CI
+runs it in the lint job.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Tuple
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(_HERE), "src"))
+
+_NAME = re.compile(r"^(?P<base>[\w.]+)\[(?P<cfg>[^\]]*)\]$")
+
+
+def _parse(name: str) -> Tuple[str, Dict[str, str]]:
+    m = _NAME.match(name)
+    if not m:
+        return name, {}
+    cfg = {}
+    for part in m.group("cfg").split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            cfg[k] = v
+    return m.group("base"), cfg
+
+
+def _p(cfg: Dict[str, str]) -> Tuple[int, int]:
+    p_in, p_out = cfg["p"].split("x")
+    return int(p_in), int(p_out)
+
+
+def _rel(new: float, old: float) -> float:
+    return abs(new - old) / max(abs(old), 1.0)
+
+
+def newest_bench(root: str) -> str:
+    """Latest baseline by PR number (BENCH_PR<k>.json)."""
+    paths = glob.glob(os.path.join(root, "BENCH_PR*.json"))
+    if not paths:
+        raise FileNotFoundError(f"no BENCH_PR*.json under {root}")
+
+    def pr(p):
+        m = re.search(r"BENCH_PR(\d+)", p)
+        return int(m.group(1)) if m else -1
+
+    return max(paths, key=pr)
+
+
+def check(bench: Dict, tolerance: float = 0.25) -> List[str]:
+    """All drift errors of one baseline against the current model."""
+    from repro.core import norms
+
+    problems: List[str] = []
+    derived = {k[: -len("#derived")]: v for k, v in bench.items()
+               if k.endswith("#derived") and isinstance(v, str)}
+
+    for name, note in sorted(derived.items()):
+        if "interpret_mode" in note or note == "upper_bound":
+            continue
+        base, cfg = _parse(name)
+
+        if base.endswith(".crossover") and "xla_s=" in note:
+            p_in, p_out = _p(cfg)
+            rec = dict(kv.split("=") for kv in note.split(";"))
+            for key, pallas in (("xla_s", False), ("pallas_s", True)):
+                old = int(rec[key])
+                new = norms.crossover_s(p_in, p_out, use_pallas=pallas)
+                if _rel(new, old) > tolerance:
+                    problems.append(
+                        f"{name}: {key} drifted {old} -> {new} "
+                        f"({_rel(new, old):.0%} > {tolerance:.0%})")
+            continue
+
+        if base.endswith(".crossover_model") and note.startswith("t="):
+            p_in, p_out = _p(cfg)
+            old = int(note[2:])
+            new = norms.crossover_t(p_in, p_out, int(cfg["n"]))
+            if _rel(new, old) > tolerance:
+                problems.append(
+                    f"{name}: crossover_t drifted {old} -> {new} "
+                    f"({_rel(new, old):.0%} > {tolerance:.0%})")
+            continue
+
+        if note.startswith("cost_model_pick="):
+            recorded = note[len("cost_model_pick="):]
+            if base.startswith("seg."):
+                now = norms.pick_segmented(
+                    int(cfg["t"]), *_p(cfg), int(cfg["n"]),
+                    use_pallas=True)
+            else:
+                now = norms.pick_method(
+                    int(cfg["s"]), *_p(cfg),
+                    use_pallas=base.endswith("_pallas"))
+            if now != recorded:
+                problems.append(
+                    f"{name}: cost-model pick flipped "
+                    f"{recorded!r} -> {now!r}")
+            problems.extend(
+                _measured_best(bench, base, cfg, recorded, tolerance))
+
+    return problems
+
+
+def _measured_best(bench: Dict, base: str, cfg: Dict[str, str],
+                   pick: str, tolerance: float) -> List[str]:
+    """On XLA-measured dense rows: the model's pick must be within
+    tolerance of the measured best of the gram/direct pair. Pallas
+    rows are interpret-mode on CPU baselines — timing there is not a
+    model property."""
+    if not base.startswith("methods.") or base.endswith("_pallas"):
+        return []
+    tail = "[" + ",".join(f"{k}={v}" for k, v in cfg.items()) + "]"
+    times = {m: bench.get(f"methods.{m}{tail}")
+             for m in ("gram", "direct")}
+    if any(t is None for t in times.values()):
+        return []
+    best = min(times.values())
+    picked = times[pick]
+    if picked > (1.0 + tolerance) * best:
+        return [f"methods.{pick}{tail}: model pick measured at "
+                f"{picked:.1f}us, {picked / best:.2f}x the measured "
+                f"best ({best:.1f}us) — cost model no longer predicts "
+                f"the winner"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when the cost model drifts from the newest "
+                    "committed benchmark baseline")
+    ap.add_argument("--bench", default=None,
+                    help="baseline JSON (default: newest BENCH_PR*.json "
+                         "in the repo root)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="max relative deviation (default 0.25)")
+    args = ap.parse_args(argv)
+
+    path = args.bench or newest_bench(os.path.dirname(_HERE))
+    with open(path) as f:
+        bench = json.load(f)
+    problems = check(bench, tolerance=args.tolerance)
+    n_rows = sum(1 for k in bench if k.endswith("#derived"))
+    for p in problems:
+        print(f"DRIFT {p}")
+    print(f"bench-drift: {os.path.basename(path)}, {n_rows} derived "
+          f"row(s), {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 """pexlint — static analysis over traced jaxprs and launch contracts
-(DESIGN.md §10).
+(DESIGN.md §10, §12).
 
-Three passes, none of which executes or compiles model code:
+Six passes, none of which executes or compiles model code:
 
   * ``coverage`` — tap-coverage verification: walk the traced loss
     jaxpr from every trainable leaf toward the loss and prove each
@@ -10,16 +10,35 @@ Three passes, none of which executes or compiles model code:
     claims as reusable HLO-cost analyzers (these DO compile — the one
     opt-in exception, shared with tests and benches);
   * ``launch`` — kernel-launch validation of every Pallas schedule a
-    model's tap sites imply, against the declared ``LaunchContract``s.
+    model's tap sites imply, against the declared ``LaunchContract``s;
+  * ``privacy`` — dataflow proof of the DP invariants over a full
+    traced step: every trained gradient scaled by the per-example clip
+    coefficient before any batch sum, Gaussian noise injected exactly
+    once after the cross-device psum at scale σ·C, PRNG key lineage
+    single-use;
+  * ``collectives`` — per-shard_map-region layout verification: psum
+    axes against the mesh, per-example outputs never reduced over the
+    data axes, replicated outputs psum'd exactly once (plus the
+    declared 2-D DP×TP schedule);
+  * ``determinism`` — AST verification that the data pipeline and the
+    soak replay path are pure in (seed, step).
 
 ``verify.verify`` (surfaced as ``Engine.verify``) composes them;
-``python -m repro.analysis`` lints every registered model.
+``python -m repro.analysis`` lints every registered model. The flow
+passes share ``_jaxpr.Walker``/``_jaxpr.trace_step`` (the abstract-
+trace front end) and report ``findings.Finding`` records, which
+``--json`` emits machine-readably.
 """
+from repro.analysis.collectives import (CollectivesReport, ScheduleEntry,
+                                        expected_schedule)
 from repro.analysis.coverage import (AnalysisError, CoverageReport,
                                      LeafReport, TapSite, trace_coverage)
+from repro.analysis.determinism import (DeterminismReport, check_source)
+from repro.analysis.findings import ERROR, INFO, WARNING, Finding
 from repro.analysis.launch import (LaunchReport, contracts_for_sites,
                                    production_cases, validate_contracts,
                                    validate_sites)
+from repro.analysis.privacy import PrivacyReport
 from repro.analysis.verify import VerifyReport, verify
 
 __all__ = [
@@ -27,4 +46,7 @@ __all__ = [
     "trace_coverage", "LaunchReport", "contracts_for_sites",
     "production_cases", "validate_contracts", "validate_sites",
     "VerifyReport", "verify",
+    "Finding", "ERROR", "WARNING", "INFO",
+    "PrivacyReport", "CollectivesReport", "ScheduleEntry",
+    "expected_schedule", "DeterminismReport", "check_source",
 ]

@@ -1,23 +1,36 @@
 """``python -m repro.analysis`` — lint every registered model.
 
 For each arch × granularity {example, token} × consumer-set
-combination, run plan analysis, tap-coverage verification, and
-kernel-launch validation, entirely at trace level: params come from
+combination, run plan analysis, tap-coverage verification,
+kernel-launch validation, and the flow passes — privacy (DP dataflow
+over a full traced step), collectives (shard_map layout against a
+one-device data mesh), determinism (data-pipeline purity, checked once
+per run) — entirely at trace level: params come from
 ``jax.eval_shape`` over the initializer, batches from
 ``registry.train_batch_specs`` — no weights are ever materialized and
 no XLA compilation happens. A guard on the XLA compile entry point
 enforces that (``--no-trace-guard`` to disable, e.g. when adding an
-opt-in compiled pass); the CI ``lint`` job relies on it to stay under
-its time budget on CPU.
+opt-in compiled pass); the CI ``lint`` jobs rely on it to stay under
+their time budget on CPU.
 
-Exit status: 0 when every combination is clean, 1 with
-``--fail-on-error`` when any coverage/launch error survives.
+``--fast`` skips the flow passes (coverage + plan + launch only) — the
+CI ``lint-fast`` job's mode; ``lint-full`` runs everything. ``--json``
+emits the findings machine-readably on stdout (human status lines move
+to stderr).
+
+Exit status (``resolve_exit``): errors fail the run only under
+``--fail-on-error``; warnings only under ``--fail-on-warn``. A
+warnings-only run under ``--fail-on-error`` exits 0 — warnings are
+advisory (stale allowlist entries, unregistered allowlist keys) and
+must not break CI that only gates on errors.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from typing import List
 
 
 def _consumer_sets(granularity: str, key):
@@ -55,9 +68,10 @@ class _TraceOnlyGuard:
 
 
 def lint_arch(arch_id: str, *, backend: str, production: bool,
-              key) -> list:
-    """All error strings for one arch across every lint combination."""
+              key, mesh=None, deep: bool = True) -> List:
+    """All findings for one arch across every lint combination."""
     import jax
+    from repro.analysis import findings as F
     from repro.analysis.verify import verify as _verify
     from repro.configs.common import ShapeSpec
     from repro.models import registry
@@ -73,32 +87,78 @@ def lint_arch(arch_id: str, *, backend: str, production: bool,
     loss_fn = registry.make_loss_fn_v2(aspec, cfg)
     allow = registry.untapped_allowlist(arch_id)
 
-    errors = []
+    found: List = []
     for gran in ("example", "token"):
         try:
             rep = _verify(
                 loss_fn, params, batch, _consumer_sets(gran, key),
                 granularity=gran, allow=allow, seq=shape.seq,
                 cfg=aspec.full(), backend=backend,
-                production=production and gran == "example")
+                production=production and gran == "example",
+                mesh=mesh if gran == "example" else None,
+                deep=deep, determinism=False)
         except Exception as e:  # a trace failure is itself a lint error
-            errors.append(f"{arch_id}[{gran}]: {type(e).__name__}: {e}")
+            found.append(F.Finding(
+                "trace", F.ERROR, "trace-failure",
+                f"{type(e).__name__}: {e}", model=arch_id,
+                granularity=gran))
             continue
-        errors.extend(f"{arch_id}[{gran}]: {e}" for e in rep.errors)
-    return errors
+        per_gran: List = [
+            F.Finding("coverage", F.ERROR, "untapped-leaf",
+                      f"{l.path} is {l.status}", leaf=str(l.path))
+            for l in rep.coverage.errors]
+        per_gran += [F.Finding("launch", F.ERROR, "contract-violation", e)
+                     for e in rep.launch.errors]
+        per_gran += [F.Finding("coverage", F.WARNING, "stale-allow-entry",
+                               f"allowlist entry {a!r} matches no "
+                               f"parameter leaf of {arch_id}")
+                     for a in rep.coverage.stale_allow]
+        per_gran += list(rep.findings)
+        found.extend(F.tag(per_gran, model=arch_id, granularity=gran))
+    return found
+
+
+def registry_findings() -> List:
+    """Run-level registry hygiene: allowlist keys must name archs."""
+    from repro.analysis import findings as F
+    from repro.models import registry
+    return [F.Finding("coverage", F.WARNING, "unknown-allowlist-key",
+                      f"UNTAPPED_ALLOWLIST key {k!r} is not a "
+                      f"registered arch id")
+            for k in sorted(registry.UNTAPPED_ALLOWLIST)
+            if k not in registry.ARCHS]
+
+
+def resolve_exit(n_errors: int, n_warnings: int, fail_on_error: bool,
+                 fail_on_warn: bool) -> int:
+    """Errors gate only under --fail-on-error, warnings only under
+    --fail-on-warn; a warnings-only run is a pass for error-gated CI."""
+    if fail_on_error and n_errors:
+        return 1
+    if fail_on_warn and n_warnings:
+        return 1
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="pexlint: static tap-coverage, plan, and "
-                    "kernel-launch checks")
+        description="pexlint: static tap-coverage, plan, kernel-launch, "
+                    "privacy-flow, collective-layout, and determinism "
+                    "checks")
     ap.add_argument("--all-models", action="store_true",
                     help="lint every registered arch")
     ap.add_argument("--arch", action="append", default=[],
                     help="lint one arch id (repeatable)")
     ap.add_argument("--fail-on-error", action="store_true",
-                    help="exit 1 if any lint error is found")
+                    help="exit 1 if any lint ERROR is found")
+    ap.add_argument("--fail-on-warn", action="store_true",
+                    help="exit 1 if any WARNING is found (errors too)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--fast", action="store_true",
+                    help="coverage/plan/launch only — skip the flow "
+                         "passes (CI lint-fast)")
     ap.add_argument("--backend", default="tpu",
                     help="launch-contract budget profile (default: tpu)")
     ap.add_argument("--no-production", action="store_true",
@@ -107,39 +167,58 @@ def main(argv=None) -> int:
     ap.add_argument("--no-trace-guard", action="store_true",
                     help="allow XLA compilation during the lint")
     args = ap.parse_args(argv)
+    say = (lambda m: print(m, file=sys.stderr)) if args.json else print
 
     from repro.models import registry
     arch_ids = sorted(registry.ARCHS) if args.all_models or not args.arch \
         else args.arch
 
-    # concrete PRNG key for the Noise consumer — created BEFORE the
-    # trace guard goes up (key creation itself compiles a tiny program)
+    # concrete PRNG key and the one-device data mesh for the collective
+    # pass — both created BEFORE the trace guard goes up (key creation
+    # itself compiles a tiny program)
     import jax
+    import numpy as np
+    from jax.sharding import Mesh
     key = jax.random.PRNGKey(0)
+    mesh = None if args.fast else Mesh(np.array(jax.devices()[:1]),
+                                       ("data",))
 
     t0 = time.time()
-    all_errors = []
+    findings: List = list(registry_findings())
     guard = _TraceOnlyGuard() if not args.no_trace_guard else None
     try:
         if guard is not None:
             guard.__enter__()
+        if not args.fast:
+            from repro.analysis import determinism as det
+            findings.extend(det.analyze().findings)
         for aid in arch_ids:
             t1 = time.time()
-            errs = lint_arch(aid, backend=args.backend,
-                             production=not args.no_production, key=key)
-            all_errors.extend(errs)
-            status = "ok" if not errs else f"{len(errs)} ERROR"
-            print(f"  {aid:24s} {status:12s} {time.time() - t1:5.1f}s")
+            fs = lint_arch(aid, backend=args.backend,
+                           production=not args.no_production, key=key,
+                           mesh=mesh, deep=not args.fast)
+            findings.extend(fs)
+            n_e = sum(f.severity == "error" for f in fs)
+            status = "ok" if not n_e else f"{n_e} ERROR"
+            say(f"  {aid:24s} {status:12s} {time.time() - t1:5.1f}s")
     finally:
         if guard is not None:
             guard.__exit__(None, None, None)
 
-    for e in all_errors:
-        print(f"ERROR {e}")
-    n = len(all_errors)
-    print(f"pexlint: {len(arch_ids)} arch(s), {n} error(s), "
-          f"{time.time() - t0:.1f}s")
-    return 1 if (n and args.fail_on_error) else 0
+    n_err = sum(f.severity == "error" for f in findings)
+    n_warn = sum(f.severity == "warning" for f in findings)
+    for f in findings:
+        say(f.render())
+    say(f"pexlint: {len(arch_ids)} arch(s), {n_err} error(s), "
+        f"{n_warn} warning(s), {time.time() - t0:.1f}s")
+    if args.json:
+        print(json.dumps({
+            "archs": arch_ids, "errors": n_err, "warnings": n_warn,
+            "elapsed_s": round(time.time() - t0, 2),
+            "findings": [f.to_json() for f in findings],
+        }, indent=2))
+    return resolve_exit(n_err, n_warn, args.fail_on_error,
+                        args.fail_on_warn)
 
 
 if __name__ == "__main__":

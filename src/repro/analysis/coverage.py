@@ -12,11 +12,13 @@ parameter leaf by taint analysis.
 
 **Taint propagation.** Each jaxpr variable carries the set of parameter
 leaves it (transitively) depends on. Ordinary equations union their
-operands' taint into their outputs. A pex equation (identified by its
-registered backward rule — ``taps.PEX_OPS``) is the one place taint is
-*blocked*: the weight-slot operand's taint is captured as a tap site
-and does NOT flow into the op's output, while data-slot taint flows
-through. After propagation:
+operands' taint into their outputs — the structural recursion into
+``pjit``, ``scan``, ``while``/``cond``, and foreign ``custom_vjp``
+calls lives in the shared front end (``analysis._jaxpr.Walker``). A
+pex equation (identified by its registered backward rule —
+``taps.PEX_OPS``) is the one place taint is *blocked*: the weight-slot
+operand's taint is captured as a tap site and does NOT flow into the
+op's output, while data-slot taint flows through. After propagation:
 
   * leaf taint reaches the loss        ⇒ **untapped-but-trained**: some
     gradient path avoids every tap (ERROR unless allowlisted);
@@ -27,13 +29,8 @@ A leaf that is both captured *and* reaches the loss (e.g. a weight
 used through ``tap.dense`` in one layer and a plain einsum in another)
 is still an error — its norm undercounts the plain path.
 
-The walk recurses structurally into ``pjit``, ``scan`` (carry taint to
-fixpoint), ``remat2``, ``cond``/``while`` branches, and foreign
-``custom_vjp``/``custom_jvp`` calls, so the same pass covers scanned
-stacks, checkpointed blocks, and the flash-attention kernel without
-special cases. Everything here is ``jax.make_jaxpr`` — no XLA
-compilation, no execution; abstract (``ShapeDtypeStruct``) params and
-batches work.
+Everything here is ``jax.make_jaxpr`` — no XLA compilation, no
+execution; abstract (``ShapeDtypeStruct``) params and batches work.
 
 **Allowlist.** Intentionally untapped parameters (DESIGN.md §5: the
 weight-shared zamba2 block, ssm conv/decay tensors, rwkv mix/decay
@@ -42,7 +39,11 @@ accidental: ``allow`` entries are substrings matched against the
 leaf's key path (``models.registry.UNTAPPED_ALLOWLIST`` holds the
 per-arch declarations; ``tests/helpers.py`` derives its oracle scope
 filter from the same table, so the analyzer and the exactness tests
-can never disagree about scope).
+can never disagree about scope). The converse is checked too: an
+``allow`` entry that matches NO parameter path is *stale* — the
+parameter it once declared was renamed or removed, and the entry now
+silently waits to mask a future regression — reported in
+``CoverageReport.stale_allow`` and surfaced as a pexlint WARNING.
 """
 from __future__ import annotations
 
@@ -52,14 +53,11 @@ from typing import Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import _jaxpr as _J
+from repro.analysis._jaxpr import AnalysisError  # re-export  # noqa: F401
 from repro.core.taps import (ExampleLayout, PexSpec, Tap, identify_pex_bwd)
 
-_EMPTY = frozenset()
-
-
-class AnalysisError(RuntimeError):
-    """The jaxpr walker met a structure it cannot soundly propagate
-    through (a sub-jaxpr whose arity disagrees with its equation)."""
+_EMPTY = _J.EMPTY
 
 
 # ---------------------------------------------------------------------------
@@ -99,6 +97,7 @@ class CoverageReport:
     leaves: Tuple[LeafReport, ...]
     sites: Tuple[TapSite, ...]
     token_loss_registered: bool
+    stale_allow: Tuple[str, ...] = ()   # allow entries matching no leaf
 
     @property
     def errors(self) -> Tuple[LeafReport, ...]:
@@ -129,6 +128,11 @@ class CoverageReport:
                 f"gradient path reaches the loss without crossing any pex "
                 f"op, so per-example norms undercount it; tap it or add "
                 f"it to the allowlist")
+        for a in self.stale_allow:
+            lines.append(
+                f"  WARNING stale allowlist entry {a!r}: matches no "
+                f"parameter path in this model — remove it, or it will "
+                f"silently mask the next parameter named like it")
         return "\n".join(lines)
 
     def raise_if_errors(self) -> "CoverageReport":
@@ -138,65 +142,20 @@ class CoverageReport:
 
 
 # ---------------------------------------------------------------------------
-# the jaxpr walker
+# the jaxpr walker — pex tap semantics over the shared front end
 # ---------------------------------------------------------------------------
 
-def _read(env, atom):
-    if hasattr(atom, "val"):            # Literal
-        return _EMPTY
-    return env.get(atom, _EMPTY)
+class _CoverageWalker(_J.Walker):
+    """Union-taint walker that blocks weight taint at pex tap sites."""
 
+    def __init__(self):
+        super().__init__()
+        self.sites: list = []
 
-def _write(env, var, taint):
-    # DropVars are placeholders for unused outputs
-    if type(var).__name__ == "DropVar":
-        return
-    env[var] = env.get(var, _EMPTY) | taint
-
-
-def _as_open(j):
-    """Jaxpr of a possibly-Closed jaxpr."""
-    return j.jaxpr if hasattr(j, "jaxpr") else j
-
-
-def _sub_jaxprs(params: dict):
-    """Every (Closed)Jaxpr value in an equation's params."""
-    found = []
-    for v in params.values():
-        if hasattr(v, "eqns") or (hasattr(v, "jaxpr")
-                                  and hasattr(_as_open(v), "eqns")):
-            found.append(v)
-        elif isinstance(v, (tuple, list)):
-            for w in v:
-                if hasattr(w, "eqns") or (hasattr(w, "jaxpr")
-                                          and hasattr(_as_open(w), "eqns")):
-                    found.append(w)
-    return found
-
-
-def _run_jaxpr(jaxpr, in_taints, sites):
-    """Propagate taint through one (open) jaxpr; returns out taints.
-    ``sites=None`` discards tap-site records (fixpoint warm-up runs)."""
-    jaxpr = _as_open(jaxpr)
-    if len(jaxpr.invars) != len(in_taints):
-        raise AnalysisError(
-            f"sub-jaxpr arity mismatch: {len(jaxpr.invars)} invars vs "
-            f"{len(in_taints)} operand taints")
-    env = {}
-    for v in jaxpr.constvars:
-        env[v] = _EMPTY
-    for v, t in zip(jaxpr.invars, in_taints):
-        _write(env, v, t)
-    for eqn in jaxpr.eqns:
-        _eqn_taint(eqn, env, sites)
-    return [_read(env, v) for v in jaxpr.outvars]
-
-
-def _eqn_taint(eqn, env, sites) -> None:
-    name = eqn.primitive.name
-    in_t = [_read(env, v) for v in eqn.invars]
-
-    if name in ("custom_vjp_call_jaxpr", "custom_vjp_call"):
+    def hook(self, eqn, in_t):
+        if eqn.primitive.name not in ("custom_vjp_call_jaxpr",
+                                      "custom_vjp_call"):
+            return None
         info = identify_pex_bwd(eqn.params.get("bwd"))
         num_consts = eqn.params.get("num_consts", 0)
         if info is not None and \
@@ -206,91 +165,23 @@ def _eqn_taint(eqn, env, sites) -> None:
             captured = _EMPTY
             for ws in info.weight_slots:
                 captured = captured | ops_t[ws]
-            if sites is not None:
+            if self.recording:
                 avals = tuple(
                     (tuple(v.aval.shape), jnp.dtype(v.aval.dtype).name)
                     for v in ops_v)
-                sites.append(TapSite(len(sites), info.name, captured, avals))
+                self.sites.append(
+                    TapSite(len(self.sites), info.name, captured, avals))
             data = _EMPTY
             for ds in info.data_slots:
                 data = data | ops_t[ds]
             # outputs are (z, acc): weight taint is *blocked* — covered
             # gradient paths end at the tap
-            _write(env, eqn.outvars[0], data)
-            for ov in eqn.outvars[1:]:
-                _write(env, ov, ops_t[-1])
-            return
+            return [data] + [ops_t[-1]] * (len(eqn.outvars) - 1)
         # foreign custom_vjp (e.g. flash attention): recurse
         fun = eqn.params.get("fun_jaxpr") or eqn.params.get("call_jaxpr")
-        if fun is not None and len(_as_open(fun).invars) == len(in_t):
-            outs = _run_jaxpr(fun, in_t, sites)
-            for ov, t in zip(eqn.outvars, outs):
-                _write(env, ov, t)
-            return
-
-    elif name == "pjit":
-        outs = _run_jaxpr(eqn.params["jaxpr"], in_t, sites)
-        for ov, t in zip(eqn.outvars, outs):
-            _write(env, ov, t)
-        return
-
-    elif name == "scan":
-        nc = eqn.params["num_consts"]
-        ncar = eqn.params["num_carry"]
-        body = eqn.params["jaxpr"]
-        consts_t, carry_t = in_t[:nc], list(in_t[nc:nc + ncar])
-        xs_t = in_t[nc + ncar:]
-        while True:                      # carry-taint fixpoint
-            outs = _run_jaxpr(body, consts_t + carry_t + xs_t, None)
-            new_carry = [c | o for c, o in zip(carry_t, outs[:ncar])]
-            if new_carry == carry_t:
-                break
-            carry_t = new_carry
-        outs = _run_jaxpr(body, consts_t + carry_t + xs_t, sites)
-        final = [c | o for c, o in zip(carry_t, outs[:ncar])] + outs[ncar:]
-        for ov, t in zip(eqn.outvars, final):
-            _write(env, ov, t)
-        return
-
-    elif name == "while":
-        cn = eqn.params["cond_nconsts"]
-        bn = eqn.params["body_nconsts"]
-        body = eqn.params["body_jaxpr"]
-        cond_t = in_t[:cn]
-        body_c = in_t[cn:cn + bn]
-        carry_t = list(in_t[cn + bn:])
-        while True:
-            outs = _run_jaxpr(body, body_c + carry_t, None)
-            new_carry = [c | o for c, o in zip(carry_t, outs)]
-            if new_carry == carry_t:
-                break
-            carry_t = new_carry
-        _run_jaxpr(body, body_c + carry_t, sites)
-        pred = frozenset().union(*cond_t) if cond_t else _EMPTY
-        for ov, t in zip(eqn.outvars, carry_t):
-            _write(env, ov, t | pred)
-        return
-
-    elif name == "cond":
-        pred_t = in_t[0]
-        for branch in eqn.params["branches"]:
-            outs = _run_jaxpr(branch, in_t[1:], sites)
-            for ov, t in zip(eqn.outvars, outs):
-                _write(env, ov, t | pred_t)
-        return
-
-    else:
-        subs = _sub_jaxprs(eqn.params)
-        if len(subs) == 1 and len(_as_open(subs[0]).invars) == len(in_t):
-            outs = _run_jaxpr(subs[0], in_t, sites)
-            for ov, t in zip(eqn.outvars, outs):
-                _write(env, ov, t)
-            return
-
-    # conservative fallback: everything flows everywhere
-    union = frozenset().union(*in_t) if in_t else _EMPTY
-    for ov in eqn.outvars:
-        _write(env, ov, union)
+        if fun is not None and len(_J.as_open(fun).invars) == len(in_t):
+            return self.run(fun, in_t)
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -302,6 +193,15 @@ def _leading_dim(tree) -> int:
     if not leaves:
         raise ValueError("cannot infer batch size from an empty batch")
     return leaves[0].shape[0]
+
+
+def stale_allow_entries(allow: Sequence[str],
+                        paths: Sequence[Tuple[str, str]]) -> Tuple[str, ...]:
+    """``allow`` entries that match no leaf path. ``paths`` holds
+    (raw, pretty) path pairs — the same two forms the allowlist is
+    matched against, so an entry is stale iff it can never fire."""
+    return tuple(a for a in allow
+                 if not any(a in raw or a in pretty for raw, pretty in paths))
 
 
 def trace_coverage(loss_fn: Callable, params, batch, *,
@@ -340,15 +240,18 @@ def trace_coverage(loss_fn: Callable, params, batch, *,
     closed = jax.make_jaxpr(run)(params, batch)
     jaxpr = closed.jaxpr
 
-    sites: list = []
+    walker = _CoverageWalker()
     in_taints = [frozenset((i,)) if i < n_leaves else _EMPTY
                  for i in range(len(jaxpr.invars))]
-    out_taints = _run_jaxpr(jaxpr, in_taints, sites)
+    out_taints = walker.run(jaxpr, in_taints)
+    sites = walker.sites
     loss_taint = out_taints[0] if out_taints else _EMPTY
 
     leaves = []
+    path_pairs = []
     for i, (path, leaf) in enumerate(flat):
         raw, pretty = str(path), jax.tree_util.keystr(path)
+        path_pairs.append((raw, pretty))
         captured = tuple(s.index for s in sites if i in s.param_leaves)
         if i in loss_taint:
             status = UNTAPPED
@@ -361,4 +264,5 @@ def trace_coverage(loss_fn: Callable, params, batch, *,
         leaves.append(LeafReport(pretty, tuple(leaf.shape), status,
                                  allowed, captured))
     return CoverageReport(tuple(leaves), tuple(sites),
-                          bool(state.get("token")))
+                          bool(state.get("token")),
+                          stale_allow_entries(allow, path_pairs))

@@ -1,7 +1,7 @@
 """``Engine.verify`` backend — one call that runs every trace-only
-pexlint pass against a model (DESIGN.md §10).
+pexlint pass against a model (DESIGN.md §10, §12).
 
-Composes the three analyzers:
+Composes the analyzers:
 
   * plan analysis (``core.plan.analyze``) validates the consumer list
     and yields the static cost shape (``Plan.describe()``);
@@ -10,7 +10,16 @@ Composes the three analyzers:
     allowlist;
   * launch validation (``analysis.launch``) checks every Pallas
     schedule the trace's tap sites imply, plus the config-derived
-    production geometries.
+    production geometries;
+  * privacy flow (``analysis.privacy``) walks a full traced step per
+    consumer set and proves the DP dataflow invariants —
+    clip-before-sum, noise-once-after-psum, σ·C scale, single-use
+    keys;
+  * collective layout (``analysis.collectives``) checks the shard_map
+    regions of a mesh trace against the per-example/replicated psum
+    contract;
+  * determinism (``analysis.determinism``) statically verifies the
+    data pipeline and soak replay path are (seed, step)-pure.
 
 Everything here operates on traced jaxprs and static contracts — no
 XLA compilation, no kernel execution — so it is safe to run on
@@ -22,8 +31,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
+from repro.analysis import _jaxpr as _J
+from repro.analysis import collectives as _col
 from repro.analysis import coverage as _cov
+from repro.analysis import determinism as _det
 from repro.analysis import launch as _launch
+from repro.analysis import privacy as _priv
+from repro.analysis.findings import ERROR, Finding
 from repro.core import plan as plan_mod
 from repro.core.taps import ExampleLayout, PexSpec, TokenLayout
 
@@ -34,27 +48,57 @@ class VerifyReport:
     plans: Tuple[plan_mod.Plan, ...]
     coverage: _cov.CoverageReport
     launch: _launch.LaunchReport
+    privacy: Tuple[_priv.PrivacyReport, ...] = ()
+    collectives: Tuple[_col.CollectivesReport, ...] = ()
+    determinism: Optional[_det.DeterminismReport] = None
+
+    @property
+    def findings(self) -> Tuple[Finding, ...]:
+        """Every Finding from the flow passes (privacy, collectives,
+        determinism); coverage/launch keep their own report shapes."""
+        out: Tuple[Finding, ...] = ()
+        for r in self.privacy + self.collectives:
+            out += r.findings
+        if self.determinism is not None:
+            out += self.determinism.findings
+        return out
 
     @property
     def ok(self) -> bool:
-        return self.coverage.ok and self.launch.ok
+        return (self.coverage.ok and self.launch.ok
+                and all(r.ok for r in self.privacy)
+                and all(r.ok for r in self.collectives)
+                and (self.determinism is None or self.determinism.ok))
 
     @property
     def errors(self) -> Tuple[str, ...]:
         cov = tuple(f"coverage: {l.path} is {l.status}"
                     for l in self.coverage.errors)
-        return cov + tuple(f"launch: {e}" for e in self.launch.errors)
+        flow = tuple(f.render() for f in self.findings
+                     if f.severity == ERROR)
+        return cov + tuple(f"launch: {e}" for e in self.launch.errors) \
+            + flow
 
     def summary(self) -> str:
         lines = [f"plan[{i}]: {p.describe()}"
                  for i, p in enumerate(self.plans)]
         lines.append(self.coverage.summary())
         lines.append(self.launch.summary())
+        for r in self.privacy:
+            lines.append(r.summary())
+        for r in self.collectives:
+            lines.append(r.summary())
+        if self.determinism is not None:
+            lines.append(self.determinism.summary())
         return "\n".join(lines)
 
     def raise_if_errors(self) -> "VerifyReport":
         self.coverage.raise_if_errors()
         self.launch.raise_if_errors()
+        flow = [f.render() for f in self.findings
+                if f.severity == ERROR]
+        if flow:
+            raise _cov.AnalysisError("\n".join(flow))
         return self
 
 
@@ -62,13 +106,20 @@ def verify(loss_fn, params, batch, consumers: Sequence = (), *,
            spec: Optional[PexSpec] = None, granularity: str = "example",
            allow: Sequence[str] = (), batch_size: Optional[int] = None,
            seq: Optional[int] = None, cfg=None, backend: str = "tpu",
-           production: bool = True) -> VerifyReport:
+           production: bool = True, mesh=None,
+           data_axes: Sequence[str] = ("data",),
+           deep: bool = True, determinism: bool = True) -> VerifyReport:
     """Run all trace-only static checks for one model.
 
     ``consumers`` may be one consumer list or a sequence of lists —
     each is folded through plan analysis (raising on invalid
-    compositions) without affecting the trace; the tap sites a model
-    emits do not depend on who consumes the stats.
+    compositions) without affecting the coverage trace; the tap sites
+    a model emits do not depend on who consumes the stats. With
+    ``deep`` (default), each non-empty consumer set is additionally
+    traced as a full ``Engine.step`` and run through the privacy-flow
+    pass — against ``mesh`` when one is given (which also enables the
+    collective-layout pass on its shard_map regions) — and the data
+    pipeline's determinism contract is checked once.
     """
     spec = spec if spec is not None else PexSpec(enabled=True)
     if consumers and not isinstance(consumers[0], (list, tuple)):
@@ -89,4 +140,24 @@ def verify(loss_fn, params, batch, consumers: Sequence = (), *,
                               allow=allow)
     lr = _launch.validate_sites(cov.sites, cfg, backend=backend,
                                 production=production)
-    return VerifyReport(plans, cov, lr)
+
+    privacy: Tuple[_priv.PrivacyReport, ...] = ()
+    collectives: Tuple[_col.CollectivesReport, ...] = ()
+    det = None
+    if deep:
+        for cs in consumer_sets:
+            if not cs:
+                continue
+            tr = _J.trace_step(loss_fn, params, batch, cs, spec=spec,
+                               granularity=granularity, mesh=mesh,
+                               data_axes=data_axes,
+                               batch_size=batch_size, seq=seq)
+            privacy += (_priv.analyze_trace(tr),)
+            if mesh is not None:
+                collectives += (_col.analyze_trace(tr),)
+        if determinism:
+            # the data-pipeline purity contract is model-independent;
+            # batch drivers (the CLI) check it once and pass False here
+            det = _det.analyze()
+
+    return VerifyReport(plans, cov, lr, privacy, collectives, det)

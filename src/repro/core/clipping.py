@@ -47,8 +47,10 @@ def token_clip_coefficients(sq_norms: jax.Array, clip_norm: float,
     ``TokenLayout`` norm map — the per-token analogue of
     ``passes.clip_coefficients`` (which sums group columns; the token
     map has none to sum)."""
-    return jnp.minimum(1.0, clip_norm /
-                       (jnp.sqrt(sq_norms.astype(jnp.float32)) + eps))
+    from repro.core.provenance import mark_clip
+    c = jnp.minimum(1.0, clip_norm /
+                    (jnp.sqrt(sq_norms.astype(jnp.float32)) + eps))
+    return mark_clip(c, clip_norm=clip_norm, eps=eps, granularity="token")
 
 
 def zero_taps(shapes: Dict[str, Tuple[int, ...]], dtype=jnp.float32):

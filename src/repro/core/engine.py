@@ -204,19 +204,21 @@ class Engine:
                consumers: Sequence = (), *, allow: Sequence[str] = (),
                batch_size: Optional[int] = None,
                seq: Optional[int] = None, cfg=None,
-               backend: str = "tpu"):
+               backend: str = "tpu", deep: bool = True):
         """Static verification of a (model, plan) pair — trace-only,
         no compilation, safe on abstract ``ShapeDtypeStruct`` params
-        and batches (DESIGN.md §10).
+        and batches (DESIGN.md §10, §12).
 
-        Runs the pexlint passes against THIS engine's spec and
+        Runs the pexlint passes against THIS engine's spec, mesh, and
         granularity: plan analysis of ``consumers`` (one list or a
         sequence of lists), tap-coverage verification of ``loss_fn``
         (``allow`` declares intentionally-untapped parameter path
         substrings; ``registry.untapped_allowlist`` has the registered
-        archs' tables), and launch validation of every Pallas schedule
+        archs' tables), launch validation of every Pallas schedule
         the trace's tap sites imply (``cfg`` additionally checks the
-        config-derived production geometries). Returns a
+        config-derived production geometries), and — with ``deep`` —
+        the privacy-flow, collective-layout (mesh engines), and
+        determinism passes over full step traces. Returns a
         ``repro.analysis.VerifyReport``; ``.ok`` /
         ``.raise_if_errors()`` gate on it."""
         from repro.analysis.verify import verify as _verify
@@ -224,7 +226,8 @@ class Engine:
                               spec=self.spec,
                               granularity=self.granularity, allow=allow,
                               batch_size=batch_size, seq=seq, cfg=cfg,
-                              backend=backend)
+                              backend=backend, mesh=self.mesh,
+                              data_axes=self.data_axes, deep=deep)
 
     # ------------------------------------------------------------------
     def tap(self, batch_size: int, *, seq: Optional[int] = None) -> Tap:

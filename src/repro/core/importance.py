@@ -74,9 +74,12 @@ def _warn_degenerate(degenerate) -> None:
 def sample(rng: jax.Array, sq_norms: jax.Array, k: int,
            smoothing: float = 0.1, replace: bool = True) -> ImportanceSample:
     """Draw k examples ∝ gradient norm; weights make the estimator unbiased."""
+    from repro.core.provenance import mark_rng, mark_sample
     p = sampling_distribution(sq_norms, smoothing)
     n = p.shape[0]
-    idx = jax.random.choice(rng, n, shape=(k,), replace=replace, p=p)
+    rng = mark_rng(rng, purpose="importance")
+    idx = mark_sample(
+        jax.random.choice(rng, n, shape=(k,), replace=replace, p=p), k=k)
     # unbiased for the batch SUM (paper §2's C = Σ_j L^(j)):
     # E[Σ_k v/(k·p)] = Σ v
     w = 1.0 / (k * p[idx] + 1e-12)

@@ -22,6 +22,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.provenance import mark_clip, mark_noise, mark_rng
 from repro.core.taps import ExampleLayout, PexSpec, TokenLayout
 
 
@@ -91,10 +92,14 @@ def add_grad_noise(grads, noise_std: float, clip_norm: float,
     check_noise_args(noise_std, rng)
     flat, tree = jax.tree_util.tree_flatten(grads)
     keys = jax.random.split(rng, len(flat))
-    flat = [g + noise_std * clip_norm *
+    out = []
+    for i, (g, k) in enumerate(zip(flat, keys)):
+        k = mark_rng(k, purpose="noise", index=i)
+        sample = noise_std * clip_norm * \
             jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
-            for g, k in zip(flat, keys)]
-    return jax.tree_util.tree_unflatten(tree, flat)
+        out.append(g + mark_noise(sample, noise_std=noise_std,
+                                  scale=clip_norm, leaf=i))
+    return jax.tree_util.tree_unflatten(tree, out)
 
 
 def clip_coefficients(sq_norms: jax.Array, clip_norm: float,
@@ -102,7 +107,8 @@ def clip_coefficients(sq_norms: jax.Array, clip_norm: float,
     """c_j = min(1, C / ||g_j||). sq_norms: (B,) or (B,G) (summed)."""
     if sq_norms.ndim == 2:
         sq_norms = jnp.sum(sq_norms, axis=-1)
-    return jnp.minimum(1.0, clip_norm / (jnp.sqrt(sq_norms) + eps))
+    c = jnp.minimum(1.0, clip_norm / (jnp.sqrt(sq_norms) + eps))
+    return mark_clip(c, clip_norm=clip_norm, eps=eps, granularity="example")
 
 
 def clipped_value_and_grads(loss_fn: Callable, params, batch, spec: PexSpec,

@@ -59,6 +59,7 @@ from repro.core import importance as imp
 from repro.core.clipping import token_clip_coefficients
 from repro.core.passes import (add_grad_noise, check_noise_args,
                                clip_coefficients)
+from repro.core.provenance import mark_seed
 
 
 # ---------------------------------------------------------------------------
@@ -327,8 +328,9 @@ def run_fused(plan: Plan, acc_loss: Callable, params, batch,
             return lv, aux
 
         lv, vjp_fn, aux = jax.vjp(f, params, has_aux=True)
-        seed = loss_weights.astype(lv.dtype) if loss_weights is not None \
-            else jnp.ones_like(lv)
+        seed = mark_seed(loss_weights.astype(lv.dtype), kind="weighted") \
+            if loss_weights is not None \
+            else mark_seed(jnp.ones_like(lv), kind="plain")
         (grads,) = vjp_fn(seed)
         return (lv, aux, None, grads, loss_weights, None, None)
 
@@ -352,18 +354,21 @@ def run_fused(plan: Plan, acc_loss: Callable, params, batch,
     grads = None
     if plan.needs_grads and not plan.weighted and loss_weights is None:
         # norms and gradients fold into ONE backward (paper §4/§5)
-        grads, sq = vjp_fn(*seeds(ones))
+        grads, sq = vjp_fn(*seeds(mark_seed(ones, kind="plain")))
     else:
-        _, sq = vjp_fn(*seeds(ones))        # dW chains dead → DCE
+        # dW chains dead → DCE
+        _, sq = vjp_fn(*seeds(mark_seed(ones, kind="norms")))
 
     w, tw, cc = _compose_weights(plan, sq, loss_weights)
     if plan.needs_grads and grads is None:
         if tw is not None:
             tok_seed = tw if w is None else tw * w[:, None]
             grads, _ = vjp_fn((jnp.zeros_like(lv),
-                               tok_seed.astype(tok.dtype)))
+                               mark_seed(tok_seed.astype(tok.dtype),
+                                         kind="weighted")))
         else:
-            seed = ones if w is None else w.astype(lv.dtype)
+            seed = mark_seed(ones, kind="plain") if w is None \
+                else mark_seed(w.astype(lv.dtype), kind="weighted")
             grads, _ = vjp_fn(*seeds(seed))
     return lv, aux, sq, grads, w, tw, cc
 

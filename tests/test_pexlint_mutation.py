@@ -1,19 +1,45 @@
-"""Mutation corpus for the tap-coverage verifier: programmatically
-delete one tap site at a time — route the k-th instrumented op of the
-trace through its plain counterpart — across all four model families;
-pexlint must flag EVERY mutant (100% detection) while the clean traces
-stay green (zero false positives, test_pexlint.py).
+"""Mutation corpus for the pexlint passes: break one privacy-critical
+piece of the pipeline at a time and prove the static passes flag EVERY
+mutant (100% detection) while the clean traces stay green (zero false
+positives — test_pexlint.py and the cross-pass sweep below).
 
-A deleted site sends the weight's gradient down the ordinary autodiff
-path, so its taint reaches the loss and the leaf classifies as
-untapped-but-trained; a site inside a scan body covers all layers at
-once (the body traces once), which only makes the mutant bigger, not
-harder to see.
+Coverage mutants programmatically delete one tap site at a time —
+route the k-th instrumented op of the trace through its plain
+counterpart — across all four model families. A deleted site sends the
+weight's gradient down the ordinary autodiff path, so its taint
+reaches the loss and the leaf classifies as untapped-but-trained; a
+site inside a scan body covers all layers at once (the body traces
+once), which only makes the mutant bigger, not harder to see.
+
+Flow mutants (DESIGN.md §12) monkeypatch the plan layer's seams —
+``run_fused`` / ``add_grad_noise`` / ``_compose_weights`` are
+module-level names both ``plan.execute`` and ``dist.pex.plan_step``
+resolve at call time — to build the classic DP-pipeline bugs:
+
+  * noise added per shard inside the region (before the psum);
+  * noise applied twice to the reduced gradient;
+  * clip coefficients computed but never folded into the backward seed;
+  * one PRNG key shared by every leaf's noise draw;
+  * a per-example output psum'd over the data axis;
+  * the data pipeline's seed ignoring the step cursor.
 """
-import jax.numpy as jnp
-import pytest
+import dataclasses
+import inspect
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import pex
+from repro.analysis import _jaxpr as _J
+from repro.analysis import collectives as col
 from repro.analysis import coverage as cov
+from repro.analysis import determinism as det
+from repro.analysis import privacy as priv
+from repro.core import plan as plan_mod
+from repro.core.provenance import mark_noise, mark_rng
 from repro.core.taps import Tap
 from repro.models import registry
 
@@ -118,3 +144,148 @@ def test_mutant_errors_name_the_right_leaves():
     clean_by_path = {str(l.path): l.status for l in clean.leaves}
     for leaf in rep.errors:
         assert clean_by_path[str(leaf.path)] == cov.TAPPED
+
+
+# ---------------------------------------------------------------------------
+# flow mutants — privacy / collectives / determinism (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+KEY = jax.random.PRNGKey(0)
+DP_CONSUMERS = [pex.Clip(1.0), pex.Noise(0.1, KEY)]
+
+
+def _one_device_mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+def _dp_trace(mesh=None):
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    return _J.trace_step(loss_fn, params, batch, DP_CONSUMERS,
+                         mesh=mesh, batch_size=3)
+
+
+def _codes(report):
+    return {f.code for f in report.findings}
+
+
+def test_mutant_noise_before_psum(monkeypatch):
+    """Noise applied per shard inside the region — each shard's draw
+    adds up, inflating the variance by the shard count."""
+    real_fused = plan_mod.run_fused
+    real_noise = plan_mod.add_grad_noise
+
+    def in_region(sub, acc_loss, p, b, bs, layout, *, loss_weights=None):
+        lv, aux, sq, grads, w, tw, cc = real_fused(
+            sub, acc_loss, p, b, bs, layout, loss_weights=loss_weights)
+        if sub.noise is not None and grads is not None:
+            scale = sub.noise.scale if sub.noise.scale is not None \
+                else sub.clip.clip_norm
+            grads = real_noise(grads, sub.noise.noise_std, scale,
+                               sub.noise.rng)
+        return lv, aux, sq, grads, w, tw, cc
+
+    monkeypatch.setattr(plan_mod, "run_fused", in_region)
+    monkeypatch.setattr(plan_mod, "add_grad_noise",
+                        lambda g, *a, **kw: g)
+    rep = priv.analyze_trace(_dp_trace(mesh=_one_device_mesh()))
+    assert not rep.ok
+    assert "noise-before-psum" in _codes(rep)
+
+
+def test_mutant_double_noise(monkeypatch):
+    """The noise step applied twice to the reduced gradient — double
+    the privacy budget's variance, silently."""
+    real_noise = plan_mod.add_grad_noise
+
+    def twice(grads, noise_std, clip_norm, rng):
+        once = real_noise(grads, noise_std, clip_norm, rng)
+        return real_noise(once, noise_std, clip_norm,
+                          jax.random.fold_in(rng, 1))
+
+    monkeypatch.setattr(plan_mod, "add_grad_noise", twice)
+    rep = priv.analyze_trace(_dp_trace())
+    assert not rep.ok
+    assert "double-noise" in _codes(rep)
+
+
+def test_mutant_unclipped_leaf(monkeypatch):
+    """Clip coefficients computed (and returned!) but never folded
+    into the backward seed — the result LOOKS clipped while every
+    gradient is the raw sum."""
+    real_compose = plan_mod._compose_weights
+
+    def drop_fold(plan, sq_norms, loss_weights, extra_weights=None):
+        _, tw, cc = real_compose(plan, sq_norms, loss_weights,
+                                 extra_weights)
+        unfolded = real_compose(
+            dataclasses.replace(plan, clip=None), sq_norms,
+            loss_weights, extra_weights)[0]
+        return unfolded, tw, cc
+
+    monkeypatch.setattr(plan_mod, "_compose_weights", drop_fold)
+    rep = priv.analyze_trace(_dp_trace())
+    assert not rep.ok
+    assert "unclipped-leaf" in _codes(rep)
+
+
+def test_mutant_reused_key(monkeypatch):
+    """Every leaf's noise drawn from the SAME key — perfectly
+    correlated noise across leaves, not independent Gaussians."""
+    def shared_key(grads, noise_std, clip_norm, rng):
+        flat, tree = jax.tree_util.tree_flatten(grads)
+        out = []
+        for i, g in enumerate(flat):
+            k = mark_rng(rng, purpose="noise", index=i)
+            sample = noise_std * clip_norm * \
+                jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+            out.append(g + mark_noise(sample, noise_std=noise_std,
+                                      scale=clip_norm, leaf=i))
+        return jax.tree_util.tree_unflatten(tree, out)
+
+    monkeypatch.setattr(plan_mod, "add_grad_noise", shared_key)
+    rep = priv.analyze_trace(_dp_trace())
+    assert not rep.ok
+    assert "key-reuse" in _codes(rep)
+
+
+def test_mutant_per_example_psum(monkeypatch):
+    """A per-example output reduced over the data axis — every shard's
+    loss vector silently becomes the cross-shard sum."""
+    real_fused = plan_mod.run_fused
+
+    def psum_lv(sub, acc_loss, p, b, bs, layout, *, loss_weights=None):
+        lv, aux, sq, grads, w, tw, cc = real_fused(
+            sub, acc_loss, p, b, bs, layout, loss_weights=loss_weights)
+        return jax.lax.psum(lv, "data"), aux, sq, grads, w, tw, cc
+
+    monkeypatch.setattr(plan_mod, "run_fused", psum_lv)
+    rep = col.analyze_trace(_dp_trace(mesh=_one_device_mesh()))
+    assert not rep.ok
+    assert "per-example-psum" in _codes(rep)
+
+
+def test_mutant_seed_drift():
+    """The real pipeline source with ``step`` dropped from the seed
+    tuple — every step replays step-0 data after a restore."""
+    import repro.data.pipeline as pipeline
+    src = inspect.getsource(pipeline)
+    assert "(cfg.seed, step, self.host_id, 0xDA7A)" in src
+    mutated = src.replace("(cfg.seed, step, self.host_id, 0xDA7A)",
+                          "(cfg.seed, self.host_id, 0xDA7A)")
+    findings = det.check_source(mutated, "data/pipeline.py")
+    assert "seed-ignores-step" in {f.code for f in findings}
+    # and the unmutated source is clean
+    assert not det.check_source(src, "data/pipeline.py")
+
+
+# ---------------------------------------------------------------------------
+# cross-pass clean sweep — zero false positives on every registered
+# arch × granularity × consumer set, through every pass at once
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_id", sorted(registry.ARCHS))
+def test_clean_sweep_all_passes(arch_id):
+    from repro.analysis.__main__ import lint_arch
+    findings = lint_arch(arch_id, backend="tpu", production=True,
+                         key=KEY, mesh=_one_device_mesh(), deep=True)
+    assert not findings, "\n".join(f.render() for f in findings)
