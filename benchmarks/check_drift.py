@@ -24,12 +24,18 @@ with the CURRENT code and fails on drift:
     dense rows the picked method's recorded time must be within
     tolerance of the measured best (the model must still pick a
     winner, not just the same name);
-  * rows marked ``interpret_mode`` or ``upper_bound`` (and the
-    ``plan.*``/``v2.*`` flop telemetry) are measurements, not model
-    outputs — skipped.
+  * ``plan.fused_step`` / ``plan.sequential`` / ``v2.engine_step`` /
+    ``v2.v1_step`` ``#derived = "flops=N"`` — XLA ``cost_analysis``
+    flop telemetry, recomputed by the *static* pexcost walker
+    (``analysis.traffic.program_flops``) over abstract re-traces of
+    the same step constructions; > tolerance relative deviation fails
+    — the cross-validation that keeps the CostReport numbers honest
+    against measured baselines;
+  * rows marked ``interpret_mode`` or ``upper_bound`` are
+    measurements, not model outputs — skipped.
 
-Pure Python + the cost-model functions — no kernels run, no jit; CI
-runs it in the lint job.
+Pure Python + the cost-model functions + abstract jax traces — no
+kernels run, no XLA compilation; CI runs it in the lint job.
 """
 from __future__ import annotations
 
@@ -81,6 +87,90 @@ def newest_bench(root: str) -> str:
     return max(paths, key=pr)
 
 
+#: bench flop-telemetry rows the static pexcost walker re-predicts
+_PEXCOST_ROWS = ("plan.fused_step", "plan.sequential", "v2.engine_step",
+                 "v2.v1_step")
+
+
+def _pexcost_programs(b: int, s: int) -> Dict[str, object]:
+    """Abstract re-traces of the bench_plan/bench_v2_facade step
+    constructions the flop-telemetry rows measured (trace-only —
+    ``eval_shape`` params, ``train_batch_specs`` batches)."""
+    import jax
+    from repro import pex
+    from repro.configs.common import ShapeSpec
+    from repro.core import passes
+    from repro.core.engine import Engine
+    from repro.core.taps import PexSpec, Tap
+    from repro.models import registry
+    from repro.nn.param import unbox
+
+    aspec = registry.get("llama3.2-1b")
+    cfg = aspec.smoke()
+    mod = registry.family_module(aspec)
+    params = jax.eval_shape(
+        lambda: unbox(mod.init(jax.random.PRNGKey(0), cfg)))
+    batch = registry.train_batch_specs(aspec, cfg,
+                                       ShapeSpec("drift", "train", s, b))
+    spec = PexSpec(enabled=True, method="gram")
+    loss_fn = registry.make_loss_fn_v2(aspec, cfg)
+    eng = Engine(spec, clip_norm=1.0)
+    key = jax.random.PRNGKey(1)
+
+    def fused(p, bt):
+        r = eng.step(loss_fn, p, bt, [pex.Clip(1.0), pex.Noise(0.1, key),
+                                      pex.GNS()])
+        return r.grads, r.sq_norms, r.gns
+
+    def sequential(p, bt):
+        r1 = eng.clipped_step(loss_fn, p, bt, rng=key, noise_std=0.1)
+        r2 = eng.value_grads_and_norms(loss_fn, p, bt)
+        return r1.grads, r1.sq_norms, \
+            pex.gradient_noise_scale(r2.sq_norms, r2.grads)
+
+    def acc_loss(p, acc, bt):
+        tap = Tap(spec, acc=acc)
+        lv, aux = loss_fn(p, bt, tap)
+        return lv, tap.carry(), aux
+
+    def step_v1(p, bt):
+        r = passes.value_grads_and_norms(acc_loss, p, bt, spec, b)
+        return r.loss, r.sq_norms, r.grads
+
+    def step_v2(p, bt):
+        r = eng.value_grads_and_norms(loss_fn, p, bt)
+        return r.loss, r.sq_norms, r.grads
+
+    fns = {"plan.fused_step": fused, "plan.sequential": sequential,
+           "v2.engine_step": step_v2, "v2.v1_step": step_v1}
+    return {name: jax.make_jaxpr(fn)(params, batch)
+            for name, fn in fns.items()}
+
+
+def _check_pexcost(rows: Dict[str, Tuple[str, Dict[str, str], float]],
+                   tolerance: float) -> List[str]:
+    """Static flop predictions vs the measured telemetry rows."""
+    if not rows:
+        return []
+    from repro.analysis.traffic import program_flops
+
+    problems: List[str] = []
+    programs: Dict[Tuple[int, int], Dict[str, object]] = {}
+    for name, (base, cfg, old) in sorted(rows.items()):
+        shape = (int(cfg.get("b", 4)), int(cfg.get("s", 16)))
+        if shape not in programs:
+            programs[shape] = _pexcost_programs(*shape)
+        closed = programs[shape].get(base)
+        if closed is None:
+            continue
+        new, _ = program_flops(closed)
+        if _rel(new, old) > tolerance:
+            problems.append(
+                f"{name}: pexcost predicts {new:.4g} flops vs measured "
+                f"{old:.4g} ({_rel(new, old):.0%} > {tolerance:.0%})")
+    return problems
+
+
 def check(bench: Dict, tolerance: float = 0.25) -> List[str]:
     """All drift errors of one baseline against the current model."""
     from repro.core import norms
@@ -89,10 +179,15 @@ def check(bench: Dict, tolerance: float = 0.25) -> List[str]:
     derived = {k[: -len("#derived")]: v for k, v in bench.items()
                if k.endswith("#derived") and isinstance(v, str)}
 
+    pexcost_rows: Dict[str, Tuple[str, Dict[str, str], float]] = {}
     for name, note in sorted(derived.items()):
         if "interpret_mode" in note or note == "upper_bound":
             continue
         base, cfg = _parse(name)
+
+        if base in _PEXCOST_ROWS and note.startswith("flops="):
+            pexcost_rows[name] = (base, cfg, float(note[len("flops="):]))
+            continue
 
         if base.endswith(".crossover") and "xla_s=" in note:
             p_in, p_out = _p(cfg)
@@ -133,6 +228,7 @@ def check(bench: Dict, tolerance: float = 0.25) -> List[str]:
             problems.extend(
                 _measured_best(bench, base, cfg, recorded, tolerance))
 
+    problems.extend(_check_pexcost(pexcost_rows, tolerance))
     return problems
 
 

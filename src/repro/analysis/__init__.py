@@ -21,7 +21,11 @@ Six passes, none of which executes or compiles model code:
     data axes, replicated outputs psum'd exactly once (plus the
     declared 2-D DP×TP schedule);
   * ``determinism`` — AST verification that the data pipeline and the
-    soak replay path are pure in (seed, step).
+    soak replay path are pure in (seed, step);
+  * ``traffic`` + ``cost`` ("pexcost") — HBM-traffic attribution and
+    analytic step-time prediction over a full traced *training* step
+    (plan execution plus the optimizer apply), with the
+    ``COST_BASELINE.json`` regression gate.
 
 ``verify.verify`` (surfaced as ``Engine.verify``) composes them;
 ``python -m repro.analysis`` lints every registered model. The flow
@@ -31,6 +35,8 @@ trace front end) and report ``findings.Finding`` records, which
 """
 from repro.analysis.collectives import (CollectivesReport, ScheduleEntry,
                                         expected_schedule)
+from repro.analysis.cost import (CostReport, baseline_payload, build_cost,
+                                 check_baseline)
 from repro.analysis.coverage import (AnalysisError, CoverageReport,
                                      LeafReport, TapSite, trace_coverage)
 from repro.analysis.determinism import (DeterminismReport, check_source)
@@ -39,6 +45,8 @@ from repro.analysis.launch import (LaunchReport, contracts_for_sites,
                                    production_cases, validate_contracts,
                                    validate_sites)
 from repro.analysis.privacy import PrivacyReport
+from repro.analysis.traffic import (TrafficReport, analyze_trace,
+                                    check_train_step, program_flops)
 from repro.analysis.verify import VerifyReport, verify
 
 __all__ = [
@@ -49,4 +57,7 @@ __all__ = [
     "Finding", "ERROR", "WARNING", "INFO",
     "PrivacyReport", "CollectivesReport", "ScheduleEntry",
     "expected_schedule", "DeterminismReport", "check_source",
+    "TrafficReport", "analyze_trace", "check_train_step",
+    "program_flops", "CostReport", "build_cost", "check_baseline",
+    "baseline_payload",
 ]

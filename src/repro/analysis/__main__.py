@@ -68,8 +68,10 @@ class _TraceOnlyGuard:
 
 
 def lint_arch(arch_id: str, *, backend: str, production: bool,
-              key, mesh=None, deep: bool = True) -> List:
-    """All findings for one arch across every lint combination."""
+              key, mesh=None, deep: bool = True, cost: bool = False,
+              profile=None):
+    """(findings, cost reports) for one arch across every lint
+    combination."""
     import jax
     from repro.analysis import findings as F
     from repro.analysis.verify import verify as _verify
@@ -88,6 +90,7 @@ def lint_arch(arch_id: str, *, backend: str, production: bool,
     allow = registry.untapped_allowlist(arch_id)
 
     found: List = []
+    costs: List = []
     for gran in ("example", "token"):
         try:
             rep = _verify(
@@ -96,13 +99,15 @@ def lint_arch(arch_id: str, *, backend: str, production: bool,
                 cfg=aspec.full(), backend=backend,
                 production=production and gran == "example",
                 mesh=mesh if gran == "example" else None,
-                deep=deep, determinism=False)
+                deep=deep, determinism=False,
+                cost=cost, profile=profile, model=arch_id)
         except Exception as e:  # a trace failure is itself a lint error
             found.append(F.Finding(
                 "trace", F.ERROR, "trace-failure",
                 f"{type(e).__name__}: {e}", model=arch_id,
                 granularity=gran))
             continue
+        costs.extend(rep.cost)
         per_gran: List = [
             F.Finding("coverage", F.ERROR, "untapped-leaf",
                       f"{l.path} is {l.status}", leaf=str(l.path))
@@ -115,7 +120,47 @@ def lint_arch(arch_id: str, *, backend: str, production: bool,
                      for a in rep.coverage.stale_allow]
         per_gran += list(rep.findings)
         found.extend(F.tag(per_gran, model=arch_id, granularity=gran))
-    return found
+    return found, costs
+
+
+def _default_baseline() -> str:
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, "COST_BASELINE.json")
+
+
+def _cost_gate(args, costs, say) -> List:
+    """Baseline-gate findings for this run's CostReports; also writes
+    the baseline / artifact files when asked."""
+    import os
+    from repro.analysis import cost as C
+
+    path = args.cost_baseline or _default_baseline()
+    if args.cost_report:
+        with open(args.cost_report, "w") as f:
+            json.dump({"profile": costs[0].profile if costs else None,
+                       "reports": [c.to_json() for c in costs]}, f,
+                      indent=2, sort_keys=True)
+        say(f"pexcost: wrote {len(costs)} CostReport(s) to "
+            f"{args.cost_report}")
+    if args.write_cost_baseline:
+        with open(path, "w") as f:
+            json.dump(C.baseline_payload(costs), f, indent=2)
+            f.write("\n")
+        say(f"pexcost: wrote baseline {path}")
+        return []
+    if not os.path.exists(path):
+        from repro.analysis import findings as F
+        return [F.Finding(C.PASS, F.WARNING, "cost-baseline-missing",
+                          f"no baseline at {path}; create it with "
+                          f"--write-cost-baseline")]
+    with open(path) as f:
+        baseline = json.load(f)
+    out = C.check_baseline(costs, baseline, full_matrix=args.all_models)
+    say(f"pexcost: {len(costs)} report(s) vs {os.path.basename(path)}, "
+        f"{sum(f.severity == 'error' for f in out)} regression(s)")
+    return out
 
 
 def registry_findings() -> List:
@@ -159,6 +204,21 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="coverage/plan/launch only — skip the flow "
                          "passes (CI lint-fast)")
+    ap.add_argument("--cost", action="store_true",
+                    help="run the pexcost traffic/cost passes over a "
+                         "full traced training step per consumer set "
+                         "(independent of --fast)")
+    ap.add_argument("--profile", default=None,
+                    help="hardware profile for CostReports "
+                         "(roofline.constants.PROFILES; default tpu-v5e)")
+    ap.add_argument("--cost-baseline", default=None,
+                    help="committed prediction baseline to gate against "
+                         "(default: COST_BASELINE.json in the repo root)")
+    ap.add_argument("--write-cost-baseline", action="store_true",
+                    help="rewrite the baseline from this run instead of "
+                         "gating against it")
+    ap.add_argument("--cost-report", default=None,
+                    help="write the full CostReport JSON artifact here")
     ap.add_argument("--backend", default="tpu",
                     help="launch-contract budget profile (default: tpu)")
     ap.add_argument("--no-production", action="store_true",
@@ -185,6 +245,7 @@ def main(argv=None) -> int:
 
     t0 = time.time()
     findings: List = list(registry_findings())
+    costs: List = []
     guard = _TraceOnlyGuard() if not args.no_trace_guard else None
     try:
         if guard is not None:
@@ -194,16 +255,21 @@ def main(argv=None) -> int:
             findings.extend(det.analyze().findings)
         for aid in arch_ids:
             t1 = time.time()
-            fs = lint_arch(aid, backend=args.backend,
-                           production=not args.no_production, key=key,
-                           mesh=mesh, deep=not args.fast)
+            fs, cs = lint_arch(aid, backend=args.backend,
+                               production=not args.no_production, key=key,
+                               mesh=mesh, deep=not args.fast,
+                               cost=args.cost, profile=args.profile)
             findings.extend(fs)
+            costs.extend(cs)
             n_e = sum(f.severity == "error" for f in fs)
             status = "ok" if not n_e else f"{n_e} ERROR"
             say(f"  {aid:24s} {status:12s} {time.time() - t1:5.1f}s")
     finally:
         if guard is not None:
             guard.__exit__(None, None, None)
+
+    if args.cost:
+        findings.extend(_cost_gate(args, costs, say))
 
     n_err = sum(f.severity == "error" for f in findings)
     n_warn = sum(f.severity == "warning" for f in findings)
@@ -212,11 +278,18 @@ def main(argv=None) -> int:
     say(f"pexlint: {len(arch_ids)} arch(s), {n_err} error(s), "
         f"{n_warn} warning(s), {time.time() - t0:.1f}s")
     if args.json:
-        print(json.dumps({
+        payload = {
             "archs": arch_ids, "errors": n_err, "warnings": n_warn,
             "elapsed_s": round(time.time() - t0, 2),
             "findings": [f.to_json() for f in findings],
-        }, indent=2))
+        }
+        if args.cost:
+            payload["cost"] = [c.to_json() for c in costs]
+            payload["plans"] = [
+                {"model": c.model, "granularity": c.granularity,
+                 "plan": c.plan_desc, "flops_hlo": c.flops_hlo,
+                 "hbm_bytes": c.hbm_bytes} for c in costs]
+        print(json.dumps(payload, indent=2))
     return resolve_exit(n_err, n_warn, args.fail_on_error,
                         args.fail_on_warn)
 

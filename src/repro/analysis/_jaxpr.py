@@ -252,6 +252,130 @@ def _label(path) -> Tuple[str, str]:
     return str(head), jax.tree_util.keystr(path[1:])
 
 
+@dataclasses.dataclass(frozen=True)
+class TrainTrace:
+    """One traced *training* step — ``Engine.step`` plus the optimizer
+    apply — with the index maps the traffic/cost passes anchor on
+    (DESIGN.md §13). ``ref_closed`` is the plain forward
+    (``consumers=[]``) of the same model/batch, the duplicate-forward
+    baseline."""
+    closed: Any                         # ClosedJaxpr of step + apply
+    plan: plan_mod.Plan
+    granularity: str
+    batch_size: int
+    seq: Optional[int]
+    optimizer: str                      # 'adamw' | 'adafactor' | 'none'
+    global_clip: Optional[float]        # optimizer global-norm clip
+    meshed: bool
+    out_labels: Tuple[Tuple[str, str], ...]   # (field, leaf path) per outvar
+    param_labels: Tuple[str, ...]       # leaf path per parameter position
+    param_positions: Tuple[int, ...]    # invar indices of the param leaves
+    opt_positions: Tuple[int, ...]      # invar indices of optimizer state
+    batch_positions: Tuple[int, ...]
+    rng_positions: Tuple[int, ...]
+    ref_closed: Optional[Any] = None    # plain-forward ClosedJaxpr
+
+    @property
+    def jaxpr(self):
+        return self.closed.jaxpr
+
+
+def trace_train_step(loss_fn: Callable, params, batch,
+                     consumers: Sequence, *, optimizer: str = "adamw",
+                     opt_cfg=None, spec=None, granularity: str = "example",
+                     mesh=None, data_axes: Sequence[str] = ("data",),
+                     batch_size: Optional[int] = None,
+                     seq: Optional[int] = None, loss_weights=None,
+                     with_reference: bool = True) -> TrainTrace:
+    """Trace one whole training step on abstract inputs: the plan
+    execution (``Engine.step``, local or mesh path) *and* the optimizer
+    apply — clip-scale, moment updates, parameter write — which no
+    other pass covers. Gradient leaves cross the plan/apply boundary
+    through the ``grad_leaf`` markers ``plan.execute`` plants, so the
+    traffic pass can attribute every downstream HBM pass to a named
+    parameter leaf. Optimizer state enters as explicit invars
+    (abstract, from ``eval_shape`` over ``init``)."""
+    from repro.core.engine import Engine, infer_batch_size
+
+    eng = Engine(spec, mesh=mesh, data_axes=data_axes,
+                 granularity=granularity)
+    plan = plan_mod.analyze(consumers, engine_granularity=granularity)
+    bs = batch_size if batch_size is not None else infer_batch_size(batch)
+
+    keys = [c.rng for c in consumers
+            if isinstance(c, _KEYED) and c.rng is not None]
+
+    if optimizer == "adamw":
+        from repro.optim import adamw as opt_mod
+        cfg = opt_cfg if opt_cfg is not None else opt_mod.AdamWConfig()
+        global_clip = cfg.global_clip
+    elif optimizer == "adafactor":
+        from repro.optim import adafactor as opt_mod
+        cfg = opt_cfg if opt_cfg is not None else opt_mod.AdafactorConfig()
+        global_clip = getattr(cfg, "global_clip", None)
+    elif optimizer == "none":
+        opt_mod = cfg = global_clip = None
+    else:
+        raise ValueError(f"unknown optimizer {optimizer!r}; expected "
+                         f"'adamw', 'adafactor', or 'none'")
+
+    apply = opt_mod is not None and plan.needs_grads
+    opt_state = jax.eval_shape(opt_mod.init, params) if apply else ()
+
+    def run(p, opt, b, *ks):
+        it = iter(ks)
+        cs = [dataclasses.replace(c, rng=next(it))
+              if isinstance(c, _KEYED) and c.rng is not None else c
+              for c in consumers]
+        r = eng.step(loss_fn, p, b, cs, batch_size=bs, seq=seq,
+                     loss_weights=loss_weights)
+        out = {"loss_vec": r.loss_vec}
+        if r.sq_norms is not None:
+            out["sq_norms"] = r.sq_norms
+        if r.gns is not None:
+            out["gns"] = r.gns
+        if r.grads is not None and apply:
+            new_p, new_opt = opt_mod.update(cfg, opt, p, r.grads)
+            out["new_params"] = new_p
+            out["opt_state"] = new_opt
+        elif r.grads is not None:
+            out["grads"] = r.grads
+        return out
+
+    closed, out_shape = jax.make_jaxpr(run, return_shape=True)(
+        params, opt_state, batch, *keys)
+    flat_out, _ = jax.tree_util.tree_flatten_with_path(out_shape)
+    labels = tuple(_label(p) for p, _ in flat_out)
+
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(params)
+    param_labels = tuple(jax.tree_util.keystr(p) for p, _ in flat_p)
+    n_p = len(flat_p)
+    n_o = len(jax.tree_util.tree_leaves(opt_state))
+    n_b = len(jax.tree_util.tree_leaves(batch))
+
+    ref = None
+    if with_reference:
+        # the duplicate-forward baseline must NOT share the plan path —
+        # a mutant that doubles the plan's forward would double the
+        # reference too and cancel out. Trace the raw loss instead.
+        from repro.core.taps import NULL
+        ref = jax.make_jaxpr(
+            lambda p, b: loss_fn(p, b, NULL)[0])(params, batch)
+
+    return TrainTrace(
+        closed=closed, plan=plan, granularity=granularity, batch_size=bs,
+        seq=seq, optimizer=optimizer if apply else "none",
+        global_clip=global_clip if apply else None,
+        meshed=mesh is not None, out_labels=labels,
+        param_labels=param_labels,
+        param_positions=tuple(range(n_p)),
+        opt_positions=tuple(range(n_p, n_p + n_o)),
+        batch_positions=tuple(range(n_p + n_o, n_p + n_o + n_b)),
+        rng_positions=tuple(range(n_p + n_o + n_b,
+                                  n_p + n_o + n_b + len(keys))),
+        ref_closed=ref)
+
+
 def trace_step(loss_fn: Callable, params, batch, consumers: Sequence, *,
                spec=None, granularity: str = "example", mesh=None,
                data_axes: Sequence[str] = ("data",),

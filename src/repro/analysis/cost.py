@@ -1,0 +1,216 @@
+"""pexcost — analytic step-time prediction from the traffic pass
+(DESIGN.md §13).
+
+``analysis.traffic`` attributes the traced training step's flops and
+materialized HBM bytes; this module divides them by a named
+:class:`~repro.roofline.constants.HardwareProfile` to produce a
+``CostReport`` with compute / memory / collective time terms — a
+"static bench" that runs on CPU in seconds. Pallas launches the step
+would issue enter through their ``kernels/contract.py``
+LaunchContracts (per-launch ``flops`` / ``hbm_bytes()``), collectives
+through the traffic pass's psum operand bytes scaled by the ring
+all-reduce wire factor 2·(chips−1)/chips.
+
+Two gates consume the reports:
+
+  * ``check_baseline`` — the CI regression gate against a committed
+    ``COST_BASELINE.json``: a plan whose predicted flops or bytes grow
+    beyond tolerance over the baseline is an ERROR
+    (``cost-regression``); shrinkage beyond tolerance and key churn
+    are WARNINGs (re-baseline, don't fail).
+  * ``benchmarks/check_drift.py`` — cross-validation of the flop
+    predictions against the measured ``#derived`` rows of the newest
+    ``BENCH_PR*.json`` (within 25%).
+
+Everything is static: the numbers are predictions from traced jaxprs
+and public peak specs, not measurements — the report names the profile
+so the denominators are never implicit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import ERROR, WARNING, Finding
+from repro.analysis.traffic import TrafficReport
+from repro.roofline.constants import DEFAULT_PROFILE, get_profile
+
+PASS = "cost"
+
+#: baseline metrics the regression gate compares (prediction keys of
+#: one CostReport row; times are derived, so gating on the raw
+#: flop/byte terms keeps the gate profile-independent)
+BASELINE_METRICS = ("flops_hlo", "hbm_bytes", "coll_bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostReport:
+    """Predicted step budget of one (model × granularity × plan) on one
+    named hardware profile."""
+    model: str
+    granularity: str
+    optimizer: str
+    plan_desc: str
+    profile: str                # HardwareProfile name — the denominators
+    chips: int
+    flops: float                # trips-weighted static flops
+    flops_hlo: float            # loop bodies once — BENCH/cost_analysis scale
+    hbm_bytes: float            # fusion-aware materialized traffic
+    coll_bytes: float           # psum operand bytes (per step)
+    kernel_flops: float         # Pallas LaunchContract work
+    kernel_hbm_bytes: float     # Pallas LaunchContract panel traffic
+    t_compute: float            # seconds
+    t_memory: float
+    t_collective: float
+    t_step: float               # max of the three — overlap model
+    bottleneck: str             # 'compute' | 'memory' | 'collective'
+    phase_bytes: Tuple[Tuple[str, float], ...]
+    n_streams: int
+    expected_streams: int
+
+    def summary(self) -> str:
+        return (f"cost[{self.model}/{self.granularity}] on {self.profile}"
+                f"×{self.chips}: {self.t_step * 1e6:.1f}us "
+                f"({self.bottleneck}-bound; compute "
+                f"{self.t_compute * 1e6:.1f}us, memory "
+                f"{self.t_memory * 1e6:.1f}us, collective "
+                f"{self.t_collective * 1e6:.1f}us) — "
+                f"{self.flops_hlo:.3g} flops, "
+                f"{self.hbm_bytes / 1e6:.1f} MB, "
+                f"streams {self.n_streams}/{self.expected_streams}")
+
+    def to_json(self) -> dict:
+        return {
+            "model": self.model, "granularity": self.granularity,
+            "optimizer": self.optimizer, "plan": self.plan_desc,
+            "profile": self.profile, "chips": self.chips,
+            "flops": self.flops, "flops_hlo": self.flops_hlo,
+            "hbm_bytes": self.hbm_bytes, "coll_bytes": self.coll_bytes,
+            "kernel_flops": self.kernel_flops,
+            "kernel_hbm_bytes": self.kernel_hbm_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "t_step_s": self.t_step,
+            "bottleneck": self.bottleneck,
+            "phase_bytes": dict(self.phase_bytes),
+            "n_streams": self.n_streams,
+            "expected_streams": self.expected_streams,
+        }
+
+
+def build_cost(traffic: TrafficReport, *, model: str = "?",
+               profile: str = DEFAULT_PROFILE, chips: int = 1,
+               contracts: Sequence = ()) -> CostReport:
+    """Compose one TrafficReport (+ the Pallas LaunchContracts the step
+    would issue) into a CostReport on a named hardware profile.
+
+    The time model is the roofline overlap bound: each term assumes
+    perfect overlap with the others, ``t_step`` is their max. The
+    collective term uses the ring all-reduce wire volume —
+    ``coll_bytes · 2(chips−1)/chips`` per chip over one ICI link —
+    which is 0 on a single chip.
+    """
+    hw = get_profile(profile)
+    chips = max(int(chips), 1)
+    k_flops = float(sum(getattr(c, "flops", 0.0) for c in contracts))
+    k_bytes = float(sum(c.hbm_bytes() for c in contracts
+                        if hasattr(c, "hbm_bytes")))
+
+    # per-chip shares: the traced step is the whole batch; data
+    # parallelism divides flops and local HBM traffic evenly
+    t_compute = (traffic.flops_hlo + k_flops) / (hw.peak_flops_bf16 * chips)
+    t_memory = (traffic.hbm_bytes + k_bytes) / (hw.hbm_bw * chips)
+    wire = traffic.coll_bytes * 2.0 * (chips - 1) / chips
+    t_collective = wire / hw.ici_bw
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+
+    return CostReport(
+        model=model, granularity=traffic.granularity,
+        optimizer=traffic.optimizer, plan_desc=traffic.plan_desc,
+        profile=hw.name, chips=chips,
+        flops=traffic.flops, flops_hlo=traffic.flops_hlo,
+        hbm_bytes=traffic.hbm_bytes, coll_bytes=traffic.coll_bytes,
+        kernel_flops=k_flops, kernel_hbm_bytes=k_bytes,
+        t_compute=t_compute, t_memory=t_memory,
+        t_collective=t_collective, t_step=max(terms.values()),
+        bottleneck=bottleneck,
+        phase_bytes=traffic.phase_bytes,
+        n_streams=traffic.n_streams,
+        expected_streams=traffic.expected_streams)
+
+
+# ---------------------------------------------------------------------------
+# baseline gate
+# ---------------------------------------------------------------------------
+
+def baseline_key(report: CostReport) -> str:
+    """One baseline row per (model × granularity × plan shape) — the
+    plan description keys distinct consumer sets apart so a norms-only
+    pass is never compared against the DP step's budget."""
+    return f"{report.model}/{report.granularity}/{report.plan_desc}"
+
+
+def baseline_payload(reports: Iterable[CostReport]) -> Dict[str, dict]:
+    """The committed-baseline shape: predictions only (no times — the
+    gate must not depend on which profile CI picked)."""
+    out: Dict[str, dict] = {}
+    for r in reports:
+        out[baseline_key(r)] = {m: getattr(r, m) for m in BASELINE_METRICS}
+    return dict(sorted(out.items()))
+
+
+def check_baseline(reports: Sequence[CostReport],
+                   baseline: Dict[str, dict], *,
+                   tolerance: float = 0.25,
+                   full_matrix: bool = True) -> List[Finding]:
+    """Regression-gate findings: growth beyond tolerance is an ERROR,
+    shrinkage beyond tolerance and key churn are WARNINGs (stale
+    baseline — refresh with ``--write-cost-baseline``). Key churn is
+    only judged under ``full_matrix`` — a single-arch run legitimately
+    leaves every other arch's baseline rows unmatched."""
+    findings: List[Finding] = []
+    seen = set()
+    for r in reports:
+        key = baseline_key(r)
+        seen.add(key)
+        old = baseline.get(key)
+        if old is None:
+            findings.append(Finding(
+                PASS, WARNING, "cost-baseline-missing",
+                f"no committed baseline for {key!r}; add it with "
+                f"--write-cost-baseline", model=r.model,
+                granularity=r.granularity))
+            continue
+        for metric in BASELINE_METRICS:
+            if metric not in old:
+                continue
+            ref = float(old[metric])
+            new = float(getattr(r, metric))
+            if ref <= 0.0:
+                if new > 0.0:
+                    findings.append(Finding(
+                        PASS, ERROR, "cost-regression",
+                        f"{key}: predicted {metric} grew 0 -> {new:.3g}",
+                        model=r.model, granularity=r.granularity))
+                continue
+            rel = (new - ref) / ref
+            if rel > tolerance:
+                findings.append(Finding(
+                    PASS, ERROR, "cost-regression",
+                    f"{key}: predicted {metric} grew {ref:.3g} -> "
+                    f"{new:.3g} (+{rel:.0%} > {tolerance:.0%})",
+                    model=r.model, granularity=r.granularity))
+            elif rel < -tolerance:
+                findings.append(Finding(
+                    PASS, WARNING, "cost-baseline-stale",
+                    f"{key}: predicted {metric} shrank {ref:.3g} -> "
+                    f"{new:.3g} ({rel:.0%}); refresh the baseline to "
+                    f"lock in the win", model=r.model,
+                    granularity=r.granularity))
+    if full_matrix:
+        for key in sorted(set(baseline) - seen):
+            findings.append(Finding(
+                PASS, WARNING, "cost-baseline-stale",
+                f"baseline entry {key!r} matched no analyzed plan"))
+    return findings

@@ -51,8 +51,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.analysis import _jaxpr as _J
 from repro.analysis.findings import ERROR, WARNING, Finding
 from repro.core.provenance import (KNOWN_TAGS, MARK_PRIMITIVE, TAG_CLIP,
-                                   TAG_NOISE, TAG_RNG, TAG_SAMPLE, TAG_SEED,
-                                   meta_dict)
+                                   TAG_GLEAF, TAG_NOISE, TAG_RNG, TAG_SAMPLE,
+                                   TAG_SEED, meta_dict)
 
 PASS = "privacy"
 _EMPTY = _J.EMPTY
@@ -167,6 +167,12 @@ class _PrivacyWalker(_J.Walker):
         elif tag == TAG_RNG:
             token = T_KEY
             out = t_in | {T_KEY}
+        elif tag == TAG_GLEAF:
+            # the plan/apply boundary marker (traffic pass anchor) —
+            # pure identity for privacy lineage: the leaf's taint is
+            # whatever the plan built it from
+            token = None
+            out = t_in
         elif tag == TAG_SAMPLE:
             # selection boundary: which examples were drawn depends on
             # the norms, but a gather does not *scale* anything — seed

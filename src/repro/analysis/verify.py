@@ -33,10 +33,12 @@ from typing import Optional, Sequence, Tuple
 
 from repro.analysis import _jaxpr as _J
 from repro.analysis import collectives as _col
+from repro.analysis import cost as _cost
 from repro.analysis import coverage as _cov
 from repro.analysis import determinism as _det
 from repro.analysis import launch as _launch
 from repro.analysis import privacy as _priv
+from repro.analysis import traffic as _traf
 from repro.analysis.findings import ERROR, Finding
 from repro.core import plan as plan_mod
 from repro.core.taps import ExampleLayout, PexSpec, TokenLayout
@@ -51,16 +53,22 @@ class VerifyReport:
     privacy: Tuple[_priv.PrivacyReport, ...] = ()
     collectives: Tuple[_col.CollectivesReport, ...] = ()
     determinism: Optional[_det.DeterminismReport] = None
+    traffic: Tuple[_traf.TrafficReport, ...] = ()
+    cost: Tuple[_cost.CostReport, ...] = ()
 
     @property
     def findings(self) -> Tuple[Finding, ...]:
         """Every Finding from the flow passes (privacy, collectives,
-        determinism); coverage/launch keep their own report shapes."""
+        determinism, traffic); coverage/launch keep their own report
+        shapes, and allowlisted traffic findings stay on the
+        TrafficReport."""
         out: Tuple[Finding, ...] = ()
         for r in self.privacy + self.collectives:
             out += r.findings
         if self.determinism is not None:
             out += self.determinism.findings
+        for t in self.traffic:
+            out += t.findings
         return out
 
     @property
@@ -68,6 +76,7 @@ class VerifyReport:
         return (self.coverage.ok and self.launch.ok
                 and all(r.ok for r in self.privacy)
                 and all(r.ok for r in self.collectives)
+                and all(t.ok for t in self.traffic)
                 and (self.determinism is None or self.determinism.ok))
 
     @property
@@ -90,6 +99,10 @@ class VerifyReport:
             lines.append(r.summary())
         if self.determinism is not None:
             lines.append(self.determinism.summary())
+        for t in self.traffic:
+            lines.append(t.summary())
+        for c in self.cost:
+            lines.append(c.summary())
         return "\n".join(lines)
 
     def raise_if_errors(self) -> "VerifyReport":
@@ -108,7 +121,10 @@ def verify(loss_fn, params, batch, consumers: Sequence = (), *,
            seq: Optional[int] = None, cfg=None, backend: str = "tpu",
            production: bool = True, mesh=None,
            data_axes: Sequence[str] = ("data",),
-           deep: bool = True, determinism: bool = True) -> VerifyReport:
+           deep: bool = True, determinism: bool = True,
+           cost: bool = False, optimizer: str = "adamw",
+           profile: Optional[str] = None, chips: int = 1,
+           model: Optional[str] = None) -> VerifyReport:
     """Run all trace-only static checks for one model.
 
     ``consumers`` may be one consumer list or a sequence of lists —
@@ -120,6 +136,14 @@ def verify(loss_fn, params, batch, consumers: Sequence = (), *,
     pass — against ``mesh`` when one is given (which also enables the
     collective-layout pass on its shard_map regions) — and the data
     pipeline's determinism contract is checked once.
+
+    With ``cost`` (independent of ``deep``), each non-empty consumer
+    set is traced as a full *training* step — plan execution plus the
+    ``optimizer`` apply — and run through the traffic pass
+    (``analysis.traffic``); each TrafficReport is composed into a
+    ``CostReport`` on the named hardware ``profile`` (default
+    tpu-v5e). Traffic findings gate ``.ok`` like every flow pass;
+    allowlisted ones (today's known 3-stream apply) do not.
     """
     spec = spec if spec is not None else PexSpec(enabled=True)
     if consumers and not isinstance(consumers[0], (list, tuple)):
@@ -160,4 +184,22 @@ def verify(loss_fn, params, batch, consumers: Sequence = (), *,
             # batch drivers (the CLI) check it once and pass False here
             det = _det.analyze()
 
-    return VerifyReport(plans, cov, lr, privacy, collectives, det)
+    traffic: Tuple[_traf.TrafficReport, ...] = ()
+    cost_reps: Tuple[_cost.CostReport, ...] = ()
+    if cost:
+        for cs in consumer_sets:
+            if not cs:
+                continue
+            tt = _J.trace_train_step(
+                loss_fn, params, batch, cs, optimizer=optimizer,
+                spec=spec, granularity=granularity, mesh=mesh,
+                data_axes=data_axes, batch_size=batch_size, seq=seq)
+            tr = _traf.analyze_trace(tt)
+            traffic += (tr,)
+            cost_reps += (_cost.build_cost(
+                tr, model=model if model is not None else "model",
+                profile=profile if profile is not None
+                else _cost.DEFAULT_PROFILE, chips=chips),)
+
+    return VerifyReport(plans, cov, lr, privacy, collectives, det,
+                        traffic, cost_reps)

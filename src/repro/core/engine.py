@@ -204,7 +204,10 @@ class Engine:
                consumers: Sequence = (), *, allow: Sequence[str] = (),
                batch_size: Optional[int] = None,
                seq: Optional[int] = None, cfg=None,
-               backend: str = "tpu", deep: bool = True):
+               backend: str = "tpu", deep: bool = True,
+               cost: bool = False, optimizer: str = "adamw",
+               profile: Optional[str] = None, chips: int = 1,
+               model: Optional[str] = None):
         """Static verification of a (model, plan) pair — trace-only,
         no compilation, safe on abstract ``ShapeDtypeStruct`` params
         and batches (DESIGN.md §10, §12).
@@ -218,7 +221,11 @@ class Engine:
         the trace's tap sites imply (``cfg`` additionally checks the
         config-derived production geometries), and — with ``deep`` —
         the privacy-flow, collective-layout (mesh engines), and
-        determinism passes over full step traces. Returns a
+        determinism passes over full step traces. With ``cost``, the
+        traffic/cost passes additionally trace the full training step
+        — plan execution plus the ``optimizer`` apply — and attach
+        ``TrafficReport``/``CostReport`` tuples (predicted on hardware
+        ``profile`` × ``chips``). Returns a
         ``repro.analysis.VerifyReport``; ``.ok`` /
         ``.raise_if_errors()`` gate on it."""
         from repro.analysis.verify import verify as _verify
@@ -227,7 +234,9 @@ class Engine:
                               granularity=self.granularity, allow=allow,
                               batch_size=batch_size, seq=seq, cfg=cfg,
                               backend=backend, mesh=self.mesh,
-                              data_axes=self.data_axes, deep=deep)
+                              data_axes=self.data_axes, deep=deep,
+                              cost=cost, optimizer=optimizer,
+                              profile=profile, chips=chips, model=model)
 
     # ------------------------------------------------------------------
     def tap(self, batch_size: int, *, seq: Optional[int] = None) -> Tap:

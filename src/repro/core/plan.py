@@ -59,7 +59,7 @@ from repro.core import importance as imp
 from repro.core.clipping import token_clip_coefficients
 from repro.core.passes import (add_grad_noise, check_noise_args,
                                clip_coefficients)
-from repro.core.provenance import mark_seed
+from repro.core.provenance import mark_grad_tree, mark_seed
 
 
 # ---------------------------------------------------------------------------
@@ -173,9 +173,33 @@ class Plan:
             return 2
         return 1
 
-    def describe(self) -> str:
+    def static_cost(self, *, fwd_flops: Optional[float] = None,
+                    param_bytes: Optional[float] = None) -> dict:
+        """Structural step-budget estimate from the plan shape alone —
+        no trace. Flops follow the classic 1-forward/2-backward rule
+        per region; gradient HBM reads count the plan-side full-tree
+        passes (write + noise add; the optimizer apply adds its own —
+        ``analysis.traffic.expected_streams`` has the full count).
+        The traced numbers live on ``analysis.cost.CostReport``; this
+        is the zero-trace approximation ``describe()`` renders."""
+        regions = 1 if self.importance is None else 2
+        grad_reads = int(self.needs_grads) * (
+            1 + (1 if self.noise is not None else 0))
+        out = {"regions": regions, "backwards": self.n_backwards,
+               "grad_stream_reads": grad_reads}
+        if fwd_flops is not None:
+            out["flops_est"] = float(fwd_flops) * (
+                regions + 2.0 * self.n_backwards)
+        if param_bytes is not None:
+            out["grad_bytes_est"] = float(param_bytes) * (1 + grad_reads)
+        return out
+
+    def describe(self, *, fwd_flops: Optional[float] = None,
+                 param_bytes: Optional[float] = None) -> str:
         """One-line static cost shape of the pass this plan compiles
-        to — consumed by ``Engine.verify`` and the pexlint CLI."""
+        to — consumed by ``Engine.verify`` and the pexlint CLI. With
+        ``fwd_flops``/``param_bytes`` the line carries the
+        ``static_cost`` flop/byte estimates too."""
         regions = 1 if self.importance is None else 2
         parts = [f"regions={regions}", f"backwards={self.n_backwards}",
                  "acc=(B,S)" if self.token_norms else
@@ -188,6 +212,12 @@ class Plan:
             parts.append("gns")
         if self.importance is not None:
             parts.append(f"importance(k={self.importance.k})")
+        est = self.static_cost(fwd_flops=fwd_flops,
+                               param_bytes=param_bytes)
+        if "flops_est" in est:
+            parts.append(f"flops≈{est['flops_est']:.3g}")
+        if "grad_bytes_est" in est:
+            parts.append(f"grad_bytes≈{est['grad_bytes_est']:.3g}")
         return " ".join(parts)
 
 
@@ -450,6 +480,12 @@ def execute(plan: Plan, acc_loss: Callable, params, batch,
             sq if sub_sq is None else sub_sq, grads,
             batch_size=batch_size if samp is None else plan.importance.k,
             weights=w)
+    if grads is not None:
+        # the plan/apply boundary: everything downstream (noise add,
+        # optimizer moments) re-reads the summed gradient from HBM —
+        # the traffic pass counts those passes per leaf off these
+        # identity markers (they vanish in lowering)
+        grads = mark_grad_tree(grads)
     if plan.noise is not None and grads is not None:
         scale = plan.noise.scale if plan.noise.scale is not None \
             else plan.clip.clip_norm

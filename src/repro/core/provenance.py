@@ -48,7 +48,9 @@ TAG_SEED = "grad_seed"
 TAG_NOISE = "noise"
 TAG_RNG = "rng_use"
 TAG_SAMPLE = "sample_idx"
-KNOWN_TAGS = frozenset({TAG_CLIP, TAG_SEED, TAG_NOISE, TAG_RNG, TAG_SAMPLE})
+TAG_GLEAF = "grad_leaf"
+KNOWN_TAGS = frozenset({TAG_CLIP, TAG_SEED, TAG_NOISE, TAG_RNG, TAG_SAMPLE,
+                        TAG_GLEAF})
 
 mark_p = jex_core.Primitive(MARK_PRIMITIVE)
 mark_p.def_impl(lambda x, *, tag, meta: x)
@@ -105,6 +107,25 @@ def mark_sample(indices, *, k: int):
     must not confuse a norm-guided gather with an unclipped seed — so
     the analyzer launders seed taint here."""
     return mark(indices, TAG_SAMPLE, k=k)
+
+
+def mark_grad_leaf(g, *, leaf: int):
+    """Mark one summed-gradient leaf at the plan/optimizer boundary —
+    after GNS reads the raw gradient, before noise and the apply. The
+    traffic pass (``analysis.traffic``) anchors its per-leaf HBM-stream
+    counting on these: every fusion component downstream that re-reads
+    a full leaf-sized array derived from this marker is one more pass
+    over the gradient in HBM."""
+    return mark(g, TAG_GLEAF, leaf=leaf)
+
+
+def mark_grad_tree(grads):
+    """``mark_grad_leaf`` over every leaf of a gradient pytree, in the
+    tree's flatten order (== the parameter tree's leaf order)."""
+    from jax.tree_util import tree_flatten, tree_unflatten
+    leaves, tree = tree_flatten(grads)
+    return tree_unflatten(
+        tree, [mark_grad_leaf(g, leaf=i) for i, g in enumerate(leaves)])
 
 
 def mark_rng(key, *, purpose: str, index: Optional[int] = None):

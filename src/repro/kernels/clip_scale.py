@@ -31,6 +31,7 @@ def launch_contract(b: int, s: int, p: int, *, tile_s: int = 256,
             Divisibility("p", p, tile_p),
         ),
         scalar_prefetch=1,
+        flops=float(b) * s * p,  # one multiply per element
     )
 
 

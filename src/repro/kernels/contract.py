@@ -75,12 +75,20 @@ class Divisibility:
 
 @dataclasses.dataclass(frozen=True)
 class LaunchContract:
-    """The checkable surface of one ``pallas_call``."""
+    """The checkable surface of one ``pallas_call``.
+
+    ``flops`` is the kernel's total useful floating-point work for the
+    whole launch (all grid steps) — filled by each ``launch_contract``
+    builder from the same arithmetic the kernel body performs, so the
+    cost model (``analysis.cost``) can put Pallas launches on the same
+    roofline as the surrounding XLA program.
+    """
     kernel: str
     grid: Tuple[int, ...]
     blocks: Tuple[Block, ...]
     divisibility: Tuple[Divisibility, ...] = ()
     scalar_prefetch: int = 0
+    flops: float = 0.0
 
     def vmem_bytes(self) -> int:
         """Footprint estimate: pipelined in/out blocks double-buffered,
@@ -88,6 +96,22 @@ class LaunchContract:
         total = 0
         for blk in self.blocks:
             total += blk.bytes * (1 if blk.kind == "scratch" else 2)
+        return total
+
+    def hbm_bytes(self) -> int:
+        """HBM traffic estimate for the whole launch: every in/out
+        block is streamed through VMEM once per grid step it is mapped
+        to — grid product × block bytes, scratch excluded (it lives in
+        VMEM only). An upper bound when a block is revisited across a
+        reduction axis (the pipeline keeps it resident), which is the
+        conservative direction for a traffic budget."""
+        steps = 1
+        for g in self.grid:
+            steps *= max(int(g), 1)
+        total = 0
+        for blk in self.blocks:
+            if blk.kind != "scratch":
+                total += blk.bytes * steps
         return total
 
 

@@ -78,6 +78,8 @@ def launch_contract(b: int, s: int, p_in: int, p_out: int, *,
             Divisibility("p_in", p_in, chunk_in),
             Divisibility("p_out", p_out, chunk_out),
         ),
+        # per-example HᵀZ̄ (2·S·p_in·p_out) plus the Σ(G²) fold
+        flops=float(b) * (2.0 * s * p_in * p_out + 2.0 * p_in * p_out),
     )
 
 

@@ -96,6 +96,10 @@ def launch_contracts(b: int, hq: int, hkv: int, sq: int, sk: int, d: int, *,
         Divisibility("sq", sq, block_q),
         Divisibility("sk", sk, block_k),
     )
+    # per (batch, query-head): QKᵀ and PV are each 2·sq·sk·d; the
+    # backward kernels recompute P and add the dP/dQ (resp. dK/dV)
+    # contractions on top
+    attn_flops = float(b) * hq * sq * sk * d
     fwd = LaunchContract(
         kernel="flash_attention.fwd",
         grid=(b, hq, n_q, n_k),
@@ -113,6 +117,7 @@ def launch_contracts(b: int, hq: int, hkv: int, sq: int, sk: int, d: int, *,
                   accumulator=True),
         ),
         divisibility=div,
+        flops=4.0 * attn_flops,
     )
     dq = LaunchContract(
         kernel="flash_attention.bwd_dq",
@@ -129,6 +134,7 @@ def launch_contracts(b: int, hq: int, hkv: int, sq: int, sk: int, d: int, *,
                   accumulator=True),
         ),
         divisibility=div,
+        flops=6.0 * attn_flops,
     )
     dkv = LaunchContract(
         kernel="flash_attention.bwd_dkv",
@@ -148,6 +154,7 @@ def launch_contracts(b: int, hq: int, hkv: int, sq: int, sk: int, d: int, *,
                   accumulator=True),
         ),
         divisibility=div,
+        flops=8.0 * attn_flops,
     )
     return (fwd, dq, dkv)
 

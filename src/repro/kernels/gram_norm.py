@@ -108,6 +108,10 @@ def launch_contract(b: int, s: int, p_in: int, p_out: int, *,
             Divisibility("p_out", p_out, chunk_out),
         ),
         scalar_prefetch=2 if triangular else 0,
+        # two (Ts × p) gram contractions per pair (A += H_iH_jᵀ over p_in,
+        # B += Z̄_iZ̄_jᵀ over p_out) plus the ⟨A, B⟩ fold
+        flops=float(b) * pairs * (2.0 * tile_s * tile_s * (p_in + p_out)
+                                  + 2.0 * tile_s * tile_s),
     )
 
 

@@ -33,6 +33,7 @@ def launch_contract(b: int, n: int, *, tile_b: int = 8, tile_n: int = 2048,
             Divisibility("b", b, tile_b),
             Divisibility("n", n, tile_n),
         ),
+        flops=2.0 * b * n,  # square + accumulate per element
     )
 
 

@@ -115,6 +115,8 @@ def launch_contract(t: int, p_in: int, p_out: int, n_seg_pad: int,
             Divisibility("n_seg_pad", n_seg_pad, 128),
         ),
         scalar_prefetch=6,
+        # masked HᵀZ̄ contraction per work item across all block columns
+        flops=2.0 * max(n_work, 1) * tile_t * p_in * p_out,
     )
 
 

@@ -1,7 +1,69 @@
-"""TPU v5e hardware constants (per chip) — the roofline denominators."""
+"""Hardware profiles — the roofline and cost-model denominators.
 
-PEAK_FLOPS_BF16 = 197e12       # FLOP/s
-HBM_BW = 819e9                 # B/s
-ICI_BW = 50e9                  # B/s per link
-CHIPS_PER_POD = 256
-HBM_BYTES = 16e9               # capacity, for fit checks
+Historically this module was five flat TPU v5e numbers; every roofline
+ratio and every ``analysis.cost`` CostReport divides by them, so a
+report is meaningless unless it *names* the hardware it assumed.
+``HardwareProfile`` makes the denominators a value, ``PROFILES`` the
+named registry, and the original module-level v5e constants remain as
+the default profile's fields (``roofline.analysis`` and older callers
+read them directly).
+
+Numbers are public peak specs (per chip), not measured: the cost model
+composes them with measured probe metrics where available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """Per-chip peak numbers a roofline/cost estimate divides by."""
+    name: str
+    peak_flops_bf16: float     # FLOP/s, dense bf16
+    hbm_bw: float              # B/s
+    ici_bw: float              # B/s per link
+    chips_per_pod: int
+    hbm_bytes: float           # capacity, for fit checks
+
+    def describe(self) -> str:
+        return (f"{self.name}: {self.peak_flops_bf16 / 1e12:.0f} TF/s, "
+                f"{self.hbm_bw / 1e9:.0f} GB/s HBM, "
+                f"{self.ici_bw / 1e9:.0f} GB/s ICI, "
+                f"{self.hbm_bytes / 1e9:.0f} GB")
+
+
+PROFILES: Dict[str, HardwareProfile] = {
+    "tpu-v5e": HardwareProfile(
+        name="tpu-v5e", peak_flops_bf16=197e12, hbm_bw=819e9,
+        ici_bw=50e9, chips_per_pod=256, hbm_bytes=16e9),
+    "tpu-v5p": HardwareProfile(
+        name="tpu-v5p", peak_flops_bf16=459e12, hbm_bw=2765e9,
+        ici_bw=100e9, chips_per_pod=8960, hbm_bytes=95e9),
+    "tpu-v4": HardwareProfile(
+        name="tpu-v4", peak_flops_bf16=275e12, hbm_bw=1228e9,
+        ici_bw=50e9, chips_per_pod=3072, hbm_bytes=32e9),
+    "tpu-v6e": HardwareProfile(
+        name="tpu-v6e", peak_flops_bf16=918e12, hbm_bw=1640e9,
+        ici_bw=90e9, chips_per_pod=256, hbm_bytes=32e9),
+}
+
+DEFAULT_PROFILE = "tpu-v5e"
+
+
+def get_profile(name: str) -> HardwareProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware profile {name!r}; known: "
+                       f"{sorted(PROFILES)}") from None
+
+
+# -- legacy flat constants (the default tpu-v5e profile) --------------------
+_DEF = PROFILES[DEFAULT_PROFILE]
+PEAK_FLOPS_BF16 = _DEF.peak_flops_bf16
+HBM_BW = _DEF.hbm_bw
+ICI_BW = _DEF.ici_bw
+CHIPS_PER_POD = _DEF.chips_per_pod
+HBM_BYTES = _DEF.hbm_bytes

@@ -1,0 +1,324 @@
+"""pexcost (traffic + cost) on the real registry: the clean sweep is
+finding-free on every arch × granularity (zero false positives), the
+known 3-stream apply path is detected and allowlisted, the CostReport
+arithmetic and hardware profiles are sane, the baseline gate has
+teeth, and the static flop predictions stay within tolerance of the
+measured BENCH telemetry."""
+import dataclasses
+import json
+import os
+
+import jax
+import pytest
+
+from repro import pex
+from repro.analysis import cost as cost_mod
+from repro.analysis import traffic
+from repro.analysis.findings import ERROR, WARNING
+from repro.core import plan as plan_mod
+from repro.core.engine import Engine
+from repro.core.taps import PexSpec
+from repro.models import registry
+from repro.roofline import constants as hw
+
+from tests.test_pexlint import abstract_setup
+
+ALL_ARCHS = sorted(registry.ARCHS)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dp_consumers(granularity, key):
+    if granularity == "token":
+        return [pex.Clip(1.0, granularity="token"),
+                pex.Noise(0.1, key, scale=1.0)]
+    return [pex.Clip(1.0), pex.Noise(0.1, key), pex.GNS()]
+
+
+# ---------------------------------------------------------------------------
+# traffic pass — clean paths
+# ---------------------------------------------------------------------------
+
+def test_dp_step_counts_three_allowlisted_streams():
+    """Today's unfused apply streams every gradient 3× (noise add,
+    global-norm clip, adamw update); the pass must report exactly that
+    as allowlisted — not as a failure — with the ROADMAP pointer."""
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    rep = traffic.check_train_step(
+        loss_fn, params, batch,
+        _dp_consumers("example", jax.random.PRNGKey(0)))
+    assert rep.n_streams == 3
+    assert rep.expected_streams == 3
+    assert rep.ok and not rep.findings, rep.summary()
+    assert len(rep.allowlisted) == 1
+    f = rep.allowlisted[0]
+    assert f.code == "redundant-hbm-stream"
+    assert "ROADMAP" in f.message and "3" in f.message
+
+
+def test_strict_mode_moves_known_streams_into_findings():
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    rep = traffic.check_train_step(
+        loss_fn, params, batch,
+        _dp_consumers("example", jax.random.PRNGKey(0)),
+        allow_known_streams=False)
+    assert not rep.ok
+    assert any(f.code == "redundant-hbm-stream" and f.severity == ERROR
+               for f in rep.findings)
+
+
+def test_norms_only_step_has_no_apply_traffic():
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    rep = traffic.check_train_step(loss_fn, params, batch, [pex.Norms()])
+    assert rep.n_streams == 0 == rep.expected_streams
+    assert rep.ok and not rep.allowlisted
+
+
+def test_phase_attribution_covers_the_step():
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    rep = traffic.check_train_step(
+        loss_fn, params, batch,
+        _dp_consumers("example", jax.random.PRNGKey(0)))
+    bytes_by_phase = dict(rep.phase_bytes)
+    assert bytes_by_phase["forward"] > 0
+    assert bytes_by_phase["activation-bwd"] > 0
+    assert bytes_by_phase["apply"] > 0
+    assert abs(sum(bytes_by_phase.values()) - rep.hbm_bytes) \
+        <= 1e-6 * rep.hbm_bytes
+    # the reweighted backward reuses the norms backward's residuals
+    assert rep.residual_sharing == pytest.approx(1.0)
+    # one forward only
+    assert rep.forward_flops <= 1.1 * rep.ref_forward_flops
+
+
+# ---------------------------------------------------------------------------
+# clean sweep through the real entry point (zero false positives)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_cost_sweep_is_clean(arch_id):
+    """Engine.verify(cost=True) over every arch × granularity: no
+    findings, streams always at the structural expectation, and every
+    CostReport names its profile."""
+    _, loss_fn, params, batch = abstract_setup(arch_id)
+    allow = registry.untapped_allowlist(arch_id)
+    for gran in ("example", "token"):
+        eng = Engine(PexSpec(enabled=True), granularity=gran)
+        rep = eng.verify(
+            loss_fn, params, batch,
+            [_dp_consumers(gran, jax.random.PRNGKey(0))],
+            allow=allow, seq=8, deep=False, cost=True, model=arch_id)
+        assert rep.ok, rep.summary()
+        assert not rep.findings
+        (tr,) = rep.traffic
+        assert tr.n_streams == tr.expected_streams, tr.summary()
+        (cr,) = rep.cost
+        assert cr.model == arch_id
+        assert cr.profile == hw.DEFAULT_PROFILE
+        assert cr.t_step > 0
+        assert cr.flops_hlo > 0 and cr.hbm_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# cost composition
+# ---------------------------------------------------------------------------
+
+def _llama_traffic():
+    _, loss_fn, params, batch = abstract_setup("llama3.2-1b")
+    return traffic.check_train_step(
+        loss_fn, params, batch,
+        _dp_consumers("example", jax.random.PRNGKey(0)))
+
+
+def test_cost_report_roofline_arithmetic():
+    tr = _llama_traffic()
+    cr = cost_mod.build_cost(tr, model="llama3.2-1b")
+    p = hw.get_profile(cr.profile)
+    assert cr.t_compute == pytest.approx(
+        cr.flops_hlo / p.peak_flops_bf16)
+    assert cr.t_memory == pytest.approx(cr.hbm_bytes / p.hbm_bw)
+    assert cr.t_collective == 0.0           # single chip, no wire term
+    assert cr.t_step == max(cr.t_compute, cr.t_memory, cr.t_collective)
+    assert cr.bottleneck in ("compute", "memory", "collective")
+    # the smoke step is tiny: memory-bound on every current profile
+    assert cr.bottleneck == "memory"
+
+
+def test_cost_collective_term_scales_with_chips():
+    tr = dataclasses.replace(_llama_traffic(), coll_bytes=1e9)
+    one = cost_mod.build_cost(tr, chips=1)
+    four = cost_mod.build_cost(tr, chips=4)
+    p = hw.get_profile(four.profile)
+    assert one.t_collective == 0.0
+    # ring all-reduce wire volume: bytes × 2(n−1)/n over one ICI link
+    assert four.t_collective == pytest.approx(
+        1e9 * 2 * 3 / 4 / p.ici_bw)
+    # per-chip compute/memory shares shrink with the fleet
+    assert four.t_compute == pytest.approx(one.t_compute / 4)
+
+
+def test_cost_composes_launch_contracts():
+    from repro.kernels import gram_norm, rowsumsq
+    tr = _llama_traffic()
+    contracts = (gram_norm.launch_contract(4, 16, 64, 64),
+                 rowsumsq.launch_contract(8, 2048))
+    assert all(c.flops > 0 for c in contracts)
+    assert all(c.hbm_bytes() > 0 for c in contracts)
+    base = cost_mod.build_cost(tr)
+    with_k = cost_mod.build_cost(tr, contracts=contracts)
+    assert with_k.kernel_flops == pytest.approx(
+        sum(c.flops for c in contracts))
+    assert with_k.kernel_hbm_bytes == sum(c.hbm_bytes()
+                                          for c in contracts)
+    assert with_k.t_compute > base.t_compute
+    assert with_k.t_memory > base.t_memory
+
+
+def test_cost_report_json_round_trips():
+    cr = cost_mod.build_cost(_llama_traffic(), model="llama3.2-1b")
+    d = json.loads(json.dumps(cr.to_json()))
+    assert d["model"] == "llama3.2-1b"
+    assert d["profile"] == hw.DEFAULT_PROFILE
+    assert d["bottleneck"] == cr.bottleneck
+    assert d["n_streams"] == 3
+
+
+# ---------------------------------------------------------------------------
+# hardware profiles (roofline/constants.py)
+# ---------------------------------------------------------------------------
+
+def test_profiles_registry():
+    assert hw.DEFAULT_PROFILE in hw.PROFILES
+    for name, p in hw.PROFILES.items():
+        assert p.name == name
+        assert p.peak_flops_bf16 > 0 and p.hbm_bw > 0 and p.ici_bw > 0
+        assert name in p.describe() or p.name in p.describe()
+    with pytest.raises(KeyError, match="unknown hardware profile"):
+        hw.get_profile("tpu-v99")
+
+
+def test_legacy_flat_constants_track_default_profile():
+    p = hw.PROFILES[hw.DEFAULT_PROFILE]
+    assert hw.PEAK_FLOPS_BF16 == p.peak_flops_bf16
+    assert hw.HBM_BW == p.hbm_bw
+    assert hw.ICI_BW == p.ici_bw
+    assert hw.HBM_BYTES == p.hbm_bytes
+
+
+def test_cost_states_its_denominators():
+    cr = cost_mod.build_cost(_llama_traffic(), profile="tpu-v5p")
+    assert cr.profile == "tpu-v5p"
+    assert "tpu-v5p" in cr.summary()
+    p = hw.get_profile("tpu-v5p")
+    assert cr.t_memory == pytest.approx(cr.hbm_bytes / p.hbm_bw)
+
+
+# ---------------------------------------------------------------------------
+# baseline gate
+# ---------------------------------------------------------------------------
+
+def _report():
+    return cost_mod.build_cost(_llama_traffic(), model="llama3.2-1b")
+
+
+def test_baseline_gate_round_trip_is_clean():
+    cr = _report()
+    baseline = cost_mod.baseline_payload([cr])
+    assert not cost_mod.check_baseline([cr], baseline)
+
+
+def test_baseline_gate_fails_on_growth():
+    cr = _report()
+    baseline = cost_mod.baseline_payload([cr])
+    key = cost_mod.baseline_key(cr)
+    baseline[key]["hbm_bytes"] *= 0.5      # HEAD now reads 2× the baseline
+    out = cost_mod.check_baseline([cr], baseline)
+    assert any(f.code == "cost-regression" and f.severity == ERROR
+               and "hbm_bytes" in f.message for f in out)
+
+
+def test_baseline_gate_warns_on_shrink_and_churn():
+    cr = _report()
+    baseline = cost_mod.baseline_payload([cr])
+    key = cost_mod.baseline_key(cr)
+    baseline[key]["flops_hlo"] *= 2.0      # HEAD got cheaper: re-baseline
+    baseline["gone/example/plan"] = {"flops_hlo": 1.0}
+    out = cost_mod.check_baseline([cr], baseline)
+    assert all(f.severity == WARNING for f in out)
+    codes = {f.code for f in out}
+    assert codes == {"cost-baseline-stale"}
+
+
+def test_baseline_gate_warns_on_missing_key():
+    cr = _report()
+    out = cost_mod.check_baseline([cr], {})
+    assert [f.code for f in out] == ["cost-baseline-missing"]
+    assert out[0].severity == WARNING
+
+
+def test_committed_baseline_matches_head():
+    """The committed COST_BASELINE.json must agree with HEAD's
+    predictions — the same invariant the CI gate enforces."""
+    path = os.path.join(ROOT, "COST_BASELINE.json")
+    with open(path) as f:
+        baseline = json.load(f)
+    cr = _report()
+    assert cost_mod.baseline_key(cr) in baseline
+    out = cost_mod.check_baseline([cr], baseline)
+    assert not [f for f in out if f.severity == ERROR], \
+        [f.render() for f in out]
+
+
+# ---------------------------------------------------------------------------
+# Plan static-cost satellite
+# ---------------------------------------------------------------------------
+
+def test_plan_static_cost_and_describe():
+    plan = plan_mod.analyze([pex.Clip(1.0),
+                             pex.Noise(0.1, jax.random.PRNGKey(0)),
+                             pex.GNS()])
+    est = plan.static_cost(fwd_flops=1e9, param_bytes=1e6)
+    assert est["regions"] == 1 and est["backwards"] == 2
+    assert est["grad_stream_reads"] == 2    # write-back read + noise add
+    # 1 forward + 2 backwards at 2× each
+    assert est["flops_est"] == pytest.approx(5e9)
+    assert est["grad_bytes_est"] == pytest.approx(3e6)
+    desc = plan.describe(fwd_flops=1e9, param_bytes=1e6)
+    assert "flops≈5e+09" in desc and "grad_bytes≈3e+06" in desc
+    # the pinned default rendering is unchanged
+    assert "flops" not in plan.describe()
+    assert plan.describe().startswith("regions=1 backwards=2")
+
+
+def test_plan_static_cost_tracks_plan_shape():
+    norms_only = plan_mod.analyze([pex.Norms()])
+    est = norms_only.static_cost(fwd_flops=1e9)
+    assert est["backwards"] == 1 and est["grad_stream_reads"] == 0
+    assert est["flops_est"] == pytest.approx(3e9)
+    empty = plan_mod.analyze([])
+    assert empty.static_cost(fwd_flops=1e9)["flops_est"] \
+        == pytest.approx(1e9)
+
+
+# ---------------------------------------------------------------------------
+# cross-validation against the measured BENCH telemetry
+# ---------------------------------------------------------------------------
+
+def test_pexcost_predictions_within_bench_tolerance():
+    """Every flops-telemetry ``#derived`` row of the newest committed
+    BENCH baseline must be predicted within 25% by the static walker —
+    exactly what benchmarks/check_drift.py gates in CI."""
+    from benchmarks import check_drift
+    path = check_drift.newest_bench(ROOT)
+    with open(path) as f:
+        bench = json.load(f)
+    rows = {}
+    for k, v in bench.items():
+        if not (k.endswith("#derived") and isinstance(v, str)
+                and v.startswith("flops=")):
+            continue
+        base, cfg = check_drift._parse(k[: -len("#derived")])
+        if base in check_drift._PEXCOST_ROWS:
+            rows[k[: -len("#derived")]] = (
+                base, cfg, float(v[len("flops="):]))
+    assert len(rows) == 4, sorted(rows)
+    assert check_drift._check_pexcost(rows, tolerance=0.25) == []

@@ -286,6 +286,6 @@ def test_mutant_seed_drift():
 @pytest.mark.parametrize("arch_id", sorted(registry.ARCHS))
 def test_clean_sweep_all_passes(arch_id):
     from repro.analysis.__main__ import lint_arch
-    findings = lint_arch(arch_id, backend="tpu", production=True,
-                         key=KEY, mesh=_one_device_mesh(), deep=True)
+    findings, _costs = lint_arch(arch_id, backend="tpu", production=True,
+                                 key=KEY, mesh=_one_device_mesh(), deep=True)
     assert not findings, "\n".join(f.render() for f in findings)
