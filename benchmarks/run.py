@@ -14,6 +14,10 @@ interpret-mode job).
                  measured and cost-model XLA↔Pallas crossover
   clip.*       — §6 clipping: two-pass ghost vs naive
   importance.* — §1 application: importance sampling vs uniform
+  tenant.*     — multi-tenant LoRA service: the fused per-tenant-DP
+                 step vs the plain multi-tenant step (overhead ≤10%
+                 at ≥256 adapters/batch asserted on TPU), plus the
+                 segmented dispatch model on rank-r tap geometries
   v2.*         — Engine-facade guard: the v2 path must compile to HLO
                  of the same flop/byte cost as the raw pass layer (no
                  abstraction tax; asserted)
@@ -24,17 +28,18 @@ interpret-mode job).
 """
 import argparse
 
-from benchmarks import (bench_clipping, bench_importance, bench_methods,
+from benchmarks import (bench_clipping, bench_importance,
+                        bench_lora_tenants, bench_methods,
                         bench_paper_table, bench_plan, bench_segmented,
                         bench_v2_facade, common)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", nargs="?", const="BENCH_PR5.json", default=None,
-                    metavar="PATH",
+    ap.add_argument("--json", nargs="?", const="BENCH_PR10.json",
+                    default=None, metavar="PATH",
                     help="write results as {name: us_per_call} JSON "
-                         "(default path: BENCH_PR5.json)")
+                         "(default path: BENCH_PR10.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, kernels in interpret mode, no "
                          "timing asserts (the CI job)")
@@ -45,6 +50,7 @@ def main(argv=None) -> None:
     if args.smoke:
         bench_methods.main(smoke=True)
         bench_segmented.main(smoke=True)
+        bench_lora_tenants.main(smoke=True)
         bench_v2_facade.main(smoke=True)
         bench_plan.main(smoke=True)
     else:
@@ -53,6 +59,7 @@ def main(argv=None) -> None:
         bench_segmented.main()
         bench_clipping.main()
         bench_importance.main()
+        bench_lora_tenants.main()
         bench_v2_facade.main()
         bench_plan.main()
     if args.json:

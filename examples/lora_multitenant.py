@@ -1,0 +1,91 @@
+"""Multi-tenant LoRA fine-tuning: hundreds of per-user adapters share
+every batch, and each tenant gets independent DP guarantees — all from
+ONE fused pass per step (DESIGN.md §14).
+
+Each tenant owns a LoRA adapter (frozen shared base + low-rank delta).
+A step takes an interleaved mixed-tenant batch; the service sorts it by
+tenant, gathers the active adapter rows, computes exact per-example
+gradient norms through the segmented tap (one launch across ALL
+tenants), clips per example, draws each tenant's DP noise from
+``fold_in(rng, tenant_id)`` — so tenant t's update is bit-identical to
+what it would be if t trained alone — and scatters the updated rows
+back. Admission and eviction recycle store slots between steps.
+
+    PYTHONPATH=src python examples/lora_multitenant.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import lora
+from repro.nn.linear import linear
+from repro.tenancy import AdapterStore, TenantService
+
+D_IN, D_OUT, RANK, SEQ = 32, 16, 4, 12
+CLIP, SIGMA, LR = 1.0, 0.2, 0.05
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    base_w = jax.random.normal(key, (D_IN, D_OUT)) * 0.2
+
+    # one LoRA site per tenant; B starts random so step-0 grads are live
+    def init_fn(k):
+        return {"proj": lora.init_pair(k, D_IN, D_OUT, RANK, 8.0,
+                                       boxed=False, b_std=0.3)}
+
+    # user loss: per-example adapters ride a leading (B,) axis; the
+    # factors route through tap.dense_batched inside nn.linear
+    def loss_fn(adapters, data, tap):
+        p = {"w": base_w, "lora": adapters["proj"]}
+        z = linear(p, data["x"], tap=tap, group="all")
+        tok = jnp.sum(jnp.square(z - data["y"]), axis=-1)
+        return jnp.sum(tap.token_loss(tok), axis=1), {}
+
+    store = AdapterStore(init_fn, capacity=512, key=jax.random.fold_in(key, 1))
+    svc = TenantService(store, loss_fn, clip_norm=CLIP, noise_std=SIGMA,
+                        lr=LR)
+
+    rs = np.random.RandomState(0)
+    tenants = rs.choice(20_000, size=300, replace=False)
+    for step in range(5):
+        # interleaved mixed batch: ~120 tenants, ragged 1-4 examples each
+        active = rs.choice(tenants, size=120, replace=False)
+        owner = np.concatenate(
+            [np.full(rs.randint(1, 5), t) for t in active])
+        rs.shuffle(owner)
+        B = len(owner)
+        x = jax.random.normal(jax.random.fold_in(key, 10 + step),
+                              (B, SEQ, D_IN))
+        y = jax.random.normal(jax.random.fold_in(key, 100 + step),
+                              (B, SEQ, D_OUT))
+        res = svc.step({"x": x, "y": y}, owner,
+                       rng=jax.random.fold_in(key, 1000 + step))
+        clipped = float(jnp.mean(res.clip_coef < 1.0)) * 100
+        print(f"step {step}: B={B:3d} tenants={len(res.tenant_ids):3d} "
+              f"resident={store.n_active:3d} loss={float(res.loss):9.1f} "
+              f"clipped={clipped:4.0f}% "
+              f"worst tenant loss={float(jnp.max(res.tenant_loss)):7.1f}")
+
+        if step == 2:
+            # mid-run churn: retire the coldest third, queue newcomers
+            for t in [int(t) for t in store.tenants[:100]]:
+                svc.evict(t)
+            svc.submit(*rs.choice(50_000, size=40, replace=False).tolist())
+            admitted = svc.admit_pending()
+            print(f"         evicted 100 tenants, admitted "
+                  f"{len(admitted)} from the queue")
+
+    # the per-tenant DP contract: tenant t's noised update depended only
+    # on its own examples and fold_in(rng, t) — batchmates never leak in
+    # (tests/test_lora_tenancy.py proves this against a 110-tenant
+    # per-tenant oracle loop, to allclose on norms/clip/updates)
+    t = int(owner[0])
+    n_t = int(np.sum(owner == t))
+    row = store.gather(np.array([t]))
+    print(f"\ntenant {t}: {n_t} examples in the last mixed batch; "
+          f"adapter row head {np.asarray(row['proj'].a).ravel()[:3]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -153,6 +153,13 @@ class _CoverageWalker(_J.Walker):
         self.sites: list = []
 
     def hook(self, eqn, in_t):
+        if eqn.primitive.name == "stop_gradient":
+            # no gradient flows back through stop_gradient, so taint
+            # must not flow forward: a frozen LoRA base weight
+            # (nn.linear's stop_grad(W) path) is FROZEN, not
+            # untapped-ERROR — its value reaches the loss, its
+            # gradient path does not
+            return [_EMPTY for _ in eqn.outvars]
         if eqn.primitive.name not in ("custom_vjp_call_jaxpr",
                                       "custom_vjp_call"):
             return None

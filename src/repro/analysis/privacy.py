@@ -234,6 +234,24 @@ def _origin(var, producer, path):
             path.append(("slice", starts))
             var = eqn.invars[0]
             continue
+        if name == "random_fold_in":
+            # fold_in with a *literal* datum is a pure function of its
+            # input key — treat it like a slice so two separate
+            # fold_in(master, 7) calls resolve to the SAME origin (true
+            # reuse, detected) while fold_in(master, 7) vs
+            # fold_in(master, 8) stay distinct (the per-tenant key
+            # derivation the multi-tenant Noise path relies on). A
+            # traced datum (e.g. a vmapped tenant-id array) stays an
+            # opaque derivation point below.
+            datum = eqn.invars[1]
+            if hasattr(datum, "val"):
+                try:
+                    path.append(("fold", int(datum.val)))
+                    var = eqn.invars[0]
+                    continue
+                except (TypeError, ValueError):
+                    pass
+            return (name, id(eqn)), tuple(path)
         if name in _DERIVE:
             return (name, id(eqn)), tuple(path)
         return ("opaque", id(eqn)), tuple(path)
@@ -313,8 +331,14 @@ def analyze_trace(trace: _J.StepTrace) -> PrivacyReport:
                     "norms-seeded backward: min(1, C/‖g‖) must be a "
                     "function of the per-example gradient norms"))
         for lf in leaves:
-            if not lf.taint:
-                continue            # frozen leaf: constant-zero gradient
+            # frozen leaf: constant-zero gradient — no backward seed
+            # ever reaches it, so its only lineage (if any) is the
+            # noise sample added to every leaf (a frozen LoRA base
+            # under stop_gradient). Nothing per-example flows into the
+            # batch sum through it; skip the clip requirement.
+            if not any(t == T_CLIP or t.startswith("seed:")
+                       for t in lf.taint):
+                continue
             if T_CLIP not in lf.taint or \
                     _seed_tok("weighted") not in lf.taint:
                 findings.append(Finding(

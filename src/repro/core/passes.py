@@ -102,6 +102,44 @@ def add_grad_noise(grads, noise_std: float, clip_norm: float,
     return jax.tree_util.tree_unflatten(tree, out)
 
 
+def add_grad_noise_segmented(grads, noise_std: float, clip_norm: float,
+                             rng: jax.Array, segments: jax.Array):
+    """Per-segment σ·C noise for trees whose leaves are stacked on a
+    leading segment axis (the multi-tenant adapter tree: leaf shape
+    (n_active, ...), row s owned by tenant ``segments[s]``).
+
+    Row s draws from ``fold_in(rng, segments[s])`` — bit-identical to
+    running ``add_grad_noise(tenant_grads, σ, C, fold_in(rng, tid))``
+    per tenant on the unstacked tree, which is what makes each
+    tenant's DP accounting independent: its noise depends only on
+    (master key, its tenant id), never on which other tenants share
+    the batch. One ``mark_rng``/``mark_noise`` pair per leaf keeps the
+    pexlint privacy pass's noise-exactly-once bookkeeping intact.
+    """
+    check_noise_args(noise_std, rng)
+    flat, tree = jax.tree_util.tree_flatten(grads)
+    n = len(flat)
+    # (S, n, 2): tenant s's per-leaf keys; identical derivation order to
+    # the single-tenant pass (fold_in then split over leaves)
+    keys = jax.vmap(
+        lambda t: jax.random.split(jax.random.fold_in(rng, t), n)
+    )(segments)
+    out = []
+    for i, g in enumerate(flat):
+        if g.shape[:1] != segments.shape:
+            raise ValueError(
+                f"segmented noise leaf {i} has shape {g.shape}; leading "
+                f"axis must match segments {segments.shape} (one row per "
+                f"segment)")
+        k = mark_rng(keys[:, i], purpose="noise", index=i)
+        sample = noise_std * clip_norm * jax.vmap(
+            lambda kk: jax.random.normal(kk, g.shape[1:], jnp.float32)
+        )(k).astype(g.dtype)
+        out.append(g + mark_noise(sample, noise_std=noise_std,
+                                  scale=clip_norm, leaf=i))
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
 def clip_coefficients(sq_norms: jax.Array, clip_norm: float,
                       eps: float = 1e-6) -> jax.Array:
     """c_j = min(1, C / ||g_j||). sq_norms: (B,) or (B,G) (summed)."""

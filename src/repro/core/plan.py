@@ -57,8 +57,8 @@ import jax.numpy as jnp
 
 from repro.core import importance as imp
 from repro.core.clipping import token_clip_coefficients
-from repro.core.passes import (add_grad_noise, check_noise_args,
-                               clip_coefficients)
+from repro.core.passes import (add_grad_noise, add_grad_noise_segmented,
+                               check_noise_args, clip_coefficients)
 from repro.core.provenance import mark_grad_tree, mark_seed
 
 
@@ -101,10 +101,18 @@ class Clip:
 class Noise:
     """Gaussian DP-SGD noise σ·scale added once to the summed gradient
     (after the psum on a mesh). ``scale`` defaults to the plan's Clip
-    threshold C — standalone Noise needs it explicitly."""
+    threshold C — standalone Noise needs it explicitly.
+
+    ``segments`` (optional, int (S,) array) switches to *per-segment*
+    noise for gradient trees stacked on a leading segment axis — the
+    multi-tenant adapter case: row s of every leaf gets an independent
+    draw keyed by ``fold_in(rng, segments[s])``, bit-identical to
+    noising each tenant's tree alone with its folded key. That makes
+    each tenant's DP guarantee independent of co-batched tenants."""
     noise_std: float
     rng: Any = None
     scale: Optional[float] = None
+    segments: Any = None
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -489,8 +497,13 @@ def execute(plan: Plan, acc_loss: Callable, params, batch,
     if plan.noise is not None and grads is not None:
         scale = plan.noise.scale if plan.noise.scale is not None \
             else plan.clip.clip_norm
-        grads = add_grad_noise(grads, plan.noise.noise_std, scale,
-                               plan.noise.rng)
+        if plan.noise.segments is not None:
+            grads = add_grad_noise_segmented(grads, plan.noise.noise_std,
+                                             scale, plan.noise.rng,
+                                             plan.noise.segments)
+        else:
+            grads = add_grad_noise(grads, plan.noise.noise_std, scale,
+                                   plan.noise.rng)
     return StepResult(jnp.sum(lv), lv, aux, sq, grads, w, tw, cc, gns,
                       samp, sub_sq)
 

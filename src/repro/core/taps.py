@@ -184,6 +184,31 @@ class ExampleLayout:
         """Scatter an already-(B,)-shaped stat into a group column."""
         return acc_bar.at[:, group].add(stat.astype(acc_bar.dtype))
 
+    def add_dense_batched(self, acc_bar, h, zbar, group, method,
+                          use_pallas):
+        """Per-example-weight dense stat: h (B,[S,]p_in) against a
+        batched weight (B,p_in,p_out) — the multi-tenant LoRA form,
+        where example j owns weight slice j (its tenant's gathered
+        adapter factor). Example j's gradient is h_jᵀ z̄_j, the same
+        outer product as the shared-weight case, so:
+
+          * 2-D h — one token-row per example ⇒ the paper's §4
+            factorization is EXACT: s_j = ‖h_j‖²‖z̄_j‖².
+          * 3-D h — flatten tokens and run the segmented-direct
+            estimator with example ids as segments (ONE launch across
+            all examples/tenants; sorted runs since ids are
+            repeat(arange(B), S))."""
+        if h.ndim == 2:
+            stat = N.stat_factorized(h, zbar)
+            return self.add_example_stat(acc_bar, stat, group)
+        b, s = h.shape[0], h.shape[1]
+        h2 = h.reshape(b * s, h.shape[-1])
+        z2 = zbar.reshape(b * s, zbar.shape[-1])
+        seg = jnp.repeat(jnp.arange(b, dtype=jnp.int32), s)
+        stat = N.stat_direct_segmented(h2, z2, seg, b, method=method,
+                                       use_pallas=use_pallas)
+        return self.add_example_stat(acc_bar, stat, group)
+
     def add_expert(self, acc_bar, x, zbar, seg, tok, group, n_examples,
                    method, use_pallas):
         """MoE expert-buffer stat: x (E,C,d), zbar (E,C,f), seg (E,C)
@@ -275,6 +300,18 @@ class TokenLayout:
                 f"TokenLayout dense tap needs (B, S, p) activations, got "
                 f"shape {h.shape}; per-token factorization is only exact "
                 f"when each token is one row of the matmul")
+        return acc_bar + _sumsq_tail(h) * _sumsq_tail(zbar)
+
+    def add_dense_batched(self, acc_bar, h, zbar, group, method,
+                          use_pallas):
+        """Batched-weight dense stat at token granularity: token t's
+        contribution to its example's weight slice is still the rank-1
+        outer product h_t z̄_tᵀ — the §4 factorization is exact per
+        token, regardless of which example owns the weight."""
+        if h.ndim != 3:
+            raise ValueError(
+                f"TokenLayout dense_batched tap needs (B, S, p) "
+                f"activations, got shape {h.shape}")
         return acc_bar + _sumsq_tail(h) * _sumsq_tail(zbar)
 
     def add_bias(self, acc_bar, zbar, group):
@@ -371,6 +408,36 @@ def _pex_dense_bwd(method, use_pallas, group, layout, res, cts):
 
 
 _pex_dense.defvjp(_pex_dense_fwd, _pex_dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# dense_batched: z = einsum('b...i,bio->b...o')  (per-example weights —
+#   the multi-tenant LoRA form, where example j's matmul uses weight
+#   slice j, the gather of its tenant's adapter factor)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _pex_dense_batched(method: str, use_pallas: bool, group: int, layout,
+                       h: jax.Array, w: jax.Array, acc: jax.Array):
+    return jnp.einsum("b...i,bio->b...o", h, w), acc
+
+
+def _pex_dense_batched_fwd(method, use_pallas, group, layout, h, w, acc):
+    z = jnp.einsum("b...i,bio->b...o", h, w)
+    return (z, acc), (h, w)
+
+
+def _pex_dense_batched_bwd(method, use_pallas, group, layout, res, cts):
+    h, w = res
+    zbar, acc_bar = cts
+    dh = jnp.einsum("b...o,bio->b...i", zbar, w).astype(h.dtype)
+    dw = jnp.einsum("b...i,b...o->bio", h, zbar).astype(w.dtype)
+    dacc = layout.add_dense_batched(acc_bar, h, zbar, group, method,
+                                    use_pallas)
+    return dh, dw, dacc
+
+
+_pex_dense_batched.defvjp(_pex_dense_batched_fwd, _pex_dense_batched_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -555,6 +622,7 @@ class PexOpInfo:
 #: robust to renaming and wrapping (``identify_pex_bwd`` unwraps it).
 PEX_OPS = {
     _pex_dense_bwd: PexOpInfo("dense", (1,), (0,), 3),
+    _pex_dense_batched_bwd: PexOpInfo("dense_batched", (1,), (0,), 3),
     _pex_dense_expert_bwd: PexOpInfo("dense_expert", (1,), (0, 2, 3), 5),
     _pex_dense_expert_grouped_bwd: PexOpInfo(
         "dense_expert_grouped", (1,), (0, 2, 3), 5),
@@ -662,6 +730,21 @@ class Tap:
         z, self._acc = _pex_dense(m, self.spec.use_pallas,
                                   self.spec.group_index(group), self.layout,
                                   h, w, self._acc)
+        return z
+
+    def dense_batched(self, h, w, *, group: str = "all",
+                      method: Optional[str] = None) -> jax.Array:
+        """Instrumented per-example-weight matmul: h (B,[S,]p_in),
+        w (B,p_in,p_out) — example j multiplies weight slice j (its
+        tenant's gathered LoRA factor). Stats default to the spec's
+        ``seg_method`` (the 3-D path runs the segmented-direct
+        estimator, same knob as the MoE expert taps)."""
+        if not self.live:
+            return jnp.einsum("b...i,bio->b...o", h, w)
+        m = method or self.spec.seg_method
+        z, self._acc = _pex_dense_batched(
+            m, self.spec.use_pallas, self.spec.group_index(group),
+            self.layout, h, w, self._acc)
         return z
 
     def bias_add(self, x, b, *, group: str = "all") -> jax.Array:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core import taps
 from repro.core.taps import Tap
 from repro.dist.sharding import shard
+from repro.nn import lora as lora_mod
 from repro.nn import param as pm
 from repro.nn.attention import AttnCfg, attention, init_attention, init_kv_cache
 from repro.nn.embedding import (VocabCfg, embed, init_embedding, init_lm_head,
@@ -51,6 +52,8 @@ class LMConfig:
     logit_softcap: Optional[float] = None
     scale_embeds: bool = False            # gemma ×√d
     vl_inputs: bool = False               # qwen2-vl merged visual embeds
+    lora: Optional[lora_mod.LoraCfg] = None  # LoRA-fy the linear sites:
+                                          # frozen bases + tapped factors
     dtype: str = "float32"
     remat: bool = True
     remat_policy: str = "full"            # full | dots  (dots: save matmul
@@ -116,6 +119,11 @@ def init(key, cfg: LMConfig):
         lambda *xs: pm.Boxed(jnp.stack([x.value for x in xs]),
                              (None,) + xs[0].axes),
         *stacked, is_leaf=pm.is_boxed)
+    if cfg.lora is not None:
+        # post-stacking: stacked sites get (L, d, r)/(L, r, d) factors
+        # whose leading axis scans with the blocks; ks[2] is the spare
+        # key reserved at the top of init
+        params = lora_mod.attach(params, cfg.lora, ks[2], dtype=dt)
     return params
 
 

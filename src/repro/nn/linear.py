@@ -5,6 +5,7 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.taps import Tap
 from repro.nn import param as pm
@@ -21,7 +22,20 @@ def init_linear(key, d_in: int, d_out: int, *, dtype, axes, bias: bool = False,
 
 def linear(p, x, *, tap: Tap, group: str = "all",
            method: Optional[str] = None) -> jax.Array:
-    """Instrumented affine map. Plain matmul when the tap is inert."""
+    """Instrumented affine map. Plain matmul when the tap is inert.
+
+    A site carrying a ``"lora"`` entry (see ``nn.lora``) freezes the
+    base weight/bias behind ``stop_gradient`` — no gradient, no
+    per-example stat, classified `frozen` by pexlint — and adds the
+    tapped low-rank delta on top.
+    """
+    if "lora" in p:
+        from repro.nn import lora as _lora  # local: keep import cycle-free
+        z = jnp.einsum("...i,io->...o", x, jax.lax.stop_gradient(p["w"]))
+        if "b" in p:
+            z = z + jax.lax.stop_gradient(p["b"])
+        return z + _lora.delta(p["lora"], x, tap=tap, group=group,
+                               method=method)
     z = tap.dense(x, p["w"], group=group, method=method)
     if "b" in p:
         z = tap.bias_add(z, p["b"], group=group)

@@ -1,0 +1,223 @@
+"""LoRA adapters over the tapped linear layers (DESIGN.md §14).
+
+A LoRA site replaces the trainable weight of one ``nn.linear`` site
+with a frozen base plus a low-rank trainable delta:
+
+    z = x @ stop_grad(W)  +  (α/r) · (x @ A) @ B
+
+Both factors route through the tap (``tap.dense`` — or
+``tap.dense_batched`` when the factors carry a leading per-example
+axis, the multi-tenant gather), so per-example gradient norms on the
+adapters are exact and nearly free: the factors are rank-r ``(p, r)``
+/ ``(r, p)`` matrices — precisely the regime where the paper's
+factorized/direct estimators win (arxiv 1510.01799 §4–§5). The base
+weight is wrapped in ``stop_gradient`` so it contributes no gradient
+and no stat; ``analysis.coverage`` classifies it frozen, not
+untapped-ERROR.
+
+The (α/r) scale is applied AFTER the second factor so the cotangent
+arriving at each tap already carries it — the accumulated stats
+describe the true (scaled) adapter gradients.
+
+``LoraPair`` is a registered pytree node (children ``(a, b)``, static
+``alpha``), so adapters survive ``tree_map``, ``lax.scan`` slicing,
+``unbox``, optimizers, and checkpointing unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taps import Tap
+from repro.nn import param as pm
+
+#: default sites: every projection the transformer family routes
+#: through ``nn.linear`` (attention + MLP)
+DEFAULT_SITES = ("wq", "wk", "wv", "wo", "up", "gate", "down")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraCfg:
+    """Static LoRA policy (hashable; lives inside ``LMConfig``).
+
+    rank:            default adapter rank r.
+    alpha:           scale numerator — the delta is (α/r)·AB.
+    sites:           site names (the dict key holding the ``{"w": ...}``
+                     linear params) that get adapters.
+    rank_overrides:  ((site, rank), ...) per-site rank exceptions.
+    """
+    rank: int = 8
+    alpha: float = 16.0
+    sites: Tuple[str, ...] = DEFAULT_SITES
+    rank_overrides: Tuple[Tuple[str, int], ...] = ()
+
+    def rank_for(self, site: str) -> int:
+        for name, r in self.rank_overrides:
+            if name == site:
+                return r
+        return self.rank
+
+
+@jax.tree_util.register_pytree_node_class
+class LoraPair:
+    """One site's adapter factors: ``a`` (..., d_in, r), ``b``
+    (..., r, d_out) — arrays or ``Boxed`` leaves, with any shared
+    leading axes (stacked layers, tenant rows)."""
+
+    __slots__ = ("a", "b", "alpha")
+
+    def __init__(self, a, b, alpha: float):
+        self.a = a
+        self.b = b
+        self.alpha = float(alpha)
+
+    def tree_flatten(self):
+        return (self.a, self.b), self.alpha
+
+    @classmethod
+    def tree_unflatten(cls, alpha, children):
+        return cls(children[0], children[1], alpha)
+
+    @property
+    def rank(self) -> int:
+        val = self.a.value if pm.is_boxed(self.a) else self.a
+        return val.shape[-1]
+
+    def __repr__(self):
+        sa = getattr(self.a, "shape", None) or getattr(
+            getattr(self.a, "value", None), "shape", None)
+        return f"LoraPair(a={sa}, alpha={self.alpha})"
+
+
+def init_pair(key, d_in: int, d_out: int, rank: int, alpha: float, *,
+              dtype=jnp.float32, lead: Tuple[int, ...] = (),
+              w_axes: Optional[Tuple] = None, boxed: bool = True,
+              b_std: Optional[float] = None) -> LoraPair:
+    """Standard LoRA init: A ~ N(0, 1/√d_in), B = 0 (delta starts at
+    zero). ``lead`` prepends shared axes (stacked layers / tenant
+    capacity); ``b_std`` > 0 draws B randomly instead (tests that need
+    non-zero adapter gradients from step 0). ``boxed=False`` returns
+    plain arrays (the tenancy store works unboxed)."""
+    ka, kb = jax.random.split(key)
+    ax = w_axes if w_axes is not None else (None,) * (len(lead) + 2)
+    a = pm.normal(ka, lead + (d_in, rank), dtype,
+                  (None,) * len(lead) + (ax[-2], None),
+                  std=1.0 / math.sqrt(max(1, d_in)))
+    if b_std and b_std > 0.0:
+        b = pm.normal(kb, lead + (rank, d_out), dtype,
+                      (None,) * len(lead) + (None, ax[-1]), std=b_std)
+    else:
+        b = pm.zeros(lead + (rank, d_out), dtype,
+                     (None,) * len(lead) + (None, ax[-1]))
+    if not boxed:
+        return LoraPair(a.value, b.value, alpha)
+    return LoraPair(a, b, alpha)
+
+
+def delta(pair: LoraPair, x, *, tap: Tap, group: str = "all",
+          method: Optional[str] = None) -> jax.Array:
+    """(α/r)·(x @ A) @ B through the tap. Factors with a leading
+    per-example axis (``a.ndim == 3`` against 2-D site weights — the
+    multi-tenant gathered form) go through ``tap.dense_batched``; the
+    shared form through ``tap.dense``. The scale multiplies the
+    *output*, so the taps see the true scaled cotangents."""
+    a, b = pair.a, pair.b
+    scale = pair.alpha / pair.rank
+    if a.ndim == x.ndim == 2 or (a.ndim == 3 and x.ndim == 3
+                                 and a.shape[0] == x.shape[0]):
+        # ambiguous only in the (a 3-D, x 3-D) case: leading axes match
+        # ⇒ per-example factors
+        batched = a.ndim == 3
+    else:
+        batched = a.ndim == x.ndim
+    if batched and a.ndim >= 3:
+        h_r = tap.dense_batched(x, a, group=group, method=method)
+        d = tap.dense_batched(h_r, b, group=group, method=method)
+    else:
+        h_r = tap.dense(x, a, group=group, method=method)
+        d = tap.dense(h_r, b, group=group, method=method)
+    return scale * d
+
+
+def attach(params, cfg: LoraCfg, key, *, dtype=jnp.float32):
+    """Add ``"lora"`` entries to every matching linear-site dict of a
+    (possibly stacked) parameter tree. A site matches when its dict
+    key is in ``cfg.sites`` and it holds a ``"w"`` leaf; the factors
+    inherit the weight's leading (stacked-layer) axes. Keys are
+    derived deterministically from the site path, so attach order and
+    dict iteration order don't matter."""
+    def rec(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for name in node:
+                child = node[name]
+                if (name in cfg.sites and isinstance(child, dict)
+                        and "w" in child):
+                    w = child["w"]
+                    val = w.value if pm.is_boxed(w) else w
+                    axes = w.axes if pm.is_boxed(w) \
+                        else (None,) * val.ndim
+                    site_key = key
+                    for part in path + (name,):
+                        # crc32, not hash(): string hashing is
+                        # per-process randomized, and attach keys must
+                        # be stable across processes/restores
+                        site_key = jax.random.fold_in(
+                            site_key,
+                            zlib.crc32(str(part).encode()) & 0x7FFFFFFF)
+                    pair = init_pair(
+                        site_key, val.shape[-2], val.shape[-1],
+                        cfg.rank_for(name), cfg.alpha, dtype=dtype,
+                        lead=tuple(val.shape[:-2]), w_axes=axes,
+                        boxed=pm.is_boxed(w))
+                    out[name] = dict(child)
+                    out[name]["lora"] = pair
+                else:
+                    out[name] = rec(child, path + (name,))
+            return out
+        if isinstance(node, list):
+            return [rec(c, path + (i,)) for i, c in enumerate(node)]
+        return node
+
+    return rec(params, ())
+
+
+def adapter_tree(params):
+    """Extract the trainable adapter subtree: {path: LoraPair} keyed by
+    '/'-joined site paths — the tree the tenancy layer stores, trains,
+    and checkpoints (base weights stay behind)."""
+    out = {}
+
+    def rec(node, path):
+        if isinstance(node, LoraPair):
+            out["/".join(str(p) for p in path)] = node
+            return
+        if isinstance(node, dict):
+            for name, child in node.items():
+                rec(child, path + (name,))
+        elif isinstance(node, list):
+            for i, child in enumerate(node):
+                rec(child, path + (i,))
+
+    rec(params, ())
+    return out
+
+
+def merge_adapters(params, adapters: dict):
+    """Inverse of ``adapter_tree``: place each pair back at its path
+    (returns a new tree; the input is not mutated)."""
+    def rec(node, path):
+        if isinstance(node, LoraPair):
+            return adapters.get("/".join(str(p) for p in path), node)
+        if isinstance(node, dict):
+            return {k: rec(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, list):
+            return [rec(v, path + (i,)) for i, v in enumerate(node)]
+        return node
+
+    return rec(params, ())

@@ -1,0 +1,166 @@
+"""Per-tenant adapter store: thousands of LoRA states stacked on a
+tenant axis (DESIGN.md §14).
+
+Every leaf of the single-tenant adapter tree (typically a dict of
+``nn.lora.LoraPair``s) is stored stacked as ``(capacity, ...)``; a
+host-side slot table maps tenant id → row. Admission writes a
+deterministic fresh state (``init_fn(fold_in(key, tenant_id))`` — so a
+re-admitted tenant that was never trained restarts bit-identically),
+eviction frees the row, and ``gather``/``scatter`` move the per-batch
+active set in/out as one ``take``/one scatter.
+
+Checkpointing writes the COMPACTED active set (rows sorted by tenant
+id) plus the tenant list as manifest ``extra`` — capacity is a runtime
+sizing choice, not state. ``restore`` repacks the survivors into rows
+``[0..n)`` in tenant-id order: renumbering is part of the contract,
+and it is bit-exact (per-tenant state round-trips byte-identically
+regardless of which slot it lands in; the ckpt test pins this with
+the soak harness's sha256 tree digest).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdapterStore:
+    """Slot-allocated stacked store of per-tenant adapter trees.
+
+    init_fn:  ``key -> adapter pytree`` (single-tenant shapes). Called
+              once at construction for shapes, and per admission with
+              the tenant's folded key.
+    capacity: max resident tenants (slot count).
+    key:      master PRNG key; tenant t's init key is
+              ``fold_in(key, t)``.
+    """
+
+    def __init__(self, init_fn: Callable, capacity: int, key):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.init_fn = init_fn
+        self.capacity = int(capacity)
+        self.key = key
+        template = init_fn(key)
+        self.stacked = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((self.capacity,) + tuple(l.shape), l.dtype),
+            template)
+        self.slots = np.full((self.capacity,), -1, dtype=np.int64)
+        self._slot_of: dict = {}
+
+    # -- bookkeeping -----------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return len(self._slot_of)
+
+    @property
+    def n_free(self) -> int:
+        return self.capacity - self.n_active
+
+    @property
+    def tenants(self) -> np.ndarray:
+        """Sorted ids of resident tenants."""
+        return np.array(sorted(self._slot_of), dtype=np.int64)
+
+    def has(self, tenant_id: int) -> bool:
+        return int(tenant_id) in self._slot_of
+
+    def slot_of(self, tenant_id: int) -> int:
+        return self._slot_of[int(tenant_id)]
+
+    # -- admission / eviction (the serve engine's slot recycling) --------
+    def admit(self, tenant_id: int) -> int:
+        """Ensure ``tenant_id`` is resident; returns its slot. A fresh
+        admission initializes the row from the tenant's folded key."""
+        tid = int(tenant_id)
+        if tid < 0:
+            raise ValueError(f"tenant ids must be non-negative, got {tid}")
+        if tid in self._slot_of:
+            return self._slot_of[tid]
+        free = np.flatnonzero(self.slots < 0)
+        if free.size == 0:
+            raise RuntimeError(
+                f"adapter store is full ({self.capacity} slots); evict a "
+                f"tenant before admitting {tid}")
+        slot = int(free[0])
+        state = self.init_fn(jax.random.fold_in(self.key, tid))
+        self.stacked = jax.tree_util.tree_map(
+            lambda s, l: s.at[slot].set(l.astype(s.dtype)),
+            self.stacked, state)
+        self.slots[slot] = tid
+        self._slot_of[tid] = slot
+        return slot
+
+    def evict(self, tenant_id: int) -> None:
+        """Free the tenant's slot (its state is dropped — checkpoint
+        first if it must survive)."""
+        tid = int(tenant_id)
+        slot = self._slot_of.pop(tid, None)
+        if slot is None:
+            return
+        self.slots[slot] = -1
+        # zero the row so freed state never leaks into a later gather
+        self.stacked = jax.tree_util.tree_map(
+            lambda s: s.at[slot].set(jnp.zeros_like(s[slot])), self.stacked)
+
+    # -- batch movement ---------------------------------------------------
+    def _rows(self, tenant_ids) -> jax.Array:
+        rows = []
+        for t in np.asarray(tenant_ids).reshape(-1):
+            slot = self._slot_of.get(int(t))
+            if slot is None:
+                raise KeyError(f"tenant {int(t)} is not resident; admit() "
+                               f"it first")
+            rows.append(slot)
+        return jnp.asarray(np.array(rows, dtype=np.int32))
+
+    def gather(self, tenant_ids):
+        """Adapter tree with rows for ``tenant_ids`` stacked leading —
+        the per-batch active set the Engine trains."""
+        rows = self._rows(tenant_ids)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.take(s, rows, axis=0), self.stacked)
+
+    def scatter(self, tenant_ids, tree) -> None:
+        """Write updated rows back (inverse of ``gather``)."""
+        rows = self._rows(tenant_ids)
+        self.stacked = jax.tree_util.tree_map(
+            lambda s, v: s.at[rows].set(v.astype(s.dtype)),
+            self.stacked, tree)
+
+    # -- checkpointing ----------------------------------------------------
+    def save(self, manager, step: int, *, block: bool = True) -> None:
+        """Write the compacted active set (rows in tenant-id order) via
+        ``ckpt.CheckpointManager``; the tenant list rides in the
+        manifest ``extra``."""
+        tenants = self.tenants
+        compact = self.gather(tenants)
+        manager.save(step, compact, extra={
+            "tenancy": {"tenants": [int(t) for t in tenants]}},
+            block=block)
+
+    def restore(self, manager, step: Optional[int] = None) -> Sequence[int]:
+        """Load a checkpoint and repack the survivors into slots
+        ``[0..n)`` in tenant-id order (renumbering — bit-exact per
+        tenant). Returns the restored tenant ids."""
+        if step is None:
+            step = manager.latest_step()
+        compact, extra = manager.restore(step, self.stacked)
+        tenants = [int(t) for t in extra["tenancy"]["tenants"]]
+        n = len(tenants)
+        if n > self.capacity:
+            raise ValueError(
+                f"checkpoint holds {n} tenants but the store has only "
+                f"{self.capacity} slots; restore into a larger store")
+        self.slots = np.full((self.capacity,), -1, dtype=np.int64)
+        self._slot_of = {}
+        # compact leaves arrive shaped (n, ...) from the manifest
+        self.stacked = jax.tree_util.tree_map(
+            lambda s, c: jnp.zeros_like(s).at[:n].set(c.astype(s.dtype)),
+            self.stacked, compact)
+        for i, t in enumerate(tenants):
+            self.slots[i] = t
+            self._slot_of[t] = i
+        return tenants

@@ -1,0 +1,139 @@
+"""Mixed-tenant batch assembly — tenant = segment (DESIGN.md §14).
+
+A serving step receives examples from many tenants interleaved.
+``assemble`` sorts them by tenant id (host-side, stable) so that:
+
+  * each tenant's examples are one contiguous run — the shape the
+    sort-based segmented kernel (``kernels/segmented_norm.py``) was
+    built for: the ``dense_batched`` tap flattens tokens and runs the
+    segmented-direct estimator with example ids as segments, and
+    tenant-sorted examples mean tenant-sorted (already-run-encoded)
+    segment tables, so ONE launch covers every tenant in the batch;
+  * the per-example → per-tenant maps (``tenant_index``,
+    ``unique_tenants``, ``counts``) are plain run-length tables, and
+    per-tenant reductions over per-example stats (clip-coefficient
+    statistics, per-tenant losses) are ``segment_sum`` over sorted
+    ids — the cheapest possible form.
+
+``tenant_index`` rides INSIDE the assembled batch pytree (key
+``"tenant_index"``) so it shards with the examples under
+``shard_map`` — the loss closure gathers each example's adapter row
+with its shard-local index, never a global one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantBatch:
+    """One assembled mixed-tenant batch.
+
+    batch:          tenant-sorted batch pytree with a ``tenant_index``
+                    (B,) int32 leaf added (position j's index into
+                    ``unique_tenants``) — feed this to the Engine.
+    tenant_ids:     (B,) sorted tenant id per example (numpy, host).
+    unique_tenants: (T,) sorted distinct tenant ids in the batch.
+    counts:         (T,) examples per tenant.
+    perm:           (B,) sorted position i holds original example
+                    ``perm[i]`` (use to sort any extra per-example
+                    array the same way).
+    inv_perm:       (B,) original example j sits at sorted position
+                    ``inv_perm[j]`` (use to un-sort results).
+    """
+    batch: Any
+    tenant_ids: np.ndarray
+    unique_tenants: np.ndarray
+    counts: np.ndarray
+    perm: np.ndarray
+    inv_perm: np.ndarray
+
+    @property
+    def n_tenants(self) -> int:
+        return int(self.unique_tenants.shape[0])
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.tenant_ids.shape[0])
+
+    @property
+    def tenant_index(self) -> jax.Array:
+        return self.batch["tenant_index"]
+
+    def segments(self) -> jax.Array:
+        """(T,) tenant ids as a device array — the ``Noise.segments``
+        argument (per-tenant noise keyed by ``fold_in(rng, id)``)."""
+        return jnp.asarray(self.unique_tenants, dtype=jnp.int32)
+
+
+def assemble(batch, tenant_ids) -> TenantBatch:
+    """Sort a mixed-tenant batch by tenant id (stable, host-side).
+
+    ``batch`` is any pytree of (B, ...) arrays; ``tenant_ids`` is a
+    (B,) int array-like of the owning tenant per example. Stability
+    preserves each tenant's internal example order, so re-assembling
+    the same batch is deterministic.
+    """
+    tids = np.asarray(tenant_ids)
+    if tids.ndim != 1:
+        raise ValueError(f"tenant_ids must be (B,), got {tids.shape}")
+    if tids.size and tids.min() < 0:
+        raise ValueError("tenant ids must be non-negative (negative ids "
+                         "are reserved for free adapter slots)")
+    perm = np.argsort(tids, kind="stable")
+    sorted_ids = tids[perm]
+    unique, inverse, counts = np.unique(sorted_ids, return_inverse=True,
+                                        return_counts=True)
+    inv_perm = np.empty_like(perm)
+    inv_perm[perm] = np.arange(perm.size)
+    perm_j = jnp.asarray(perm)
+    sorted_batch = jax.tree_util.tree_map(
+        lambda v: jnp.take(v, perm_j, axis=0), batch)
+    if not isinstance(sorted_batch, dict):
+        sorted_batch = {"data": sorted_batch}
+    else:
+        sorted_batch = dict(sorted_batch)
+    if "tenant_index" in sorted_batch:
+        raise ValueError("batch already carries a 'tenant_index' leaf; "
+                         "assemble() owns that key")
+    sorted_batch["tenant_index"] = jnp.asarray(inverse, dtype=jnp.int32)
+    return TenantBatch(sorted_batch, sorted_ids, unique, counts, perm,
+                       inv_perm)
+
+
+# ---------------------------------------------------------------------------
+# per-tenant reductions over per-example stats (sorted segments)
+# ---------------------------------------------------------------------------
+
+def per_tenant_sum(values, tenant_index, n_tenants: int) -> jax.Array:
+    """Σ over each tenant's examples. ``values`` (B, ...); sorted
+    ``tenant_index`` makes this the fast segment-sum path."""
+    return jax.ops.segment_sum(values, tenant_index, n_tenants,
+                               indices_are_sorted=True)
+
+
+def per_tenant_count(tenant_index, n_tenants: int) -> jax.Array:
+    return per_tenant_sum(jnp.ones_like(tenant_index, dtype=jnp.int32),
+                          tenant_index, n_tenants)
+
+
+def per_tenant_mean(values, tenant_index, n_tenants: int) -> jax.Array:
+    s = per_tenant_sum(values.astype(jnp.float32), tenant_index, n_tenants)
+    c = per_tenant_count(tenant_index, n_tenants).astype(jnp.float32)
+    shape = (-1,) + (1,) * (s.ndim - 1)
+    return s / jnp.maximum(c.reshape(shape), 1.0)
+
+
+def per_tenant_min(values, tenant_index, n_tenants: int) -> jax.Array:
+    return jax.ops.segment_min(values, tenant_index, n_tenants,
+                               indices_are_sorted=True)
+
+
+def per_tenant_max(values, tenant_index, n_tenants: int) -> jax.Array:
+    return jax.ops.segment_max(values, tenant_index, n_tenants,
+                               indices_are_sorted=True)

@@ -1,0 +1,199 @@
+"""Multi-tenant LoRA fine-tuning service (DESIGN.md §14).
+
+One ``TenantService.step`` takes an interleaved mixed-tenant batch and
+runs EVERYTHING in one fused pass, regardless of how many tenants
+share the batch:
+
+  1. ``tenancy.batch.assemble`` sorts examples by tenant (tenant =
+     segment; the segmented estimator sees sorted runs);
+  2. the per-batch active adapter set is gathered from the
+     ``AdapterStore`` — the Engine's *params* are exactly those rows,
+     so AD's scatter-add over the per-example gather IS the per-tenant
+     gradient reduction;
+  3. the loss closure expands rows to per-example adapter slices
+     (``take`` by the batch's ``tenant_index``) and calls the user
+     loss; the LoRA factors go through ``tap.dense_batched``, so one
+     segmented launch computes per-example norms across all tenants;
+  4. ``Clip(C)`` clips per example inside the fused pass;
+     ``Noise(σ, rng, segments=tenant_ids)`` draws each tenant's noise
+     from ``fold_in(rng, tenant_id)`` — each resident tenant's DP
+     accounting is independent of who else shares the batch;
+  5. SGD on the active rows, scattered back into the store.
+
+Between steps the service admits queued tenants into free slots and
+evicts on request — the serve engine's slot-recycling idiom
+(``serve/engine.py``) applied to adapter residency; checkpointing
+delegates to ``AdapterStore.save``/``restore`` (compacted, renumbered,
+bit-exact per tenant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan as plan_mod
+from repro.core.engine import Engine
+from repro.core.taps import PexSpec
+from repro.tenancy import batch as tbatch
+from repro.tenancy.adapters import AdapterStore
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantStepResult:
+    """One service step's outputs, per-tenant views included."""
+    loss: jax.Array                    # scalar Σ over the batch
+    loss_vec: jax.Array                # (B,) sorted-example losses
+    sq_norms: Any                      # (B, G) or (B, S) accumulator
+    clip_coef: Optional[jax.Array]     # per-example (or -token) c_j
+    tenant_ids: np.ndarray             # (T,) tenants in this batch
+    tenant_loss: jax.Array             # (T,) Σ loss per tenant
+    tenant_count: jax.Array            # (T,) examples per tenant
+    tenant_clip_mean: Optional[jax.Array]  # (T,) mean clip coefficient
+    tenant_clip_min: Optional[jax.Array]   # (T,) min clip coefficient
+    aux: Any = None
+
+
+class TenantService:
+    """Elastic multi-tenant fine-tuning over one ``AdapterStore``.
+
+    loss_fn:   ``(per_example_adapters, data_batch, tap) -> (loss_vec,
+               aux)`` — per_example_adapters is the adapter tree with a
+               leading (B,) axis (example j's row is its tenant's
+               state); route its factors through ``tap.dense_batched``
+               (``nn.linear.linear`` does, for trees of LoRA sites).
+    store:     the ``AdapterStore`` holding resident tenants.
+    clip_norm: per-example clip threshold C.
+    noise_std: DP noise multiplier σ (0 disables noise).
+    noise_scale: explicit sensitivity (required at token granularity,
+               where C does not bound an example's total contribution).
+    lr:        SGD learning rate applied to the active rows.
+    """
+
+    def __init__(self, store: AdapterStore, loss_fn: Callable, *,
+                 clip_norm: float, noise_std: float = 0.0,
+                 noise_scale: Optional[float] = None, lr: float = 0.1,
+                 spec: Optional[PexSpec] = None, mesh=None,
+                 data_axes: Sequence[str] = ("data",),
+                 granularity: str = "example",
+                 ckpt_manager=None):
+        self.store = store
+        self.loss_fn = loss_fn
+        self.clip_norm = float(clip_norm)
+        self.noise_std = float(noise_std)
+        self.noise_scale = noise_scale
+        self.lr = float(lr)
+        self.granularity = granularity
+        self.engine = Engine(spec, mesh=mesh, data_axes=data_axes,
+                             granularity=granularity)
+        self.ckpt_manager = ckpt_manager
+        self.pending: list = []
+        self.steps_run = 0
+
+    # -- admission (serve/engine.py slot recycling) -----------------------
+    def submit(self, *tenant_ids) -> None:
+        """Queue tenants for admission at the next step boundary."""
+        for t in tenant_ids:
+            if not self.store.has(t) and int(t) not in self.pending:
+                self.pending.append(int(t))
+
+    def admit_pending(self) -> Sequence[int]:
+        """Admit queued tenants into the free slots (head of the queue
+        first; the rest wait — the serve engine's recycling loop)."""
+        active = self.pending[:self.store.n_free]
+        self.pending = self.pending[len(active):]
+        for t in active:
+            self.store.admit(t)
+        return active
+
+    def evict(self, tenant_id: int) -> None:
+        self.store.evict(tenant_id)
+
+    # -- the fused step ----------------------------------------------------
+    def consumers(self, tb: tbatch.TenantBatch, rng=None) -> list:
+        """The plan for one mixed-tenant step: per-example Clip, and —
+        when σ > 0 — per-tenant segmented Noise."""
+        cons = [plan_mod.Clip(self.clip_norm, granularity=self.granularity)]
+        if self.noise_std > 0.0:
+            scale = self.noise_scale
+            if scale is None:
+                if self.granularity == "token":
+                    raise ValueError(
+                        "token-granularity DP needs an explicit "
+                        "noise_scale: per-token clipping bounds each "
+                        "token term by C, not the example total")
+                scale = self.clip_norm
+            cons.append(plan_mod.Noise(self.noise_std, rng, scale=scale,
+                                       segments=tb.segments()))
+        return cons
+
+    def _closure(self):
+        loss_fn = self.loss_fn
+
+        def loss(adapters, eb, tap):
+            idx = eb["tenant_index"]
+            per_ex = jax.tree_util.tree_map(
+                lambda v: jnp.take(v, idx, axis=0), adapters)
+            data = {k: v for k, v in eb.items() if k != "tenant_index"}
+            if tuple(data) == ("data",):
+                data = data["data"]
+            return loss_fn(per_ex, data, tap)
+
+        return loss
+
+    def step(self, batch, tenant_ids, *, rng=None,
+             apply_updates: bool = True,
+             seq: Optional[int] = None) -> TenantStepResult:
+        """One fused mixed-tenant DP step. ``batch`` is any (B, ...)
+        pytree; ``tenant_ids`` (B,) owners per example. Unknown tenants
+        are admitted on demand (after the pending queue drains)."""
+        if self.noise_std > 0.0 and rng is None:
+            raise ValueError("noise_std > 0 needs rng= (the master step "
+                             "key; tenant keys are folded from it)")
+        self.admit_pending()
+        tb = tbatch.assemble(batch, tenant_ids)
+        for t in tb.unique_tenants:
+            self.store.admit(int(t))
+        active = self.store.gather(tb.unique_tenants)
+
+        res = self.engine.step(self._closure(), active, tb.batch,
+                               self.consumers(tb, rng), seq=seq)
+        if apply_updates:
+            updated = jax.tree_util.tree_map(
+                lambda a, g: a - self.lr * g.astype(a.dtype),
+                active, res.grads)
+            self.store.scatter(tb.unique_tenants, updated)
+        self.steps_run += 1
+
+        t_idx, n_t = tb.tenant_index, tb.n_tenants
+        cc = res.clip_coef
+        per_ex_cc = cc if cc is not None and cc.ndim == 1 else None
+        return TenantStepResult(
+            loss=res.loss, loss_vec=res.loss_vec, sq_norms=res.sq_norms,
+            clip_coef=cc, tenant_ids=tb.unique_tenants,
+            tenant_loss=tbatch.per_tenant_sum(
+                res.loss_vec.astype(jnp.float32), t_idx, n_t),
+            tenant_count=tbatch.per_tenant_count(t_idx, n_t),
+            tenant_clip_mean=None if per_ex_cc is None
+            else tbatch.per_tenant_mean(per_ex_cc, t_idx, n_t),
+            tenant_clip_min=None if per_ex_cc is None
+            else tbatch.per_tenant_min(per_ex_cc, t_idx, n_t),
+            aux=res.aux)
+
+    # -- checkpointing -----------------------------------------------------
+    def save(self, step: Optional[int] = None, *, block: bool = True):
+        if self.ckpt_manager is None:
+            raise ValueError("construct the service with ckpt_manager= "
+                             "to checkpoint")
+        self.store.save(self.ckpt_manager,
+                        self.steps_run if step is None else step,
+                        block=block)
+
+    def restore(self, step: Optional[int] = None) -> Sequence[int]:
+        if self.ckpt_manager is None:
+            raise ValueError("construct the service with ckpt_manager= "
+                             "to restore")
+        return self.store.restore(self.ckpt_manager, step)
